@@ -1,0 +1,37 @@
+"""Fig. 6c — BSBM Business Intelligence: analytical aggregation queries.
+Paper: BARQ wins the mix by 9.1%, largest single-query gain ~41% (their Q3,
+merge-join dominated — our b3/b4 are the analogues)."""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import Suite, time_query
+from repro.data import BSBM_BI_QUERIES, generate_ecommerce_graph
+
+
+def run(scale: float = 0.15, runs: int = 3) -> str:
+    store, meta = generate_ecommerce_graph(scale=scale)
+    suite = Suite(
+        f"BSBM BI (Fig 6c) scale={scale} triples={meta['n_triples']}"
+    )
+    total_b = total_l = 0.0
+    for name, q in BSBM_BI_QUERIES.items():
+        b = time_query(store, q, "barq", runs=runs)
+        l = time_query(store, q, "legacy", runs=runs)
+        total_b += b["mean_s"]
+        total_l += l["mean_s"]
+        suite.add(f"bi_{name}_barq", b["mean_s"] * 1e6,
+                  f"rows={b['rows']};speedup={l['mean_s'] / max(b['mean_s'], 1e-9):.1f}x")
+        suite.add(f"bi_{name}_legacy", l["mean_s"] * 1e6, "")
+    suite.add("bi_total_barq", total_b * 1e6,
+              f"mix_ratio={total_l / max(total_b, 1e-9):.2f}x (paper: 1.09x)")
+    return suite.emit()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.15)
+    ap.add_argument("--runs", type=int, default=3)
+    a = ap.parse_args()
+    print(run(a.scale, a.runs))

@@ -1,0 +1,39 @@
+"""Fig. 6b — BSBM Explore (OLTP point lookups): BARQ vs legacy aQET.
+This is the legacy engine's home turf; the paper's claim is *parity*
+(mean/median reduction of only 3/5 ms), enabled by adaptive batch sizing."""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import Suite, time_query
+from repro.data import BSBM_EXPLORE_TEMPLATES, generate_ecommerce_graph, instantiate_explore
+
+
+def run(scale: float = 0.2, runs: int = 5, instances: int = 4) -> str:
+    store, meta = generate_ecommerce_graph(scale=scale)
+    rng = np.random.RandomState(11)
+    suite = Suite(
+        f"BSBM Explore (Fig 6b) scale={scale} triples={meta['n_triples']} aQET"
+    )
+    for name, tpl in BSBM_EXPLORE_TEMPLATES.items():
+        bt, lt = [], []
+        for _ in range(instances):
+            q = instantiate_explore(tpl, meta, rng)
+            bt.append(time_query(store, q, "barq", runs=runs)["mean_s"])
+            lt.append(time_query(store, q, "legacy", runs=runs)["mean_s"])
+        b, l = float(np.mean(bt)), float(np.mean(lt))
+        suite.add(f"explore_{name}_barq", b * 1e6,
+                  f"legacy_ratio={l / max(b, 1e-9):.2f}x")
+        suite.add(f"explore_{name}_legacy", l * 1e6, "")
+    return suite.emit()
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.2)
+    ap.add_argument("--runs", type=int, default=5)
+    a = ap.parse_args()
+    print(run(a.scale, a.runs))

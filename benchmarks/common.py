@@ -1,0 +1,51 @@
+"""Shared benchmark harness utilities."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import Engine, EngineConfig
+from repro.core.profiler import collect_stats
+
+
+def time_query(store, query: str, engine: str, warmup: int = 1, runs: int = 3,
+               **cfg_kwargs) -> Dict[str, float]:
+    """Average execution time (paper §5.1: warm-up runs then test runs)."""
+    times: List[float] = []
+    n_rows = 0
+    scanned = 0
+    for i in range(warmup + runs):
+        e = Engine(store, EngineConfig(engine=engine, **cfg_kwargs))
+        t0 = time.perf_counter()
+        r = e.execute(query)
+        dt = time.perf_counter() - t0
+        if i >= warmup:
+            times.append(dt)
+            n_rows = r.n_rows
+            scanned = collect_stats(r.root)["rows_scanned"]
+    return {
+        "mean_s": float(np.mean(times)),
+        "std_s": float(np.std(times)),
+        "rows": n_rows,
+        "rows_scanned": scanned,
+    }
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+class Suite:
+    def __init__(self, title: str):
+        self.title = title
+        self.lines: List[str] = []
+
+    def add(self, name: str, us: float, derived: str):
+        self.lines.append(row(name, us, derived))
+
+    def emit(self) -> str:
+        head = f"# {self.title}\nname,us_per_call,derived"
+        return head + "\n" + "\n".join(self.lines)

@@ -1,0 +1,54 @@
+"""Benchmark harness — one suite per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Prints ``name,us_per_call,derived`` CSV blocks per suite:
+  Fig 6a  LSQB CPU-bound joins           (bench_lsqb)
+  Fig 6b  BSBM Explore OLTP              (bench_bsbm_explore)
+  Fig 6c  BSBM Business Intelligence     (bench_bsbm_bi)
+  List. 3 adaptive vs fixed batch size   (bench_adaptive)
+  List. 1/5 operator microbenchmarks     (bench_operators)
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller scales")
+    ap.add_argument("--suite", default="all",
+                    choices=("all", "lsqb", "explore", "bi", "adaptive", "ops"))
+    args = ap.parse_args()
+    f = args.fast
+
+    from benchmarks import (
+        bench_adaptive,
+        bench_bsbm_bi,
+        bench_bsbm_explore,
+        bench_lsqb,
+        bench_operators,
+    )
+
+    suites = {
+        "lsqb": lambda: bench_lsqb.run(scale=0.03 if f else 0.05,
+                                       runs=2 if f else 3),
+        "explore": lambda: bench_bsbm_explore.run(scale=0.1 if f else 0.2,
+                                                  runs=3 if f else 5),
+        "bi": lambda: bench_bsbm_bi.run(scale=0.08 if f else 0.15,
+                                        runs=2 if f else 3),
+        "adaptive": lambda: bench_adaptive.run(scale=0.1 if f else 0.2,
+                                               runs=3 if f else 5),
+        "ops": lambda: bench_operators.run(),
+    }
+    selected = suites if args.suite == "all" else {args.suite: suites[args.suite]}
+    for name, fn in selected.items():
+        t0 = time.time()
+        print(fn())
+        print(f"# suite {name} finished in {time.time() - t0:.1f}s\n", flush=True)
+
+
+if __name__ == "__main__":
+    main()

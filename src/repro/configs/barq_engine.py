@@ -1,0 +1,29 @@
+"""The paper's own artifact as a config: BARQ engine defaults + the
+distributed-join dry-run shapes (launch/engine_dryrun.py reads these).
+
+Not an --arch entry (the engine is the framework's core, not a model);
+kept here so every tunable of the reproduction is discoverable in one
+place.
+"""
+
+from repro.core.executor import EngineConfig
+
+# engine defaults mirroring the paper's production settings (§5.2: max
+# batch 512 in Stardog; we default 4096 — CPU vectors amortize further)
+BARQ_DEFAULT = EngineConfig(
+    engine="barq",
+    adaptive_batching=True,
+    initial_batch=64,
+    max_batch=4096,
+    allow_child_skip=True,
+)
+
+LEGACY_BASELINE = EngineConfig(engine="legacy")
+MIXED_MIGRATION = EngineConfig(engine="mixed")
+
+# distributed-join dry-run shapes (log2 relation sizes x capacity factors)
+DIST_JOIN_SHAPES = {
+    "edges_2e30_cf2.0": dict(log2_edges=30, cap_factor=2.0),
+    "edges_2e30_cf1.25": dict(log2_edges=30, cap_factor=1.25),
+    "edges_2e30_cf4.0": dict(log2_edges=30, cap_factor=4.0),
+}

@@ -1,0 +1,11 @@
+"""BARQ core: vectorized SPARQL query execution in JAX/numpy.
+
+Public API:
+    QuadStore     — sorted in-memory quad indexes + dictionary
+    Engine        — parse/optimize/translate/execute pipeline
+    EngineConfig  — engine selection (barq | legacy | mixed), adaptive batching
+"""
+
+from repro.core.dictionary import Dictionary  # noqa: F401
+from repro.core.executor import Engine, EngineConfig, QueryResult  # noqa: F401
+from repro.core.storage import QuadStore  # noqa: F401

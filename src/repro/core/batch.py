@@ -1,0 +1,176 @@
+"""Columnar solution batches — the BARQ data unit (paper §3.1).
+
+A batch holds one int32 column per query variable (dictionary-encoded RDF
+term IDs) plus a validity mask. The paper uses a *selection vector* (sorted
+dense position list of active rows); on TPU the idiomatic carrier is a
+bitmask, because masked SIMD lanes are free while SV indirection implies
+gathers (see DESIGN.md §2). ``selection_vector()`` materializes the paper's
+representation on demand (used at materialization boundaries and by the
+batch→row adapter).
+
+Shapes are static per capacity bucket so every per-batch kernel compiles
+once per (n_vars, capacity) signature.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Optional, Sequence, Tuple
+
+import numpy as np
+
+# NULL marker constant (paper §3.1 "NULLs"): OPTIONAL can leave variables
+# unbound inside an aligned batch. Valid dictionary IDs are >= 0.
+NULL_ID = np.int32(-1)
+
+# Power-of-two capacity buckets (paper: adaptive batch size <= 512; we keep
+# the same spirit with a bounded set of compiled shapes, DESIGN.md §2).
+MIN_BATCH = 32
+MAX_BATCH = 4096
+BATCH_BUCKETS: Tuple[int, ...] = tuple(
+    1 << p for p in range(MIN_BATCH.bit_length() - 1, MAX_BATCH.bit_length())
+)
+
+
+def bucket_for(n: int) -> int:
+    """Smallest capacity bucket holding ``n`` rows."""
+    for b in BATCH_BUCKETS:
+        if n <= b:
+            return b
+    return MAX_BATCH
+
+
+@dataclasses.dataclass
+class ColumnBatch:
+    """A batch of solutions in columnar layout.
+
+    Attributes:
+      var_ids:  static tuple of variable ids, one per column (sorted order
+                not required; position is the column index).
+      columns:  int32 array of shape (n_vars, capacity).
+      mask:     bool array (capacity,) — True for active rows. The TPU
+                carrier for the paper's selection vector.
+      n_rows:   number of *physically filled* rows (<= capacity). Rows in
+                [n_rows, capacity) are padding and always masked out.
+      sorted_by: var id the active rows are non-decreasing in, or None.
+    """
+
+    var_ids: Tuple[int, ...]
+    columns: np.ndarray
+    mask: np.ndarray
+    n_rows: int
+    sorted_by: Optional[int] = None
+
+    # -- constructors -----------------------------------------------------
+
+    @staticmethod
+    def from_columns(
+        var_ids: Sequence[int],
+        cols: Sequence[np.ndarray],
+        sorted_by: Optional[int] = None,
+        capacity: Optional[int] = None,
+    ) -> "ColumnBatch":
+        var_ids = tuple(int(v) for v in var_ids)
+        n = int(cols[0].shape[0]) if cols else 0
+        cap = capacity or bucket_for(max(n, 1))
+        data = np.full((len(var_ids), cap), NULL_ID, dtype=np.int32)
+        for i, c in enumerate(cols):
+            data[i, :n] = np.asarray(c, dtype=np.int32)
+        mask = np.zeros(cap, dtype=bool)
+        mask[:n] = True
+        return ColumnBatch(var_ids, data, mask, n, sorted_by)
+
+    @staticmethod
+    def empty(var_ids: Sequence[int], capacity: int = MIN_BATCH) -> "ColumnBatch":
+        var_ids = tuple(int(v) for v in var_ids)
+        data = np.full((len(var_ids), capacity), NULL_ID, dtype=np.int32)
+        return ColumnBatch(var_ids, data, np.zeros(capacity, dtype=bool), 0, None)
+
+    # -- accessors ---------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return int(self.columns.shape[1])
+
+    @property
+    def n_active(self) -> int:
+        return int(self.mask[: self.n_rows].sum()) if self.n_rows else 0
+
+    def col_index(self, var: int) -> int:
+        return self.var_ids.index(var)
+
+    def column(self, var: int) -> np.ndarray:
+        """Raw (uncompacted) column including inactive rows."""
+        return self.columns[self.col_index(var), : self.n_rows]
+
+    def selection_vector(self) -> np.ndarray:
+        """The paper's SV: sorted dense indices of active rows."""
+        return np.nonzero(self.mask[: self.n_rows])[0].astype(np.int32)
+
+    def active_column(self, var: int) -> np.ndarray:
+        return self.column(var)[self.mask[: self.n_rows]]
+
+    # -- transforms ----------------------------------------------------------
+
+    def compact(self) -> "ColumnBatch":
+        """Drop inactive rows (materialization boundary)."""
+        if self.n_active == self.n_rows:
+            return self
+        sel = self.selection_vector()
+        cols = [self.columns[i, sel] for i in range(len(self.var_ids))]
+        return ColumnBatch.from_columns(self.var_ids, cols, self.sorted_by)
+
+    def project(self, keep: Sequence[int]) -> "ColumnBatch":
+        keep = tuple(int(v) for v in keep)
+        idx = [self.col_index(v) for v in keep]
+        sb = self.sorted_by if self.sorted_by in keep else None
+        return ColumnBatch(keep, self.columns[idx], self.mask, self.n_rows, sb)
+
+    def with_mask(self, mask: np.ndarray) -> "ColumnBatch":
+        m = self.mask & mask
+        return ColumnBatch(self.var_ids, self.columns, m, self.n_rows, self.sorted_by)
+
+    def rows(self) -> Iterable[Dict[int, int]]:
+        """Row-major view (the batch→row adapter uses this; copy-free per
+        the paper §4.2 — values are read straight out of the columns)."""
+        for r in range(self.n_rows):
+            if self.mask[r]:
+                yield {
+                    v: int(self.columns[i, r])
+                    for i, v in enumerate(self.var_ids)
+                    if self.columns[i, r] != NULL_ID
+                }
+
+    def to_rows_array(self) -> np.ndarray:
+        """Active rows as (n_active, n_vars) int32 — for tests/oracles."""
+        sel = self.selection_vector()
+        return self.columns[:, sel].T.copy()
+
+
+def concat_batches(
+    batches: Sequence[ColumnBatch], var_ids: Optional[Sequence[int]] = None
+) -> ColumnBatch:
+    """Concatenate batches, aligning schemas and NULL-filling missing vars."""
+    if not batches:
+        return ColumnBatch.empty(tuple(var_ids or ()))
+    if var_ids is None:
+        seen: Dict[int, None] = {}
+        for b in batches:
+            for v in b.var_ids:
+                seen.setdefault(v, None)
+        var_ids = tuple(seen)
+    var_ids = tuple(int(v) for v in var_ids)
+    total = sum(b.n_active for b in batches)
+    out = np.full((len(var_ids), max(total, 1)), NULL_ID, dtype=np.int32)
+    pos = 0
+    for b in batches:
+        sel = b.selection_vector()
+        n = len(sel)
+        if n == 0:
+            continue
+        for j, v in enumerate(var_ids):
+            if v in b.var_ids:
+                out[j, pos : pos + n] = b.columns[b.col_index(v), sel]
+        pos += n
+    cols = [out[j, :total] for j in range(len(var_ids))]
+    return ColumnBatch.from_columns(var_ids, cols, None)

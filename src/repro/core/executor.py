@@ -1,0 +1,418 @@
+"""Translator + executor (paper §4): physical plan → operator tree.
+
+The translator decides, per operator, whether to instantiate the BARQ
+(batch) or legacy (row) implementation, inserting batch↔row adapters at
+engine boundaries (§4.2 Interoperability). Selection policy mirrors §4.2:
+
+  * engine='barq'   — all-BARQ tree (every operator here has a batch impl);
+  * engine='legacy' — all-row tree (the baseline of §5);
+  * engine='mixed'  — BARQ for scans/joins/filters (the operators the paper
+    vectorized first), row implementations for aggregation/sort/distinct,
+    with adapters in between — demonstrating the gradual-migration path.
+
+``Engine`` is the public entry point: parse/encode → optimize → translate →
+execute → decode (the pipeline of Fig. 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import algebra as A
+from repro.core import planner as PL
+from repro.core.adaptive import AdaptiveBatchSizer
+from repro.core.batch import NULL_ID
+from repro.core.dictionary import Dictionary
+from repro.core.legacy import operators as LOP
+from repro.core.operators.adapters import BatchToRow, RowToBatch
+from repro.core.operators.aggregate import (
+    SortDistinct,
+    SortGroupBy,
+    StreamingDistinct,
+    StreamingGroupBy,
+)
+from repro.core.operators.base import BatchOperator
+from repro.core.operators.cross import CrossJoin
+from repro.core.operators.lookup_join import LookupJoin
+from repro.core.operators.merge_join import MergeJoin
+from repro.core.operators.scan import IndexScan
+from repro.core.operators.simple import ExtendOp, FilterOp, ProjectOp, SliceOp, UnionOp
+from repro.core.operators.sort import OrderByOp, SortByVarOp
+from repro.core.profiler import profile_tree
+from repro.core.stats import GraphStats
+from repro.core.storage import QuadStore
+
+AnyOp = Union[BatchOperator, LOP.RowOperator]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    engine: str = "barq"  # barq | legacy | mixed
+    adaptive_batching: bool = True
+    initial_batch: int = 64
+    max_batch: int = 4096
+    allow_child_skip: bool = True
+    spill_dir: Optional[str] = None
+
+
+class Translator:
+    def __init__(self, store: QuadStore, cfg: EngineConfig):
+        self.store = store
+        self.cfg = cfg
+
+    # -- entry ------------------------------------------------------------------
+
+    def translate(self, plan: PL.Phys) -> AnyOp:
+        if self.cfg.engine == "legacy":
+            return self._row(plan)
+        op = self._build(plan)
+        return op
+
+    def _sizer(self, initial: Optional[int] = None) -> AdaptiveBatchSizer:
+        return AdaptiveBatchSizer(
+            initial=initial or self.cfg.initial_batch,
+            max_size=self.cfg.max_batch,
+            enabled=self.cfg.adaptive_batching,
+        )
+
+    # -- engine-aware build (barq / mixed) ---------------------------------------------
+
+    def _build(self, n: PL.Phys) -> AnyOp:
+        mixed = self.cfg.engine == "mixed"
+        if isinstance(n, PL.PScan):
+            return IndexScan(
+                self.store, n.pattern, n.sort_var, sizer=self._sizer()
+            )
+        if isinstance(n, PL.PPathScan):
+            # property paths stay row-based under every engine (paper §4);
+            # the adapter bridges them into batch plans
+            return RowToBatch(self._path_op(n), self.cfg.max_batch)
+        if isinstance(n, PL.PSort):
+            child = self._build(n.child)
+            if mixed:
+                # row-based sort consuming (possibly) batch input: adapter in
+                # between, then back to batches at the pipeline break (§4.2)
+                row_child = self._to_row(child)
+                return RowToBatch(
+                    LOP.RowSort(row_child, var=n.var), self.cfg.max_batch
+                )
+            return SortByVarOp(self._to_batch(child), n.var, self.cfg.max_batch)
+        if isinstance(n, PL.PMergeJoin):
+            left = self._to_batch(self._build(n.left))
+            right = self._to_batch(self._build(n.right))
+            return MergeJoin(
+                left,
+                right,
+                n.var,
+                mode=n.mode,
+                post_filter=n.post_filter,
+                dictionary=self.store.dict,
+                sizer=self._sizer(256),
+                spill_dir=self.cfg.spill_dir,
+                allow_child_skip=self.cfg.allow_child_skip,
+            )
+        if isinstance(n, PL.PLookupJoin):
+            probe = self._to_batch(self._build(n.probe))
+            build = self._to_batch(self._build(n.build))
+            return LookupJoin(probe, build, n.var, n.mode)
+        if isinstance(n, PL.PCross):
+            return CrossJoin(
+                self._to_batch(self._build(n.left)),
+                self._to_batch(self._build(n.right)),
+            )
+        if isinstance(n, PL.PFilter):
+            return FilterOp(
+                self._to_batch(self._build(n.child)), n.expr, self.store.dict
+            )
+        if isinstance(n, PL.PExtend):
+            return ExtendOp(
+                self._to_batch(self._build(n.child)), n.var, n.expr, self.store.dict
+            )
+        if isinstance(n, PL.PProject):
+            child = self._build(n.child)
+            if isinstance(child, LOP.RowOperator):
+                return LOP.RowProject(child, n.vars)
+            return ProjectOp(child, n.vars)
+        if isinstance(n, PL.PDistinct):
+            child = self._build(n.child)
+            if mixed:
+                return LOP.RowDistinct(self._to_row(child))
+            bchild = self._to_batch(child)
+            if n.streaming_var is not None and bchild.sorted_by() == n.streaming_var:
+                return StreamingDistinct(bchild, n.streaming_var)
+            return SortDistinct(bchild, self.cfg.max_batch)
+        if isinstance(n, PL.PGroup):
+            child = self._build(n.child)
+            if mixed:
+                return LOP.RowGroupBy(
+                    self._to_row(child), n.group_vars, n.aggs, self.store.dict
+                )
+            bchild = self._to_batch(child)
+            if n.streaming and len(n.group_vars) <= 1:
+                gv = n.group_vars[0] if n.group_vars else None
+                if gv is None or bchild.sorted_by() == gv:
+                    return StreamingGroupBy(
+                        bchild, gv, n.aggs, self.store.dict, self.cfg.max_batch
+                    )
+            return SortGroupBy(
+                bchild, n.group_vars, n.aggs, self.store.dict, self.cfg.max_batch
+            )
+        if isinstance(n, PL.POrderBy):
+            child = self._build(n.child)
+            if mixed:
+                return RowToBatch(
+                    LOP.RowSort(
+                        self._to_row(child), keys=n.keys, dictionary=self.store.dict
+                    ),
+                    self.cfg.max_batch,
+                )
+            return OrderByOp(
+                self._to_batch(child), n.keys, self.store.dict, self.cfg.max_batch
+            )
+        if isinstance(n, PL.PSlice):
+            child = self._build(n.child)
+            if isinstance(child, LOP.RowOperator):
+                return LOP.RowLimit(child, n.limit, n.offset)
+            return SliceOp(child, n.limit, n.offset)
+        if isinstance(n, PL.PUnion):
+            return UnionOp(
+                self._to_batch(self._build(n.left)),
+                self._to_batch(self._build(n.right)),
+            )
+        raise TypeError(type(n))
+
+    # -- adapters ------------------------------------------------------------------
+
+    def _to_batch(self, op: AnyOp) -> BatchOperator:
+        if isinstance(op, BatchOperator):
+            return op
+        return RowToBatch(op, self.cfg.max_batch)
+
+    def _to_row(self, op: AnyOp) -> LOP.RowOperator:
+        if isinstance(op, LOP.RowOperator):
+            return op
+        return BatchToRow(op)
+
+    def _path_op(self, n: "PL.PPathScan") -> LOP.RowOperator:
+        from repro.core.algebra import V
+        from repro.core.legacy.property_path import RowTransitivePath
+
+        pat = n.pattern
+        assert isinstance(pat.s, V) and isinstance(pat.o, V), (
+            "bound-endpoint paths are planned as filters over the closure"
+        )
+        return RowTransitivePath(self.store, pat.p.term, pat.s.id, pat.o.id)
+
+    # -- all-row build (legacy engine, §5 baseline) -----------------------------------------
+
+    def _row(self, n: PL.Phys) -> LOP.RowOperator:
+        if isinstance(n, PL.PScan):
+            return LOP.RowScan(self.store, n.pattern, n.sort_var)
+        if isinstance(n, PL.PPathScan):
+            return self._path_op(n)
+        if isinstance(n, PL.PSort):
+            return LOP.RowSort(self._row(n.child), var=n.var)
+        if isinstance(n, PL.PMergeJoin):
+            return LOP.RowMergeJoin(
+                self._row(n.left), self._row(n.right), n.var, mode=n.mode,
+                post_filter=n.post_filter, dictionary=self.store.dict,
+            )
+        if isinstance(n, PL.PLookupJoin):
+            # legacy uses sort+merge for the same plan shape
+            probe = self._row(n.probe)
+            build = LOP.RowSort(self._row(n.build), var=n.var)
+            if probe.sorted_by() != n.var:
+                probe = LOP.RowSort(probe, var=n.var)
+            return LOP.RowMergeJoin(probe, build, n.var, mode=n.mode)
+        if isinstance(n, PL.PCross):
+            # block nested loop via bind join over a constant
+            left = self._row(n.left)
+            rplan = n.right
+
+            def factory(_code, rplan=rplan):
+                return self._row(rplan)
+
+            return _RowCross(left, lambda: self._row(rplan))
+        if isinstance(n, PL.PFilter):
+            return LOP.RowFilter(self._row(n.child), n.expr, self.store.dict)
+        if isinstance(n, PL.PExtend):
+            return _RowExtend(self._row(n.child), n.var, n.expr, self.store.dict)
+        if isinstance(n, PL.PProject):
+            return LOP.RowProject(self._row(n.child), n.vars)
+        if isinstance(n, PL.PDistinct):
+            return LOP.RowDistinct(self._row(n.child))
+        if isinstance(n, PL.PGroup):
+            return LOP.RowGroupBy(
+                self._row(n.child), n.group_vars, n.aggs, self.store.dict
+            )
+        if isinstance(n, PL.POrderBy):
+            return LOP.RowSort(
+                self._row(n.child), keys=n.keys, dictionary=self.store.dict
+            )
+        if isinstance(n, PL.PSlice):
+            return LOP.RowLimit(self._row(n.child), n.limit, n.offset)
+        if isinstance(n, PL.PUnion):
+            return LOP.RowUnion(self._row(n.left), self._row(n.right))
+        raise TypeError(type(n))
+
+
+class _RowCross(LOP.RowOperator):
+    def __init__(self, left: LOP.RowOperator, right_factory):
+        self.left = left
+        self.right_factory = right_factory
+        self._lrow: Optional[dict] = None
+        self._right: Optional[LOP.RowOperator] = None
+        probe = right_factory()
+        lv = tuple(left.var_ids())
+        self._vars = lv + tuple(v for v in probe.var_ids() if v not in lv)
+        super().__init__("Cross", "(row)")
+
+    def var_ids(self):
+        return self._vars
+
+    def children(self):
+        return [self.left]
+
+    def _next(self):
+        while True:
+            if self._lrow is None:
+                self._lrow = self.left.next_row()
+                if self._lrow is None:
+                    return None
+                self._right = self.right_factory()
+            r = self._right.next_row()
+            if r is None:
+                self._lrow = None
+                continue
+            out = dict(self._lrow)
+            out.update(r)
+            return out
+
+    def _reset(self):
+        self.left.reset()
+        self._lrow = None
+
+
+class _RowExtend(LOP.RowOperator):
+    def __init__(self, child: LOP.RowOperator, var: int, expr, dictionary: Dictionary):
+        from repro.core.expressions import eval_expr_values
+        from repro.core.legacy.operators import _row_to_batch
+
+        self.child, self.var, self.expr, self.dictionary = child, var, expr, dictionary
+        self._eval = eval_expr_values
+        self._to_batch = _row_to_batch
+        super().__init__("Bind", "(row)")
+
+    def var_ids(self):
+        return self.child.var_ids() + (self.var,)
+
+    def sorted_by(self):
+        return self.child.sorted_by()
+
+    def children(self):
+        return [self.child]
+
+    def _next(self):
+        r = self.child.next_row()
+        if r is None:
+            return None
+        b = self._to_batch(r, self.child.var_ids())
+        vals, ok = self._eval(self.expr, b, self.dictionary)
+        out = dict(r)
+        if ok[0]:
+            v = float(vals[0])
+            out[self.var] = self.dictionary.encode(int(v) if v.is_integer() else v)
+        return out
+
+    def _reset(self):
+        self.child.reset()
+
+
+# ---------------------------------------------------------------------------
+# public engine facade
+# ---------------------------------------------------------------------------
+
+
+class QueryResult:
+    def __init__(self, var_table: A.VarTable, proj: Tuple[int, ...],
+                 rows: np.ndarray, root: AnyOp):
+        self.var_table = var_table
+        self.proj = proj
+        self.rows = rows  # (n, n_proj) int32 codes
+        self.root = root
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.rows.shape[0])
+
+    def decoded(self, dictionary: Dictionary) -> List[dict]:
+        names = [self.var_table.name(v) for v in self.proj]
+        out = []
+        for row in self.rows:
+            out.append(
+                {
+                    nm: (None if c == NULL_ID else dictionary.decode(int(c)))
+                    for nm, c in zip(names, row)
+                }
+            )
+        return out
+
+    def profile(self) -> str:
+        return profile_tree(self.root, self.var_table)
+
+
+class Engine:
+    """Public API: Engine(store).execute(plan | sparql_text)."""
+
+    def __init__(self, store: QuadStore, cfg: Optional[EngineConfig] = None):
+        self.store = store
+        self.cfg = cfg or EngineConfig()
+        self.stats = GraphStats(store)
+        self.planner = PL.Planner(self.stats, barq_enabled=self.cfg.engine != "legacy")
+
+    def parse(self, text: str) -> Tuple[A.PlanNode, A.VarTable]:
+        from repro.core.parser import parse_query
+
+        return parse_query(text)
+
+    def plan(self, node: A.PlanNode) -> PL.Phys:
+        return self.planner.plan(node)
+
+    def execute_plan(
+        self, phys: PL.Phys, var_table: Optional[A.VarTable] = None
+    ) -> QueryResult:
+        op = Translator(self.store, self.cfg).translate(phys)
+        proj = tuple(
+            phys_v for phys_v in PL.phys_vars(phys)
+        )
+        if isinstance(op, LOP.RowOperator):
+            rows = op.drain()
+            arr = np.full((len(rows), len(proj)), NULL_ID, dtype=np.int32)
+            for i, r in enumerate(rows):
+                for j, v in enumerate(proj):
+                    arr[i, j] = r.get(v, int(NULL_ID))
+        else:
+            batches = op.drain()
+            blocks = []
+            for b in batches:
+                cb = b.compact()
+                order = [cb.col_index(v) for v in proj]
+                blocks.append(cb.columns[order, : cb.n_rows].T)
+            arr = (
+                np.concatenate(blocks, axis=0)
+                if blocks
+                else np.zeros((0, len(proj)), dtype=np.int32)
+            )
+        return QueryResult(var_table or A.VarTable(), proj, arr, op)
+
+    def execute(self, node_or_text: Union[str, A.PlanNode],
+                var_table: Optional[A.VarTable] = None) -> QueryResult:
+        if isinstance(node_or_text, str):
+            node, var_table = self.parse(node_or_text)
+        else:
+            node = node_or_text
+        phys = self.plan(node)
+        return self.execute_plan(phys, var_table)

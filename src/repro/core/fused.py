@@ -1,0 +1,115 @@
+"""Fused whole-BGP execution (beyond paper — DESIGN.md §2.1).
+
+Counts accumulate in int32 (x64 is disabled jax-wide); stores at the
+scale where chain counts exceed 2^31 should flip jax_enable_x64.
+
+The paper chose vectorization over code generation partly for
+observability, noting the approaches can be combined later ('often used
+SPARQL expressions … can be compiled', §3.1). On TPU, XLA *is* the code
+generator: for hot query shapes the engine compiles the entire merge-join
+pipeline into one jitted function over whole sorted relations — no
+per-batch host round-trips, and counting without materialization where
+the algebra allows it.
+
+Two fused shapes are provided (the LSQB family the paper's motivating
+example comes from):
+
+  fused_chain_count — COUNT(*) of p1 ⋈ p2 ⋈ … ⋈ pk chains: weights
+                      propagate right-to-left via searchsorted prefix
+                      sums; intermediates never materialize.
+  fused_q6_count    — the paper's Figure-1 query (2-hop :knows +
+                      interests + FILTER ?a != ?c): the inequality is
+                      pushed into closed form,
+                         count = Σ chains − Σ_{mutual (a,b)} tags(a),
+                      so even the paper's 46.7M-row intermediate never
+                      exists.
+
+Both validate against the operator engine (tests/test_fused.py) and
+benchmark as 'barq_fused' rows in bench_lsqb.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.storage import QuadStore
+
+
+def _pred_edges_sorted_by_subject(store: QuadStore, pred: str) -> np.ndarray:
+    """(2, n) [subject, object] rows of one predicate, subject-sorted."""
+    pid = store.dict.lookup(pred)
+    if pid is None:
+        return np.zeros((2, 0), dtype=np.int32)
+    arr = store.index_array("psoc")  # (p, s, o, c) lexicographic
+    lo = int(np.searchsorted(arr[:, 0], pid, side="left"))
+    hi = int(np.searchsorted(arr[:, 0], pid, side="right"))
+    return arr[lo:hi, 1:3].T.astype(np.int32)
+
+
+@jax.jit
+def _count_per_key(sorted_keys: jax.Array, queries: jax.Array) -> jax.Array:
+    lo = jnp.searchsorted(sorted_keys, queries, side="left")
+    hi = jnp.searchsorted(sorted_keys, queries, side="right")
+    return (hi - lo).astype(jnp.int32)
+
+
+@jax.jit
+def _fold_weights(next_subj: jax.Array, w_next: jax.Array,
+                  cur_obj: jax.Array) -> jax.Array:
+    """weight(edge e of current relation) = Σ weights of next-relation rows
+    whose subject equals e.object — a run-sum via prefix sums."""
+    cw = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(w_next)])
+    lo = jnp.searchsorted(next_subj, cur_obj, side="left")
+    hi = jnp.searchsorted(next_subj, cur_obj, side="right")
+    return cw[hi] - cw[lo]
+
+
+def fused_chain_count(store: QuadStore, preds: List[str]) -> int:
+    """COUNT(*) of ?x0 p1 ?x1 . ?x1 p2 ?x2 . … (left-deep chain BGP)."""
+    rels = [_pred_edges_sorted_by_subject(store, p) for p in preds]
+    if any(r.shape[1] == 0 for r in rels):
+        return 0
+    w = jnp.ones(rels[-1].shape[1], dtype=jnp.int32)
+    for i in range(len(rels) - 2, -1, -1):
+        w = _fold_weights(
+            jnp.asarray(rels[i + 1][0]), w, jnp.asarray(rels[i][1])
+        )
+    return int(jnp.sum(w))
+
+
+@jax.jit
+def _q6_kernel(k_subj, k_obj, i_subj):
+    # tags(c) for every knows edge (b, c)
+    w2 = _count_per_key(i_subj, k_obj)
+    # chains through each first-hop edge (a, b) = Σ_{(b, c)} tags(c)
+    per_edge = _fold_weights(k_subj, w2, k_obj)
+    total = jnp.sum(per_edge)
+
+    # correction for ?a != ?c: chains with c == a exist iff (b, a) ∈ knows;
+    # each mutual pair contributes tags(a). Membership test via composite
+    # sorted keys (the relation is (subj, obj)-lex sorted already).
+    base = jnp.maximum(jnp.max(k_subj), jnp.max(k_obj)).astype(jnp.int32) + 2
+    comp = k_subj.astype(jnp.int32) * base + k_obj.astype(jnp.int32)
+    rev = k_obj.astype(jnp.int32) * base + k_subj.astype(jnp.int32)
+    pos = jnp.searchsorted(comp, rev, side="left")
+    pos_c = jnp.clip(pos, 0, comp.shape[0] - 1)
+    mutual = comp[pos_c] == rev
+    tags_a = _count_per_key(i_subj, k_subj)
+    correction = jnp.sum(jnp.where(mutual, tags_a, 0))
+    return total - correction
+
+
+def fused_q6_count(store: QuadStore, knows=":knows",
+                   interest=":hasInterest") -> int:
+    """The paper's Figure-1 query, fully fused (zero materialization)."""
+    k = _pred_edges_sorted_by_subject(store, knows)
+    it = _pred_edges_sorted_by_subject(store, interest)
+    if k.shape[1] == 0 or it.shape[1] == 0:
+        return 0
+    return int(
+        _q6_kernel(jnp.asarray(k[0]), jnp.asarray(k[1]), jnp.asarray(it[0]))
+    )

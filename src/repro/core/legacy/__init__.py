@@ -1,0 +1,13 @@
+from repro.core.legacy.operators import (  # noqa: F401
+    RowBindJoin,
+    RowDistinct,
+    RowFilter,
+    RowGroupBy,
+    RowLimit,
+    RowMergeJoin,
+    RowOperator,
+    RowProject,
+    RowScan,
+    RowSort,
+    RowUnion,
+)

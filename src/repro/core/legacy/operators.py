@@ -1,0 +1,668 @@
+"""The legacy tuple-at-a-time Volcano engine (paper §2.2.3) — the baseline.
+
+Each operator returns a single solution per ``next()`` call; sorted
+operators additionally support ``skip(target)`` repositioning (§2.2.3).
+Rows are dicts {var_id: code}. The per-tuple virtual-call overhead the
+paper measures against is, here, per-tuple Python dispatch — the honest
+analogue of JVM virtual calls (DESIGN.md §2).
+
+The evaluation in §5 requires this engine: every benchmark reports
+BARQ vs legacy on identical plans.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.algebra import AggSpec, Expr, K, SortKey, TriplePattern, V
+from repro.core.batch import NULL_ID, ColumnBatch
+from repro.core.dictionary import Dictionary
+from repro.core.expressions import eval_expr_mask, eval_expr_values
+from repro.core.operators.base import OpStats
+from repro.core.storage import INDEX_ORDERS, QuadStore, ScanRange
+
+Row = Dict[int, int]
+
+
+class RowOperator:
+    def __init__(self, name: str, detail: str = "") -> None:
+        self.stats = OpStats(name, detail)
+
+    def next_row(self) -> Optional[Row]:
+        self.stats.next_calls += 1
+        t0 = time.perf_counter()
+        r = self._next()
+        self.stats.wall_time += time.perf_counter() - t0
+        if r is not None:
+            self.stats.results += 1
+        return r
+
+    def skip(self, var: int, target: int) -> None:
+        self.stats.skip_calls += 1
+        self._skip(var, target)
+
+    def reset(self) -> None:
+        self.stats.reset_calls += 1
+        self._reset()
+
+    def var_ids(self) -> Tuple[int, ...]:
+        raise NotImplementedError
+
+    def sorted_by(self) -> Optional[int]:
+        return None
+
+    def supports_skip(self) -> bool:
+        return self.sorted_by() is not None
+
+    def children(self) -> List["RowOperator"]:
+        return []
+
+    def _next(self) -> Optional[Row]:
+        raise NotImplementedError
+
+    def _skip(self, var: int, target: int) -> None:
+        raise NotImplementedError
+
+    def _reset(self) -> None:
+        raise NotImplementedError
+
+    def drain(self) -> List[Row]:
+        out = []
+        while True:
+            r = self.next_row()
+            if r is None:
+                return out
+            out.append(r)
+
+
+class RowScan(RowOperator):
+    """Tuple-at-a-time index scan with storage seek on skip()."""
+
+    def __init__(self, store: QuadStore, pattern: TriplePattern,
+                 want_sorted_var: Optional[int] = None):
+        self.store = store
+        self.pattern = pattern
+        self._dead = False
+        bound: List[Optional[int]] = [None, None, None, None]
+        for role, sl in enumerate((pattern.s, pattern.p, pattern.o, pattern.g)):
+            if isinstance(sl, K):
+                tid = store.dict.lookup(sl.term)
+                if tid is None:
+                    self._dead = True
+                    tid = -1
+                bound[role] = tid
+        self.bound = bound
+        self.role_of_var: Dict[int, int] = {}
+        self.residual_pairs: List[Tuple[int, int]] = []
+        for role, sl in enumerate((pattern.s, pattern.p, pattern.o, pattern.g)):
+            if isinstance(sl, V):
+                if sl.id in self.role_of_var:
+                    self.residual_pairs.append((self.role_of_var[sl.id], role))
+                else:
+                    self.role_of_var[sl.id] = role
+        want_role = self.role_of_var.get(want_sorted_var) if want_sorted_var is not None else None
+        self.index = store.choose_index(bound, want_role)
+        self.perm = INDEX_ORDERS[self.index]
+        self._vars = tuple(self.role_of_var)
+        self.var_col_pos = {v: self.perm.index(r) for v, r in self.role_of_var.items()}
+        n_bound = 0
+        while n_bound < 4 and bound[self.perm[n_bound]] is not None:
+            n_bound += 1
+        self._sort_col_pos = n_bound if n_bound < 4 else None
+        self._sorted_var = None
+        if self._sort_col_pos is not None:
+            role = self.perm[self._sort_col_pos]
+            for v, r in self.role_of_var.items():
+                if r == role:
+                    self._sorted_var = v
+        self.range: ScanRange = (
+            ScanRange(self.index, 0, 0) if self._dead
+            else store.range_for_pattern(self.index, bound)
+        )
+        self.offset = 0
+        super().__init__("Scan", "(row)")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self._vars
+
+    def sorted_by(self) -> Optional[int]:
+        return self._sorted_var
+
+    def _next(self) -> Optional[Row]:
+        while self.offset < len(self.range):
+            row = self.store.read(self.range, self.offset, 1)[0]
+            self.offset += 1
+            self.stats.rows_scanned += 1
+            ok = True
+            for ra, rb in self.residual_pairs:
+                if row[self.perm.index(ra)] != row[self.perm.index(rb)]:
+                    ok = False
+                    break
+            if ok:
+                return {v: int(row[self.var_col_pos[v]]) for v in self._vars}
+        return None
+
+    def _skip(self, var: int, target: int) -> None:
+        assert var == self._sorted_var
+        self.offset = self.store.seek(self.range, self.offset, self._sort_col_pos, target)
+
+    def _reset(self) -> None:
+        self.offset = 0
+
+    def estimated_rows(self) -> int:
+        return len(self.range)
+
+
+class RowMergeJoin(RowOperator):
+    """Classic one-tuple-at-a-time merge join with skip() (paper §2.2.3).
+    ``post_filter`` implements the SPARQL LeftJoin condition: a row pair
+    only counts as a match if the expression holds on the joined row (so a
+    fully-filtered group still yields the NULL-extended left row)."""
+
+    def __init__(self, left: RowOperator, right: RowOperator, join_var: int,
+                 mode: str = "inner", post_filter=None, dictionary=None):
+        assert left.sorted_by() == join_var and right.sorted_by() == join_var
+        assert mode in ("inner", "left_outer", "semi", "anti")
+        self.left, self.right, self.v, self.mode = left, right, join_var, mode
+        self.post_filter = post_filter
+        self.dictionary = dictionary
+        lv, rv = tuple(left.var_ids()), tuple(right.var_ids())
+        self.shared = tuple(x for x in lv if x in rv)
+        self._vars = lv if mode in ("semi", "anti") else lv + tuple(
+            x for x in rv if x not in lv
+        )
+        self._lrow: Optional[Row] = None
+        self._rgroup: List[Row] = []
+        self._rgroup_key: Optional[int] = None
+        self._rnext: Optional[Row] = None
+        self._gi = 0  # cursor within right group
+        self._right_done = False
+        self._lrow_matched = False
+        super().__init__("MergeJoin", f"(?v{join_var}) row mode={mode}")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self._vars
+
+    def sorted_by(self) -> Optional[int]:
+        return None if self.mode == "left_outer" else self.v
+
+    def children(self) -> List[RowOperator]:
+        return [self.left, self.right]
+
+    def _advance_left(self) -> None:
+        self._lrow = self.left.next_row()
+        self._gi = 0
+        self._lrow_matched = False
+
+    def _load_right_group(self, key: int) -> None:
+        """Position the right group buffer at the first key >= key."""
+        if self._rgroup_key is not None and self._rgroup_key == key:
+            return
+        if self._rgroup_key is not None and self._rgroup_key > key:
+            return
+        # gallop via skip
+        if self._rnext is None and not self._right_done:
+            if self.right.supports_skip():
+                self.right.skip(self.v, key)
+            self._rnext = self.right.next_row()
+            if self._rnext is None:
+                self._right_done = True
+        while self._rnext is not None and self._rnext[self.v] < key:
+            if self.right.supports_skip():
+                self.right.skip(self.v, key)
+            self._rnext = self.right.next_row()
+            if self._rnext is None:
+                self._right_done = True
+        self._rgroup = []
+        self._rgroup_key = None
+        if self._rnext is None:
+            return
+        gkey = self._rnext[self.v]
+        self._rgroup_key = gkey
+        while self._rnext is not None and self._rnext[self.v] == gkey:
+            self._rgroup.append(self._rnext)
+            self._rnext = self.right.next_row()
+            if self._rnext is None:
+                self._right_done = True
+
+    def _next(self) -> Optional[Row]:
+        while True:
+            if self._lrow is None:
+                self._advance_left()
+                if self._lrow is None:
+                    return None
+            k = self._lrow[self.v]
+            self._load_right_group(k)
+            if self._rgroup_key != k:
+                # no match for this left row
+                lr = self._lrow
+                self._advance_left()
+                if self.mode == "left_outer":
+                    return dict(lr)
+                if self.mode == "anti":
+                    return dict(lr)
+                continue
+            # matched group
+            if self.mode == "anti":
+                # check secondary keys
+                if self._anti_semi_match(self._lrow):
+                    self._advance_left()
+                    continue
+                lr = self._lrow
+                self._advance_left()
+                return dict(lr)
+            if self.mode == "semi":
+                lr = self._lrow
+                matched = self._anti_semi_match(lr)
+                self._advance_left()
+                if matched:
+                    return dict(lr)
+                continue
+            # inner / left_outer: iterate group
+            while self._gi < len(self._rgroup):
+                rrow = self._rgroup[self._gi]
+                self._gi += 1
+                ok = all(self._lrow.get(s) == rrow.get(s) for s in self.shared)
+                if ok:
+                    out = dict(self._lrow)
+                    for kk, vv in rrow.items():
+                        out.setdefault(kk, vv)
+                    if self.post_filter is not None and not self._expr_ok(out):
+                        continue  # not a match under the join condition
+                    self._lrow_matched = True
+                    return out
+            lr, was_matched = self._lrow, self._lrow_matched
+            self._advance_left()
+            if self.mode == "left_outer" and not was_matched:
+                return dict(lr)
+
+    def _anti_semi_match(self, lrow: Row) -> bool:
+        return any(
+            all(lrow.get(s) == r.get(s) for s in self.shared) for r in self._rgroup
+        )
+
+    def _expr_ok(self, row: Row) -> bool:
+        b = _row_to_batch(row, self._vars)
+        return bool(eval_expr_mask(self.post_filter, b, self.dictionary)[0])
+
+    def _skip(self, var: int, target: int) -> None:
+        assert var == self.v
+        if self.left.supports_skip():
+            self.left.skip(var, target)
+        self._lrow = None
+        self._gi = 0
+
+    def _reset(self) -> None:
+        self.left.reset()
+        self.right.reset()
+        self._lrow = None
+        self._rgroup, self._rgroup_key, self._rnext = [], None, None
+        self._right_done = False
+        self._gi = 0
+
+
+class RowFilter(RowOperator):
+    def __init__(self, child: RowOperator, expr: Expr, dictionary: Dictionary):
+        self.child, self.expr, self.dictionary = child, expr, dictionary
+        super().__init__("Filter", "(row)")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def sorted_by(self) -> Optional[int]:
+        return self.child.sorted_by()
+
+    def children(self) -> List[RowOperator]:
+        return [self.child]
+
+    def _row_ok(self, row: Row) -> bool:
+        b = _row_to_batch(row, self.child.var_ids())
+        return bool(eval_expr_mask(self.expr, b, self.dictionary)[0])
+
+    def _next(self) -> Optional[Row]:
+        while True:
+            r = self.child.next_row()
+            if r is None:
+                return None
+            if self._row_ok(r):
+                return r
+
+    def _skip(self, var: int, target: int) -> None:
+        self.child.skip(var, target)
+
+    def _reset(self) -> None:
+        self.child.reset()
+
+
+def _row_to_batch(row: Row, vars_: Sequence[int]) -> ColumnBatch:
+    cols = [np.asarray([row.get(v, int(NULL_ID))], dtype=np.int32) for v in vars_]
+    return ColumnBatch.from_columns(tuple(vars_), cols)
+
+
+class RowProject(RowOperator):
+    def __init__(self, child: RowOperator, keep: Sequence[int]):
+        self.child, self.keep = child, tuple(keep)
+        super().__init__("Project", "(row)")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.keep
+
+    def sorted_by(self) -> Optional[int]:
+        sb = self.child.sorted_by()
+        return sb if sb in self.keep else None
+
+    def children(self) -> List[RowOperator]:
+        return [self.child]
+
+    def _next(self) -> Optional[Row]:
+        r = self.child.next_row()
+        if r is None:
+            return None
+        return {v: r[v] for v in self.keep if v in r}
+
+    def _skip(self, var: int, target: int) -> None:
+        self.child.skip(var, target)
+
+    def _reset(self) -> None:
+        self.child.reset()
+
+
+class RowDistinct(RowOperator):
+    def __init__(self, child: RowOperator):
+        self.child = child
+        self._seen: set = set()
+        super().__init__("Distinct", "(row hash)")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def children(self) -> List[RowOperator]:
+        return [self.child]
+
+    def _next(self) -> Optional[Row]:
+        while True:
+            r = self.child.next_row()
+            if r is None:
+                return None
+            key = tuple(sorted(r.items()))
+            if key not in self._seen:
+                self._seen.add(key)
+                return r
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._seen.clear()
+
+
+class RowGroupBy(RowOperator):
+    """Hash-based GROUP BY (the legacy engine's general algorithm)."""
+
+    def __init__(self, child: RowOperator, group_vars: Sequence[int],
+                 aggs: Sequence[AggSpec], dictionary: Dictionary):
+        self.child = child
+        self.group_vars = tuple(group_vars)
+        self.aggs = list(aggs)
+        self.dictionary = dictionary
+        self._out: Optional[Iterator] = None
+        super().__init__("Group", "(row hash)")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.group_vars + tuple(a.out for a in self.aggs)
+
+    def children(self) -> List[RowOperator]:
+        return [self.child]
+
+    def _build(self) -> Iterator[Row]:
+        groups: Dict[Tuple, List] = {}
+        while True:
+            r = self.child.next_row()
+            if r is None:
+                break
+            key = tuple(r.get(v, int(NULL_ID)) for v in self.group_vars)
+            st = groups.get(key)
+            if st is None:
+                st = [dict(count=0.0, sum=0.0, min=np.inf, max=-np.inf,
+                           nn=0.0, distinct=set()) for _ in self.aggs]
+                groups[key] = st
+            for ai, a in enumerate(self.aggs):
+                s = st[ai]
+                s["count"] += 1
+                if a.var is None:
+                    continue
+                code = r.get(a.var)
+                if code is None:
+                    continue
+                if a.distinct:
+                    s["distinct"].add(code)
+                    continue
+                v = self.dictionary.numeric_of(np.asarray([code]))[0]
+                if not np.isnan(v):
+                    s["nn"] += 1
+                    s["sum"] += v
+                    s["min"] = min(s["min"], v)
+                    s["max"] = max(s["max"], v)
+        if not groups and not self.group_vars:
+            groups[()] = [dict(count=0.0, sum=0.0, min=np.inf, max=-np.inf,
+                               nn=0.0, distinct=set()) for _ in self.aggs]
+        for key, st in groups.items():
+            row = {v: key[i] for i, v in enumerate(self.group_vars)}
+            for ai, a in enumerate(self.aggs):
+                s = st[ai]
+                if a.func == "count" and a.var is None:
+                    val = s["count"]
+                elif a.distinct:
+                    val = float(len(s["distinct"]))
+                elif a.func == "count":
+                    val = s["nn"]
+                elif a.func == "sum":
+                    val = s["sum"]
+                elif a.func == "min":
+                    val = s["min"]
+                elif a.func == "max":
+                    val = s["max"]
+                elif a.func == "avg":
+                    val = s["sum"] / s["nn"] if s["nn"] else np.nan
+                else:
+                    raise ValueError(a.func)
+                enc = int(val) if float(val).is_integer() else float(val)
+                row[a.out] = self.dictionary.encode(enc)
+            yield row
+
+    def _next(self) -> Optional[Row]:
+        if self._out is None:
+            self._out = self._build()
+        return next(self._out, None)
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._out = None
+
+
+class RowSort(RowOperator):
+    def __init__(self, child: RowOperator, var: Optional[int] = None,
+                 keys: Optional[Sequence[SortKey]] = None,
+                 dictionary: Optional[Dictionary] = None):
+        self.child = child
+        self.var = var
+        self.keys = keys
+        self.dictionary = dictionary
+        self._rows: Optional[List[Row]] = None
+        self._i = 0
+        super().__init__("Sort", f"(?v{var})" if var is not None else "(order by)")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def sorted_by(self) -> Optional[int]:
+        return self.var
+
+    def children(self) -> List[RowOperator]:
+        return [self.child]
+
+    def _ensure(self) -> None:
+        if self._rows is not None:
+            return
+        rows = self.child.drain()
+        if self.var is not None:
+            rows.sort(key=lambda r: r.get(self.var, int(NULL_ID)))
+        else:
+            def key(r):
+                ks = []
+                for k in self.keys:
+                    code = r.get(k.var, int(NULL_ID))
+                    v = self.dictionary.numeric_of(np.asarray([code]))[0]
+                    nan = np.isnan(v)
+                    prim = np.inf if nan else (v if k.ascending else -v)
+                    tie = (code if k.ascending else -code) if nan else 0
+                    ks.extend([prim, tie])
+                return tuple(ks)
+            rows.sort(key=key)
+        self._rows = rows
+
+    def _next(self) -> Optional[Row]:
+        self._ensure()
+        if self._i >= len(self._rows):
+            return None
+        r = self._rows[self._i]
+        self._i += 1
+        return r
+
+    def _skip(self, var: int, target: int) -> None:
+        assert var == self.var
+        self._ensure()
+        while self._i < len(self._rows) and self._rows[self._i].get(var, -1) < target:
+            self._i += 1
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._rows = None
+        self._i = 0
+
+
+class RowLimit(RowOperator):
+    def __init__(self, child: RowOperator, limit: Optional[int], offset: int = 0):
+        self.child = child
+        self.limit, self.offset = limit, offset
+        self._seen = 0
+        self._emitted = 0
+        super().__init__("Slice", "(row)")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def sorted_by(self) -> Optional[int]:
+        return self.child.sorted_by()
+
+    def children(self) -> List[RowOperator]:
+        return [self.child]
+
+    def _next(self) -> Optional[Row]:
+        while True:
+            if self.limit is not None and self._emitted >= self.limit:
+                return None
+            r = self.child.next_row()
+            if r is None:
+                return None
+            self._seen += 1
+            if self._seen <= self.offset:
+                continue
+            self._emitted += 1
+            return r
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._seen = self._emitted = 0
+
+
+class RowUnion(RowOperator):
+    def __init__(self, left: RowOperator, right: RowOperator):
+        self.left, self.right = left, right
+        lv = tuple(left.var_ids())
+        self._vars = lv + tuple(v for v in right.var_ids() if v not in lv)
+        self._on_right = False
+        super().__init__("Union", "(row)")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self._vars
+
+    def children(self) -> List[RowOperator]:
+        return [self.left, self.right]
+
+    def _next(self) -> Optional[Row]:
+        if not self._on_right:
+            r = self.left.next_row()
+            if r is not None:
+                return r
+            self._on_right = True
+        return self.right.next_row()
+
+    def _reset(self) -> None:
+        self.left.reset()
+        self.right.reset()
+        self._on_right = False
+
+
+class RowBindJoin(RowOperator):
+    """Block-based bind join (paper §4.2 footnote 14): pull a block of ~1K
+    left tuples, push their join-key bindings into the right side (re-scoped
+    via skip), evaluate, repeat. The legacy optimizer prefers this plan shape
+    for amplifying joins (paper Listing 4)."""
+
+    def __init__(self, left: RowOperator, right_factory, join_var: int,
+                 block_size: int = 1024):
+        self.left = left
+        self.right_factory = right_factory  # (code,) -> RowOperator for bound key
+        self.v = join_var
+        self.block_size = block_size
+        self._block: List[Row] = []
+        self._bi = 0
+        self._right: Optional[RowOperator] = None
+        self._left_done = False
+        lv = tuple(left.var_ids())
+        probe = right_factory(0)
+        self._vars = lv + tuple(x for x in probe.var_ids() if x not in lv)
+        super().__init__("BindJoin", f"(?v{join_var}) block={block_size}")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self._vars
+
+    def children(self) -> List[RowOperator]:
+        return [self.left]
+
+    def _next(self) -> Optional[Row]:
+        while True:
+            if self._right is not None:
+                r = self._right.next_row()
+                while r is not None:
+                    lrow = self._block[self._bi]
+                    if all(lrow.get(k) == r.get(k) for k in r if k in lrow):
+                        out = dict(lrow)
+                        out.update(r)
+                        return out
+                    r = self._right.next_row()
+                self._right = None
+                self._bi += 1
+            if self._bi < len(self._block):
+                lrow = self._block[self._bi]
+                self._right = self.right_factory(lrow[self.v])
+                continue
+            if self._left_done:
+                return None
+            self._block = []
+            self._bi = 0
+            while len(self._block) < self.block_size:
+                lr = self.left.next_row()
+                if lr is None:
+                    self._left_done = True
+                    break
+                self._block.append(lr)
+            if not self._block and self._left_done:
+                return None
+
+    def _reset(self) -> None:
+        self.left.reset()
+        self._block, self._bi, self._right = [], 0, None
+        self._left_done = False

@@ -1,0 +1,1 @@
+from repro.core.operators.base import BatchOperator, OpStats  # noqa: F401

@@ -1,0 +1,107 @@
+"""Batch↔row adapters (paper §4.2 Interoperability).
+
+BatchToRow lets per-row (legacy) operators consume BARQ output: copy-free —
+a batch is immediately iterable as an array of rows via the selection
+vector. RowToBatch lets BARQ operators consume legacy output, typically at
+a pipeline-breaking point. Both preserve sort order and forward skip().
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.batch import NULL_ID, ColumnBatch, bucket_for
+from repro.core.legacy.operators import Row, RowOperator
+from repro.core.operators.base import BatchOperator
+
+
+class BatchToRow(RowOperator):
+    def __init__(self, child: BatchOperator):
+        self.child = child
+        self._batch: Optional[ColumnBatch] = None
+        self._sel: Optional[np.ndarray] = None
+        self._i = 0
+        super().__init__("BatchToRow", "")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def sorted_by(self) -> Optional[int]:
+        return self.child.sorted_by()
+
+    def children(self):  # mixed-tree profiler support
+        return [self.child]
+
+    def _next(self) -> Optional[Row]:
+        while True:
+            if self._batch is not None and self._i < len(self._sel):
+                r = self._sel[self._i]
+                self._i += 1
+                b = self._batch
+                return {
+                    v: int(b.columns[ci, r])
+                    for ci, v in enumerate(b.var_ids)
+                    if b.columns[ci, r] != NULL_ID
+                }
+            self._batch = self.child.next_batch()
+            if self._batch is None:
+                return None
+            self._sel = self._batch.selection_vector()
+            self._i = 0
+
+    def _skip(self, var: int, target: int) -> None:
+        # drop buffered rows below target, then skip the child
+        if self._batch is not None and self._sel is not None:
+            ci = self._batch.col_index(var)
+            col = self._batch.columns[ci, self._sel[self._i :]]
+            self._i += int(np.searchsorted(col, target, side="left"))
+            if self._i >= len(self._sel):
+                self._batch = None
+        self.child.skip(var, target)
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._batch = None
+        self._i = 0
+
+
+class RowToBatch(BatchOperator):
+    def __init__(self, child: RowOperator, batch_size: int = 1024):
+        self.child = child
+        self.batch_size = batch_size
+        super().__init__("RowToBatch", "")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def sorted_by(self) -> Optional[int]:
+        return self.child.sorted_by()
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]  # type: ignore[list-item]
+
+    def _next(self) -> Optional[ColumnBatch]:
+        vars_ = tuple(self.child.var_ids())
+        cap = bucket_for(self.batch_size)
+        cols = np.full((len(vars_), cap), NULL_ID, dtype=np.int32)
+        n = 0
+        while n < self.batch_size:
+            r = self.child.next_row()
+            if r is None:
+                break
+            for ci, v in enumerate(vars_):
+                cols[ci, n] = r.get(v, int(NULL_ID))
+            n += 1
+        if n == 0:
+            return None
+        mask = np.zeros(cap, dtype=bool)
+        mask[:n] = True
+        return ColumnBatch(vars_, cols, mask, n, self.child.sorted_by())
+
+    def _skip(self, var: int, target: int) -> None:
+        self.child.skip(var, target)
+
+    def _reset(self) -> None:
+        self.child.reset()

@@ -1,0 +1,380 @@
+"""Vectorized aggregation (paper §3.3).
+
+StreamingGroupBy handles the paper's optimized case: a single group variable
+with input sorted by it. Standard aggregates (count/sum/min/max/avg) are
+associative: each batch reduces to per-run partials (vecops.segment_reduce /
+kernels segment_reduce) which merge across batches through a carry for the
+run that spans the batch boundary. No hash table is needed — exactly why the
+paper ships streaming aggregation first (§3.3: no row-based memory-manager
+hash tables involved).
+
+SortGroupBy is the general fallback: materialize, sort by group keys
+(sort-based grouping — the TPU-idiomatic replacement for vectorized hash
+grouping, DESIGN.md §2), then stream. StreamingDistinct implements
+DISTINCT-via-skip() for sorted inputs: after seeing key k it *skips* the
+child to k+1, scrolling over duplicates in storage (paper: 'highly
+efficient for queries with many duplicates').
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import vecops
+from repro.core.algebra import AggSpec
+from repro.core.batch import MAX_BATCH, ColumnBatch
+from repro.core.dictionary import Dictionary
+from repro.core.operators.base import BatchOperator
+from repro.core.operators.sort import MaterializedSource, materialize
+
+
+@dataclasses.dataclass
+class _AggState:
+    """Carry for the group run spanning the current batch boundary."""
+
+    key: Optional[int] = None
+    count: float = 0.0
+    sums: Optional[Dict[int, float]] = None  # per-agg partial
+    mins: Optional[Dict[int, float]] = None
+    maxs: Optional[Dict[int, float]] = None
+    counts: Optional[Dict[int, float]] = None  # per-agg non-null counts
+    distinct: Optional[Dict[int, set]] = None  # per-agg distinct codes
+
+
+class StreamingGroupBy(BatchOperator):
+    """GROUP BY <one var> with aggregates over input sorted by that var.
+    group_var None => global aggregation (single group)."""
+
+    def __init__(
+        self,
+        child: BatchOperator,
+        group_var: Optional[int],
+        aggs: Sequence[AggSpec],
+        dictionary: Dictionary,
+        batch_size: int = MAX_BATCH,
+    ):
+        if group_var is not None:
+            assert child.sorted_by() == group_var, "input must be sorted by group var"
+        self.child = child
+        self.g = group_var
+        self.aggs = list(aggs)
+        self.dictionary = dictionary
+        self.batch_size = batch_size
+        self._out_keys: List[int] = []
+        self._out_vals: List[List[float]] = [[] for _ in self.aggs]
+        self._carry = _AggState()
+        self._emitted = 0
+        self._drained = False
+        super().__init__(
+            "Group",
+            f"by=?v{group_var} " + ",".join(f"{a.func}->?v{a.out}" for a in aggs),
+        )
+
+    def var_ids(self) -> Tuple[int, ...]:
+        base = (self.g,) if self.g is not None else ()
+        return base + tuple(a.out for a in self.aggs)
+
+    def sorted_by(self) -> Optional[int]:
+        return self.g
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]
+
+    # -- aggregation ------------------------------------------------------------
+
+    def _consume_all(self) -> None:
+        while True:
+            b = self.child.next_batch()
+            if b is None:
+                break
+            cb = b.compact()
+            if cb.n_rows == 0:
+                continue
+            keys = (
+                cb.column(self.g)
+                if self.g is not None
+                else np.zeros(cb.n_rows, dtype=np.int32)
+            )
+            self._consume_batch(keys, cb)
+        self._close_carry()
+        self._drained = True
+
+    def _consume_batch(self, keys: np.ndarray, cb: ColumnBatch) -> None:
+        run_keys, starts, lengths = vecops.run_boundaries(keys)
+        n_runs = len(run_keys)
+        # merge first run into carry if it continues the open group
+        first_complete = 0
+        if self._carry.key is not None and n_runs and int(run_keys[0]) == self._carry.key:
+            self._merge_into_carry(cb, keys, 0, int(lengths[0]))
+            first_complete = 1
+            if n_runs > 1:
+                # the carried group is now provably complete
+                self._close_carry()
+        elif self._carry.key is not None and n_runs:
+            self._close_carry()
+        # all complete runs except possibly the last (it may span boundary)
+        for i in range(first_complete, n_runs):
+            is_last = i == n_runs - 1
+            s, ln = int(starts[i]), int(lengths[i])
+            if is_last:
+                self._carry = _AggState(key=int(run_keys[i]))
+                self._merge_into_carry(cb, keys, s, ln)
+            else:
+                self._carry = _AggState(key=int(run_keys[i]))
+                self._merge_into_carry(cb, keys, s, ln)
+                self._close_carry()
+
+    def _merge_into_carry(self, cb: ColumnBatch, keys: np.ndarray, s: int, ln: int) -> None:
+        c = self._carry
+        if c.sums is None:
+            c.sums, c.mins, c.maxs = {}, {}, {}
+            c.counts, c.distinct = {}, {}
+        c.count += ln
+        for ai, a in enumerate(self.aggs):
+            if a.var is None:  # COUNT(*)
+                continue
+            codes = cb.column(a.var)[s : s + ln]
+            if a.distinct:
+                c.distinct.setdefault(ai, set()).update(np.unique(codes).tolist())
+                continue
+            vals = self.dictionary.numeric_of(codes)
+            ok = ~np.isnan(vals)
+            v = vals[ok]
+            c.counts[ai] = c.counts.get(ai, 0.0) + float(ok.sum())
+            if len(v):
+                c.sums[ai] = c.sums.get(ai, 0.0) + float(v.sum())
+                c.mins[ai] = min(c.mins.get(ai, np.inf), float(v.min()))
+                c.maxs[ai] = max(c.maxs.get(ai, -np.inf), float(v.max()))
+
+    def _close_carry(self) -> None:
+        c = self._carry
+        if c.key is None and c.count == 0:
+            return
+        self._out_keys.append(c.key if c.key is not None else 0)
+        for ai, a in enumerate(self.aggs):
+            if a.func == "count" and a.var is None:
+                val = c.count
+            elif a.distinct:
+                val = float(len((c.distinct or {}).get(ai, set())))
+            elif a.func == "count":
+                val = (c.counts or {}).get(ai, 0.0)
+            elif a.func == "sum":
+                val = (c.sums or {}).get(ai, 0.0)
+            elif a.func == "min":
+                val = (c.mins or {}).get(ai, np.nan)
+            elif a.func == "max":
+                val = (c.maxs or {}).get(ai, np.nan)
+            elif a.func == "avg":
+                cnt = (c.counts or {}).get(ai, 0.0)
+                val = (c.sums or {}).get(ai, 0.0) / cnt if cnt else np.nan
+            else:
+                raise ValueError(a.func)
+            self._out_vals[ai].append(val)
+        self._carry = _AggState()
+
+    # -- emission ----------------------------------------------------------------
+
+    def _next(self) -> Optional[ColumnBatch]:
+        if not self._drained:
+            self._consume_all()
+            if self.g is None and not self._out_keys:
+                # global aggregate over empty input still yields one row
+                self._carry = _AggState(key=0)
+                self._carry.count = 0.0
+                self._close_carry()
+        n = len(self._out_keys)
+        if self._emitted >= n:
+            return None
+        hi = min(self._emitted + self.batch_size, n)
+        sl = slice(self._emitted, hi)
+        cols = []
+        if self.g is not None:
+            cols.append(np.asarray(self._out_keys[sl], dtype=np.int32))
+        for ai, a in enumerate(self.aggs):
+            vals = self._out_vals[ai][sl]
+            codes = [
+                self.dictionary.encode(
+                    int(v) if a.func == "count" or a.distinct or float(v).is_integer() else float(v)
+                )
+                for v in vals
+            ]
+            cols.append(np.asarray(codes, dtype=np.int32))
+        self._emitted = hi
+        return ColumnBatch.from_columns(self.var_ids(), cols, self.g)
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._out_keys = []
+        self._out_vals = [[] for _ in self.aggs]
+        self._carry = _AggState()
+        self._emitted = 0
+        self._drained = False
+
+
+class SortGroupBy(BatchOperator):
+    """General GROUP BY (multi-var or unsorted input): materialize, sort by
+    group keys, delegate to the streaming operator over a composite key."""
+
+    def __init__(
+        self,
+        child: BatchOperator,
+        group_vars: Sequence[int],
+        aggs: Sequence[AggSpec],
+        dictionary: Dictionary,
+        batch_size: int = MAX_BATCH,
+    ):
+        self.child = child
+        self.group_vars = tuple(group_vars)
+        self.aggs = list(aggs)
+        self.dictionary = dictionary
+        self.batch_size = batch_size
+        self._src: Optional[BatchOperator] = None
+        super().__init__("Group", f"by={self.group_vars} (sort-based)")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.group_vars + tuple(a.out for a in self.aggs)
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]
+
+    def _ensure(self) -> BatchOperator:
+        if self._src is not None:
+            return self._src
+        vars_, cols = materialize(self.child)
+        n = cols.shape[1]
+        key_cols = [cols[vars_.index(v)] for v in self.group_vars]
+        order = np.lexsort(tuple(reversed(key_cols))) if key_cols else np.arange(n)
+        cols = cols[:, order]
+        key_cols = [cols[vars_.index(v)] for v in self.group_vars]
+        # composite group id: run boundaries across all key columns
+        if n:
+            change = np.zeros(n, dtype=bool)
+            change[0] = True
+            for kc in key_cols:
+                change[1:] |= kc[1:] != kc[:-1]
+            gid = np.cumsum(change).astype(np.int32) - 1
+        else:
+            gid = np.zeros(0, dtype=np.int32)
+
+        inner_src = MaterializedSource(
+            vars_ + (-1,),
+            np.concatenate([cols, gid[None, :]], axis=0),
+            -1,
+            self.batch_size,
+            name="GroupSortBuffer",
+        )
+        stream = StreamingGroupBy(
+            inner_src, -1, self.aggs, self.dictionary, self.batch_size
+        )
+        # drain stream, then translate composite gid back to the key columns
+        svars, scols = materialize(stream)
+        gids = scols[0]
+        first_row = np.zeros(len(gids), dtype=np.int64)
+        if n:
+            starts = np.nonzero(change)[0]
+            first_row = starts[gids]
+        out_cols = [kc[first_row] for kc in key_cols]
+        for ai in range(len(self.aggs)):
+            out_cols.append(scols[1 + ai])
+        block = (
+            np.stack(out_cols, axis=0)
+            if out_cols
+            else np.zeros((0, 0), dtype=np.int32)
+        )
+        self._src = MaterializedSource(
+            self.var_ids(), block.astype(np.int32), None, self.batch_size, name="GroupOut"
+        )
+        return self._src
+
+    def _next(self) -> Optional[ColumnBatch]:
+        return self._ensure().next_batch()
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._src = None
+
+
+class StreamingDistinct(BatchOperator):
+    """DISTINCT over input sorted by its (single) visible variable, using
+    skip() to scroll past duplicates in storage (paper §3.3)."""
+
+    def __init__(self, child: BatchOperator, var: int, use_skip: bool = True):
+        assert child.sorted_by() == var
+        self.child = child
+        self.var = var
+        self.use_skip = use_skip and child.supports_skip()
+        self._last: Optional[int] = None
+        super().__init__("Distinct", f"(?v{var}) streaming")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return (self.var,)
+
+    def sorted_by(self) -> Optional[int]:
+        return self.var
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]
+
+    def _next(self) -> Optional[ColumnBatch]:
+        while True:
+            b = self.child.next_batch()
+            if b is None:
+                return None
+            cb = b.compact().project((self.var,))
+            if cb.n_rows == 0:
+                continue
+            keys = cb.column(self.var)
+            run_keys, starts, _ = vecops.run_boundaries(keys)
+            if self._last is not None:
+                keep = run_keys != self._last
+                run_keys, starts = run_keys[keep], starts[keep]
+            if len(run_keys) == 0:
+                continue
+            self._last = int(run_keys[-1])
+            if self.use_skip:
+                # scroll the child past the last seen value
+                self.child.skip(self.var, self._last + 1)
+            return ColumnBatch.from_columns((self.var,), [run_keys], self.var)
+
+    def _skip(self, var: int, target: int) -> None:
+        self.child.skip(var, target)
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._last = None
+
+
+class SortDistinct(BatchOperator):
+    """General DISTINCT: materialize + unique rows (sort-based)."""
+
+    def __init__(self, child: BatchOperator, batch_size: int = MAX_BATCH):
+        self.child = child
+        self.batch_size = batch_size
+        self._src: Optional[MaterializedSource] = None
+        super().__init__("Distinct", "(sort-based)")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]
+
+    def _ensure(self) -> MaterializedSource:
+        if self._src is None:
+            vars_, cols = materialize(self.child)
+            uniq = np.unique(cols.T, axis=0).T if cols.shape[1] else cols
+            sb = vars_[0] if len(vars_) == 1 and uniq.shape[1] else None
+            self._src = MaterializedSource(
+                vars_, uniq.astype(np.int32), sb, self.batch_size, name="DistinctBuffer"
+            )
+        return self._src
+
+    def _next(self) -> Optional[ColumnBatch]:
+        return self._ensure().next_batch()
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._src = None

@@ -1,0 +1,107 @@
+"""Vector Volcano operator API (paper §3.1).
+
+Each operator pulls *batches* from its children via ``next_batch()`` and may
+reposition sorted children via ``skip()`` — BARQ's distinguishing addition to
+the vectorized pull model. ``reset()`` restarts iteration (used by the legacy
+bind join and by tests). Operators expose per-operator runtime statistics so
+the profiler can print Listing-1/3/5-style plans.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+from repro.core.batch import ColumnBatch
+
+
+class OpStats:
+    __slots__ = (
+        "name",
+        "detail",
+        "results",
+        "batches",
+        "next_calls",
+        "skip_calls",
+        "reset_calls",
+        "wall_time",
+        "rows_scanned",
+    )
+
+    def __init__(self, name: str, detail: str = "") -> None:
+        self.name = name
+        self.detail = detail
+        self.results = 0  # output rows (active)
+        self.batches = 0  # output batches
+        self.next_calls = 0  # next() calls received
+        self.skip_calls = 0  # skip() calls received
+        self.reset_calls = 0
+        self.wall_time = 0.0  # seconds spent inside this operator (self+children)
+        self.rows_scanned = 0  # storage rows read (scans only; overfetch metric)
+
+
+class BatchOperator:
+    """Base class: pull-based batch iteration with skip support."""
+
+    def __init__(self, name: str, detail: str = "") -> None:
+        self.stats = OpStats(name, detail)
+
+    # -- public API (wrapped for stats) --------------------------------------
+
+    def next_batch(self) -> Optional[ColumnBatch]:
+        self.stats.next_calls += 1
+        t0 = time.perf_counter()
+        b = self._next()
+        self.stats.wall_time += time.perf_counter() - t0
+        if b is not None:
+            self.stats.batches += 1
+            self.stats.results += b.n_active
+        return b
+
+    def skip(self, var: int, target: int) -> None:
+        """Reposition so subsequent batches only contain rows with
+        column ``var`` >= ``target``. Only valid if ``sorted_by() == var``."""
+        self.stats.skip_calls += 1
+        t0 = time.perf_counter()
+        self._skip(var, target)
+        self.stats.wall_time += time.perf_counter() - t0
+
+    def reset(self) -> None:
+        self.stats.reset_calls += 1
+        self._reset()
+
+    # -- metadata -------------------------------------------------------------
+
+    def var_ids(self) -> Tuple[int, ...]:
+        raise NotImplementedError
+
+    def sorted_by(self) -> Optional[int]:
+        return None
+
+    def supports_skip(self) -> bool:
+        return self.sorted_by() is not None
+
+    def children(self) -> List["BatchOperator"]:
+        return []
+
+    # -- implementation hooks ---------------------------------------------------
+
+    def _next(self) -> Optional[ColumnBatch]:
+        raise NotImplementedError
+
+    def _skip(self, var: int, target: int) -> None:
+        raise NotImplementedError(f"{self.stats.name} does not support skip()")
+
+    def _reset(self) -> None:
+        raise NotImplementedError
+
+    # -- convenience --------------------------------------------------------------
+
+    def drain(self) -> List[ColumnBatch]:
+        out = []
+        while True:
+            b = self.next_batch()
+            if b is None:
+                return out
+            if b.n_active:
+                out.append(b)

@@ -1,0 +1,136 @@
+"""Index scan operator: evaluates one triple pattern over a sorted index.
+
+Produces columnar batches sorted by the first free role of the chosen index
+order. Supports ``skip()`` on that role (the storage seek), drives the
+adaptive batch sizer from the received next()/skip() pattern (paper §3.4),
+and counts rows read from storage so benchmarks can report overfetching.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.adaptive import AdaptiveBatchSizer
+from repro.core.algebra import K, TriplePattern, V
+from repro.core.batch import ColumnBatch
+from repro.core.operators.base import BatchOperator
+from repro.core.storage import INDEX_ORDERS, QuadStore, ScanRange
+
+_ROLE_NAMES = ("s", "p", "o", "g")
+
+
+class IndexScan(BatchOperator):
+    def __init__(
+        self,
+        store: QuadStore,
+        pattern: TriplePattern,
+        want_sorted_var: Optional[int] = None,
+        sizer: Optional[AdaptiveBatchSizer] = None,
+        detail: str = "",
+    ) -> None:
+        self.store = store
+        self.pattern = pattern
+
+        # encode constant slots; a constant not present in the dictionary
+        # means the pattern matches nothing
+        self._dead = False
+        bound: List[Optional[int]] = [None, None, None, None]
+        slots = (pattern.s, pattern.p, pattern.o, pattern.g)
+        for role, sl in enumerate(slots):
+            if isinstance(sl, K):
+                tid = store.dict.lookup(sl.term)
+                if tid is None:
+                    self._dead = True
+                    tid = -1
+                bound[role] = tid
+        self.bound = bound
+
+        # free roles and their variables; repeated vars inside one pattern
+        # (e.g. ?x :p ?x) add a residual equality mask
+        self.role_of_var: Dict[int, int] = {}
+        self.residual_pairs: List[Tuple[int, int]] = []  # (role_a, role_b)
+        for role, sl in enumerate(slots):
+            if isinstance(sl, V):
+                if sl.id in self.role_of_var:
+                    self.residual_pairs.append((self.role_of_var[sl.id], role))
+                else:
+                    self.role_of_var[sl.id] = role
+
+        want_role = self.role_of_var.get(want_sorted_var) if want_sorted_var is not None else None
+        self.index = store.choose_index(bound, want_role)
+        self.perm = INDEX_ORDERS[self.index]
+
+        # column position (within the index order) of each output variable
+        self._var_ids = tuple(self.role_of_var)
+        self.var_col_pos = {
+            v: self.perm.index(self.role_of_var[v]) for v in self._var_ids
+        }
+        # sortedness: the first free position in the index order
+        n_bound = 0
+        while n_bound < 4 and bound[self.perm[n_bound]] is not None:
+            n_bound += 1
+        self._sort_col_pos = n_bound if n_bound < 4 else None
+        self._sorted_var: Optional[int] = None
+        if self._sort_col_pos is not None:
+            role = self.perm[self._sort_col_pos]
+            for v, r in self.role_of_var.items():
+                if r == role:
+                    self._sorted_var = v
+
+        self.range: ScanRange = (
+            ScanRange(self.index, 0, 0)
+            if self._dead
+            else store.range_for_pattern(self.index, bound)
+        )
+        self.offset = 0
+        self.sizer = sizer or AdaptiveBatchSizer()
+        super().__init__("Scan", detail or self._describe())
+
+    def _describe(self) -> str:
+        parts = []
+        slots = (self.pattern.s, self.pattern.p, self.pattern.o)
+        for sl in slots:
+            parts.append(f"?v{sl.id}" if isinstance(sl, V) else str(sl.term))
+        return f"({', '.join(parts)}) [{self.index}]"
+
+    # -- operator API -----------------------------------------------------------
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self._var_ids
+
+    def sorted_by(self) -> Optional[int]:
+        return self._sorted_var
+
+    def _next(self) -> Optional[ColumnBatch]:
+        if self.offset >= len(self.range):
+            return None
+        count = self.sizer.on_next()
+        rows = self.store.read(self.range, self.offset, count)
+        self.offset += len(rows)
+        self.stats.rows_scanned += len(rows)
+        cols = [rows[:, self.var_col_pos[v]] for v in self._var_ids]
+        b = ColumnBatch.from_columns(self._var_ids, cols, self._sorted_var)
+        for ra, rb in self.residual_pairs:
+            pa, pb = self.perm.index(ra), self.perm.index(rb)
+            m = np.zeros(b.capacity, dtype=bool)
+            m[: b.n_rows] = rows[:, pa] == rows[:, pb]
+            b = b.with_mask(m)
+        return b
+
+    def _skip(self, var: int, target: int) -> None:
+        if var != self._sorted_var or self._sort_col_pos is None:
+            raise ValueError("skip on unsorted variable")
+        self.sizer.on_skip()
+        self.offset = self.store.seek(
+            self.range, self.offset, self._sort_col_pos, target
+        )
+
+    def _reset(self) -> None:
+        self.offset = 0
+        self.sizer.on_reset()
+
+    # cardinality for the planner
+    def estimated_rows(self) -> int:
+        return len(self.range)

@@ -1,0 +1,205 @@
+"""Filter, Project, Extend (BIND), Slice, Union — vectorized unary/binary ops.
+
+FILTER is the showcase selection-vector consumer (paper §3.1): it reads only
+the referenced columns, evaluates the expression vectorized, and *updates the
+mask* — no copying, batches stay alive longer. All-inactive batches are
+discarded (the batch-pool case the paper mentions) by fetching the next one.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.algebra import Expr
+from repro.core.batch import NULL_ID, ColumnBatch, concat_batches
+from repro.core.dictionary import Dictionary
+from repro.core.expressions import eval_expr_mask, eval_expr_values
+from repro.core.operators.base import BatchOperator
+
+
+class FilterOp(BatchOperator):
+    def __init__(self, child: BatchOperator, expr: Expr, dictionary: Optional[Dictionary]):
+        self.child = child
+        self.expr = expr
+        self.dictionary = dictionary
+        super().__init__("Filter", "")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def sorted_by(self) -> Optional[int]:
+        return self.child.sorted_by()  # filtering preserves order
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]
+
+    def _next(self) -> Optional[ColumnBatch]:
+        while True:
+            b = self.child.next_batch()
+            if b is None:
+                return None
+            b = b.with_mask(eval_expr_mask(self.expr, b, self.dictionary))
+            if b.n_active:
+                return b
+            # all rows inactive: discard batch, keep pulling
+
+    def _skip(self, var: int, target: int) -> None:
+        self.child.skip(var, target)
+
+    def _reset(self) -> None:
+        self.child.reset()
+
+
+class ProjectOp(BatchOperator):
+    def __init__(self, child: BatchOperator, keep: Tuple[int, ...]):
+        self.child = child
+        self.keep = tuple(keep)
+        super().__init__("Project", f"{len(keep)} vars")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.keep
+
+    def sorted_by(self) -> Optional[int]:
+        sb = self.child.sorted_by()
+        return sb if sb in self.keep else None
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]
+
+    def _next(self) -> Optional[ColumnBatch]:
+        b = self.child.next_batch()
+        return None if b is None else b.project(self.keep)
+
+    def _skip(self, var: int, target: int) -> None:
+        self.child.skip(var, target)
+
+    def _reset(self) -> None:
+        self.child.reset()
+
+
+class ExtendOp(BatchOperator):
+    """BIND (expr AS ?v): computes the value expression vectorized over the
+    batch, dictionary-encodes the distinct results, appends a column."""
+
+    def __init__(self, child: BatchOperator, var: int, expr: Expr, dictionary: Dictionary):
+        self.child = child
+        self.var = var
+        self.expr = expr
+        self.dictionary = dictionary
+        super().__init__("Bind", f"?v{var}")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids() + (self.var,)
+
+    def sorted_by(self) -> Optional[int]:
+        return self.child.sorted_by()
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]
+
+    def _next(self) -> Optional[ColumnBatch]:
+        b = self.child.next_batch()
+        if b is None:
+            return None
+        vals, ok = eval_expr_values(self.expr, b, self.dictionary)
+        codes = np.full(b.capacity, NULL_ID, dtype=np.int32)
+        n = b.n_rows
+        # encode the few distinct computed values, map back vectorized
+        uniq, inv = np.unique(vals[:n][ok[:n]], return_inverse=True)
+        uniq_ids = np.asarray(
+            [self.dictionary.encode(float(u)) for u in uniq], dtype=np.int32
+        )
+        tmp = np.full(n, NULL_ID, dtype=np.int32)
+        if len(uniq):
+            tmp[ok[:n]] = uniq_ids[inv]
+        codes[:n] = tmp
+        cols = np.concatenate([b.columns, codes[None, :]], axis=0)
+        return ColumnBatch(self.var_ids(), cols, b.mask, b.n_rows, b.sorted_by)
+
+    def _reset(self) -> None:
+        self.child.reset()
+
+
+class SliceOp(BatchOperator):
+    """LIMIT/OFFSET over active rows."""
+
+    def __init__(self, child: BatchOperator, limit: Optional[int], offset: int = 0):
+        self.child = child
+        self.limit = limit
+        self.offset = offset
+        self._seen = 0
+        self._emitted = 0
+        super().__init__("Slice", f"limit={limit} offset={offset}")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def sorted_by(self) -> Optional[int]:
+        return self.child.sorted_by()
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]
+
+    def _next(self) -> Optional[ColumnBatch]:
+        while True:
+            if self.limit is not None and self._emitted >= self.limit:
+                return None
+            b = self.child.next_batch()
+            if b is None:
+                return None
+            sel = b.selection_vector()
+            n = len(sel)
+            lo = max(0, self.offset - self._seen)
+            self._seen += n
+            keep = sel[lo:]
+            if self.limit is not None:
+                keep = keep[: self.limit - self._emitted]
+            if len(keep) == 0:
+                continue
+            m = np.zeros(b.capacity, dtype=bool)
+            m[keep] = True
+            self._emitted += len(keep)
+            return ColumnBatch(b.var_ids, b.columns, m, b.n_rows, b.sorted_by)
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._seen = 0
+        self._emitted = 0
+
+
+class UnionOp(BatchOperator):
+    def __init__(self, left: BatchOperator, right: BatchOperator):
+        self.left = left
+        self.right = right
+        lv = tuple(left.var_ids())
+        self._vars = lv + tuple(v for v in right.var_ids() if v not in lv)
+        self._on_right = False
+        super().__init__("Union", "")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self._vars
+
+    def children(self) -> List[BatchOperator]:
+        return [self.left, self.right]
+
+    def _next(self) -> Optional[ColumnBatch]:
+        while True:
+            src = self.right if self._on_right else self.left
+            b = src.next_batch()
+            if b is None:
+                if self._on_right:
+                    return None
+                self._on_right = True
+                continue
+            if set(b.var_ids) == set(self._vars):
+                # cheap path: same schema, reorder columns only
+                order = [b.col_index(v) for v in self._vars]
+                return ColumnBatch(self._vars, b.columns[order], b.mask, b.n_rows, None)
+            return concat_batches([b], self._vars)
+
+    def _reset(self) -> None:
+        self.left.reset()
+        self.right.reset()
+        self._on_right = False

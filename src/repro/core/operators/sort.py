@@ -1,0 +1,184 @@
+"""Sort (ORDER BY / join-input re-sort) and materialized sources.
+
+Sort is the canonical pipeline breaker: it materializes its whole input
+(the adaptive batch sizer of upstream scans therefore ramps to the cap,
+paper §3.4), sorts columnar, and re-emits batches. Two key orders:
+
+  * code order  — for join inputs (dictionary codes are what merge joins
+    compare; paper §2.2.1);
+  * value order — for ORDER BY semantics, via the numeric side-array
+    (NaN/non-numeric terms order after numerics, by code).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.algebra import SortKey
+from repro.core.batch import MAX_BATCH, ColumnBatch
+from repro.core.dictionary import Dictionary
+from repro.core.operators.base import BatchOperator
+from repro.core.vecops import sorted_search
+
+
+class MaterializedSource(BatchOperator):
+    """Emit a fully-materialized (n_vars, n) column block as batches.
+    Supports skip() when sorted — this is what lets a sorted spill/sort
+    result feed straight back into merge joins (paper §4.2: 'the output of
+    a per-row operator, once sorted, can be read back as a stream of
+    batches')."""
+
+    def __init__(
+        self,
+        var_ids: Sequence[int],
+        cols: np.ndarray,
+        sorted_var: Optional[int] = None,
+        batch_size: int = MAX_BATCH,
+        name: str = "Materialized",
+    ):
+        self._vars = tuple(int(v) for v in var_ids)
+        self.cols = cols
+        self._sorted_var = sorted_var
+        self.batch_size = batch_size
+        self.offset = 0
+        super().__init__(name, f"{cols.shape[1]} rows")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self._vars
+
+    def sorted_by(self) -> Optional[int]:
+        return self._sorted_var
+
+    def _next(self) -> Optional[ColumnBatch]:
+        n = self.cols.shape[1]
+        if self.offset >= n:
+            return None
+        hi = min(self.offset + self.batch_size, n)
+        block = self.cols[:, self.offset : hi]
+        self.offset = hi
+        return ColumnBatch.from_columns(
+            self._vars, [block[i] for i in range(block.shape[0])], self._sorted_var
+        )
+
+    def _skip(self, var: int, target: int) -> None:
+        if var != self._sorted_var:
+            raise ValueError("skip on unsorted var")
+        key_col = self.cols[self._vars.index(var)]
+        pos = int(sorted_search(key_col[self.offset :], np.asarray([target]))[0])
+        self.offset += pos
+
+    def _reset(self) -> None:
+        self.offset = 0
+
+
+def materialize(child: BatchOperator) -> Tuple[Tuple[int, ...], np.ndarray]:
+    """Drain a child into one (n_vars, n) compacted block."""
+    vars_ = tuple(child.var_ids())
+    blocks = []
+    while True:
+        b = child.next_batch()
+        if b is None:
+            break
+        cb = b.compact()
+        if cb.n_rows:
+            order = [cb.col_index(v) for v in vars_]
+            blocks.append(cb.columns[order, : cb.n_rows])
+    if blocks:
+        return vars_, np.concatenate(blocks, axis=1)
+    return vars_, np.zeros((len(vars_), 0), dtype=np.int32)
+
+
+class SortByVarOp(BatchOperator):
+    """Re-sort by one variable's *code* so a merge join can consume the
+    stream (the Sort(?person2) in the paper's Listing 1)."""
+
+    def __init__(self, child: BatchOperator, var: int, batch_size: int = MAX_BATCH):
+        self.child = child
+        self.var = var
+        self.batch_size = batch_size
+        self._src: Optional[MaterializedSource] = None
+        super().__init__("Sort", f"(?v{var})")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def sorted_by(self) -> Optional[int]:
+        return self.var
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]
+
+    def _ensure(self) -> MaterializedSource:
+        if self._src is None:
+            vars_, cols = materialize(self.child)
+            key = cols[vars_.index(self.var)]
+            order = np.argsort(key, kind="stable")
+            self._src = MaterializedSource(
+                vars_, cols[:, order], self.var, self.batch_size, name="SortBuffer"
+            )
+        return self._src
+
+    def _next(self) -> Optional[ColumnBatch]:
+        return self._ensure().next_batch()
+
+    def _skip(self, var: int, target: int) -> None:
+        self._ensure().skip(var, target)
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._src = None
+
+
+class OrderByOp(BatchOperator):
+    """ORDER BY over term values (numeric side-array; DESIGN.md §7)."""
+
+    def __init__(
+        self,
+        child: BatchOperator,
+        keys: Sequence[SortKey],
+        dictionary: Dictionary,
+        batch_size: int = MAX_BATCH,
+    ):
+        self.child = child
+        self.keys = list(keys)
+        self.dictionary = dictionary
+        self.batch_size = batch_size
+        self._src: Optional[MaterializedSource] = None
+        super().__init__("OrderBy", ",".join(f"?v{k.var}" for k in keys))
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]
+
+    def _ensure(self) -> MaterializedSource:
+        if self._src is None:
+            vars_, cols = materialize(self.child)
+            # lexsort: last key = primary
+            sort_cols = []
+            for k in reversed(self.keys):
+                codes = cols[vars_.index(k.var)]
+                vals = self.dictionary.numeric_of(codes)
+                nan = np.isnan(vals)
+                # numeric first (by value), then non-numeric by code
+                primary = np.where(nan, np.inf, vals)
+                tiebreak = np.where(nan, codes, 0)
+                if not k.ascending:
+                    primary = np.where(nan, np.inf, -vals)
+                    tiebreak = np.where(nan, -codes.astype(np.int64), 0)
+                sort_cols.extend([tiebreak, primary])
+            order = np.lexsort(sort_cols) if sort_cols else np.arange(cols.shape[1])
+            self._src = MaterializedSource(
+                vars_, cols[:, order], None, self.batch_size, name="OrderBuffer"
+            )
+        return self._src
+
+    def _next(self) -> Optional[ColumnBatch]:
+        return self._ensure().next_batch()
+
+    def _reset(self) -> None:
+        self.child.reset()
+        self._src = None

@@ -1,0 +1,390 @@
+"""Recursive-descent parser for the SPARQL subset scoped in DESIGN.md §7.
+
+Supports: SELECT (DISTINCT) with projection / aggregates / expressions-as,
+WHERE groups with triple patterns (',' ';' '.' shorthand), FILTER, OPTIONAL,
+MINUS, UNION, BIND, GROUP BY, ORDER BY (ASC/DESC), LIMIT/OFFSET, and the
+'a' keyword for rdf:type. Terms: prefixed names (:p, rdf:type), <iri>,
+numeric literals, "string" literals. Produces the algebra of
+repro.core.algebra.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import List, Optional, Tuple
+
+from repro.core import algebra as A
+
+_TOKEN_RE = re.compile(
+    r"""
+    (?P<WS>\s+|\#[^\n]*)
+  | (?P<IRI><[^>]*>)
+  | (?P<STRING>"(?:[^"\\]|\\.)*")
+  | (?P<NUM>[+-]?\d+\.\d*(?:[eE][+-]?\d+)?|[+-]?\.?\d+(?:[eE][+-]?\d+)?)
+  | (?P<VAR>[?$][A-Za-z_][A-Za-z0-9_]*)
+  | (?P<PNAME>[A-Za-z_][A-Za-z0-9_\-]*)?:(?:[A-Za-z0-9_\-.]*[A-Za-z0-9_\-])?
+  | (?P<KW>[A-Za-z][A-Za-z0-9_]*)
+  | (?P<OP>\|\||&&|!=|<=|>=|[{}().,;*/+\-=<>!])
+    """,
+    re.VERBOSE,
+)
+
+_KEYWORDS = {
+    "select", "distinct", "where", "filter", "optional", "minus", "union",
+    "bind", "as", "group", "by", "order", "asc", "desc", "limit", "offset",
+    "count", "sum", "min", "max", "avg", "a", "bound", "having", "not", "exists",
+}
+
+
+class Token:
+    def __init__(self, kind: str, value: str, pos: int):
+        self.kind = kind
+        self.value = value
+        self.pos = pos
+
+    def __repr__(self):
+        return f"Token({self.kind},{self.value!r})"
+
+
+def tokenize(text: str) -> List[Token]:
+    out, pos = [], 0
+    while pos < len(text):
+        m = _TOKEN_RE.match(text, pos)
+        if not m:
+            raise SyntaxError(f"cannot tokenize at {text[pos:pos+20]!r}")
+        pos = m.end()
+        kind = m.lastgroup
+        if kind == "WS":
+            continue
+        val = m.group()
+        if kind == "KW" and val.lower() not in _KEYWORDS:
+            # bare word in term position — treat as prefixed name w/o colon
+            kind = "PNAME"
+        out.append(Token(kind or "PNAME", val, m.start()))
+    out.append(Token("EOF", "", len(text)))
+    return out
+
+
+class Parser:
+    def __init__(self, text: str):
+        self.toks = tokenize(text)
+        self.i = 0
+        self.vt = A.VarTable()
+
+    # -- token helpers ------------------------------------------------------------
+
+    def peek(self, k: int = 0) -> Token:
+        return self.toks[min(self.i + k, len(self.toks) - 1)]
+
+    def next(self) -> Token:
+        t = self.toks[self.i]
+        self.i += 1
+        return t
+
+    def accept_kw(self, word: str) -> bool:
+        t = self.peek()
+        if t.kind == "KW" and t.value.lower() == word:
+            self.next()
+            return True
+        return False
+
+    def expect_kw(self, word: str) -> None:
+        if not self.accept_kw(word):
+            raise SyntaxError(f"expected {word.upper()} at {self.peek().value!r}")
+
+    def accept_op(self, op: str) -> bool:
+        t = self.peek()
+        if t.kind == "OP" and t.value == op:
+            self.next()
+            return True
+        return False
+
+    def expect_op(self, op: str) -> None:
+        if not self.accept_op(op):
+            raise SyntaxError(f"expected {op!r} at {self.peek().value!r}")
+
+    # -- entry --------------------------------------------------------------------
+
+    def parse(self) -> Tuple[A.PlanNode, A.VarTable]:
+        self.expect_kw("select")
+        distinct = self.accept_kw("distinct")
+        proj_vars: List[int] = []
+        aggs: List[A.AggSpec] = []
+        binds: List[Tuple[int, A.Expr]] = []
+        select_all = False
+        while True:
+            t = self.peek()
+            if t.kind == "VAR":
+                proj_vars.append(self.vt.var(self.next().value))
+            elif t.kind == "OP" and t.value == "*":
+                self.next()
+                select_all = True
+            elif t.kind == "OP" and t.value == "(":
+                self.next()
+                agg = self._try_aggregate()
+                if agg is not None:
+                    func, var, dist = agg
+                    self.expect_kw("as")
+                    out = self.vt.var(self.next().value)
+                    aggs.append(A.AggSpec(func, var, dist, out))
+                    proj_vars.append(out)
+                else:
+                    e = self._expr()
+                    self.expect_kw("as")
+                    out = self.vt.var(self.next().value)
+                    binds.append((out, e))
+                    proj_vars.append(out)
+                self.expect_op(")")
+            else:
+                break
+        self.accept_kw("where")
+        body = self._group_graph_pattern()
+
+        group_vars: List[int] = []
+        if self.accept_kw("group"):
+            self.expect_kw("by")
+            while self.peek().kind == "VAR":
+                group_vars.append(self.vt.var(self.next().value))
+
+        order_keys: List[A.SortKey] = []
+        if self.accept_kw("order"):
+            self.expect_kw("by")
+            while True:
+                if self.accept_kw("asc"):
+                    self.expect_op("(")
+                    order_keys.append(A.SortKey(self.vt.var(self.next().value), True))
+                    self.expect_op(")")
+                elif self.accept_kw("desc"):
+                    self.expect_op("(")
+                    order_keys.append(A.SortKey(self.vt.var(self.next().value), False))
+                    self.expect_op(")")
+                elif self.peek().kind == "VAR":
+                    order_keys.append(A.SortKey(self.vt.var(self.next().value), True))
+                else:
+                    break
+
+        limit = offset = None
+        # LIMIT/OFFSET in any order
+        for _ in range(2):
+            if self.accept_kw("limit"):
+                limit = int(self.next().value)
+            elif self.accept_kw("offset"):
+                offset = int(self.next().value)
+
+        node: A.PlanNode = body
+        for out, e in binds:
+            node = A.Extend(out, e, node)
+        if aggs or group_vars:
+            node = A.GroupAgg(group_vars, aggs, node)
+            if not proj_vars:
+                proj_vars = group_vars + [a.out for a in aggs]
+        if select_all or not proj_vars:
+            proj_vars = list(A.plan_vars(node))
+        node = A.Project(proj_vars, node)
+        if distinct:
+            node = A.Distinct(node)
+        if order_keys:
+            node = A.OrderBy(order_keys, node)
+        if limit is not None or offset is not None:
+            node = A.Slice(node, limit, offset or 0)
+        if self.peek().kind != "EOF":
+            raise SyntaxError(f"trailing input at {self.peek().value!r}")
+        return node, self.vt
+
+    def _try_aggregate(self) -> Optional[Tuple[str, Optional[int], bool]]:
+        t = self.peek()
+        if t.kind == "KW" and t.value.lower() in ("count", "sum", "min", "max", "avg"):
+            func = self.next().value.lower()
+            self.expect_op("(")
+            dist = self.accept_kw("distinct")
+            if self.accept_op("*"):
+                var = None
+            else:
+                var = self.vt.var(self.next().value)
+            self.expect_op(")")
+            return func, var, dist
+        return None
+
+    # -- graph patterns ----------------------------------------------------------------
+
+    def _group_graph_pattern(self) -> A.PlanNode:
+        self.expect_op("{")
+        node: Optional[A.PlanNode] = None
+        triples: List[A.TriplePattern] = []
+        filters: List[A.Expr] = []
+
+        def flush() -> None:
+            nonlocal node, triples
+            if triples:
+                bgp = A.BGP(triples)
+                node = bgp if node is None else A.Join(node, bgp)
+                triples = []
+
+        while not self.accept_op("}"):
+            t = self.peek()
+            if t.kind == "KW" and t.value.lower() == "filter":
+                self.next()
+                if self.accept_kw("not"):
+                    self.expect_kw("exists")
+                    flush()
+                    sub = self._group_graph_pattern()
+                    node = A.Minus(node, sub) if node is not None else sub
+                else:
+                    self.expect_op("(")
+                    filters.append(self._expr())
+                    self.expect_op(")")
+            elif t.kind == "KW" and t.value.lower() == "optional":
+                self.next()
+                flush()
+                sub = self._group_graph_pattern()
+                # SPARQL: a FILTER inside OPTIONAL is the left-join
+                # *condition* (it may reference left-side vars), not a
+                # filter on the optional pattern alone
+                expr = None
+                if isinstance(sub, A.Filter):
+                    expr, sub = sub.expr, sub.child
+                node = (
+                    A.LeftJoin(node, sub, expr) if node is not None else sub
+                )
+            elif t.kind == "KW" and t.value.lower() == "minus":
+                self.next()
+                flush()
+                sub = self._group_graph_pattern()
+                node = A.Minus(node, sub) if node is not None else sub
+            elif t.kind == "KW" and t.value.lower() == "bind":
+                self.next()
+                self.expect_op("(")
+                e = self._expr()
+                self.expect_kw("as")
+                v = self.vt.var(self.next().value)
+                self.expect_op(")")
+                flush()
+                base = node if node is not None else A.BGP([])
+                node = A.Extend(v, e, base)
+            elif t.kind == "OP" and t.value == "{":
+                flush()
+                sub = self._group_graph_pattern()
+                while self.accept_kw("union"):
+                    sub2 = self._group_graph_pattern()
+                    sub = A.Union(sub, sub2)
+                node = sub if node is None else A.Join(node, sub)
+            else:
+                triples.extend(self._triples_same_subject())
+                self.accept_op(".")
+        flush()
+        if node is None:
+            node = A.BGP([])
+        for f in filters:
+            node = A.Filter(f, node)
+        return node
+
+    def _triples_same_subject(self) -> List[A.TriplePattern]:
+        s = self._slot()
+        out = []
+        while True:
+            p = self._slot(predicate=True)
+            path = ""
+            if isinstance(p, A.K) and self.accept_op("+"):
+                path = "+"
+            while True:
+                o = self._slot()
+                out.append(A.TriplePattern(s, p, o, path=path))
+                if not self.accept_op(","):
+                    break
+            if not self.accept_op(";"):
+                break
+            if self.peek().kind == "OP" and self.peek().value in (".", "}"):
+                break
+        return out
+
+    def _slot(self, predicate: bool = False) -> A.Slot:
+        t = self.next()
+        if t.kind == "VAR":
+            return A.V(self.vt.var(t.value))
+        if t.kind == "KW" and t.value == "a" and predicate:
+            return A.K("rdf:type")
+        if t.kind in ("PNAME", "IRI"):
+            return A.K(t.value)
+        if t.kind == "NUM":
+            v = float(t.value)
+            return A.K(int(v) if v.is_integer() else v)
+        if t.kind == "STRING":
+            return A.K(t.value)
+        raise SyntaxError(f"unexpected term {t.value!r}")
+
+    # -- expressions ----------------------------------------------------------------
+
+    def _expr(self) -> A.Expr:
+        return self._or()
+
+    def _or(self) -> A.Expr:
+        terms = [self._and()]
+        while self.accept_op("||"):
+            terms.append(self._and())
+        return terms[0] if len(terms) == 1 else A.Or(tuple(terms))
+
+    def _and(self) -> A.Expr:
+        terms = [self._cmp()]
+        while self.accept_op("&&"):
+            terms.append(self._cmp())
+        return terms[0] if len(terms) == 1 else A.And(tuple(terms))
+
+    def _cmp(self) -> A.Expr:
+        lhs = self._add()
+        t = self.peek()
+        if t.kind == "OP" and t.value in ("=", "!=", "<", "<=", ">", ">="):
+            op = self.next().value
+            rhs = self._add()
+            return A.Cmp(op, lhs, rhs)
+        return lhs
+
+    def _add(self) -> A.Expr:
+        lhs = self._mul()
+        while True:
+            t = self.peek()
+            if t.kind == "OP" and t.value in ("+", "-"):
+                op = self.next().value
+                lhs = A.Arith(op, lhs, self._mul())
+            else:
+                return lhs
+
+    def _mul(self) -> A.Expr:
+        lhs = self._unary()
+        while True:
+            t = self.peek()
+            if t.kind == "OP" and t.value in ("*", "/"):
+                op = self.next().value
+                lhs = A.Arith(op, lhs, self._unary())
+            else:
+                return lhs
+
+    def _unary(self) -> A.Expr:
+        if self.accept_op("!"):
+            return A.Not(self._unary())
+        return self._primary()
+
+    def _primary(self) -> A.Expr:
+        t = self.peek()
+        if t.kind == "OP" and t.value == "(":
+            self.next()
+            e = self._expr()
+            self.expect_op(")")
+            return e
+        if t.kind == "KW" and t.value.lower() == "bound":
+            self.next()
+            self.expect_op("(")
+            v = self.vt.var(self.next().value)
+            self.expect_op(")")
+            return A.Bound(v)
+        if t.kind == "VAR":
+            return A.VarRef(self.vt.var(self.next().value))
+        if t.kind == "NUM":
+            v = float(self.next().value)
+            return A.Lit(int(v) if v.is_integer() else v)
+        if t.kind in ("PNAME", "IRI", "STRING"):
+            return A.Lit(self.next().value)
+        raise SyntaxError(f"unexpected expression token {t.value!r}")
+
+
+def parse_query(text: str) -> Tuple[A.PlanNode, A.VarTable]:
+    return Parser(text).parse()

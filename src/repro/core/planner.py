@@ -1,0 +1,491 @@
+"""Cost-based query planner: logical → physical plans (paper §2.2.2, §4.2).
+
+The planner keeps the paper's architecture: ONE optimizer and cost model for
+both executors. Join ordering is greedy smallest-expansion-first over the
+System-R containment estimate; physical selection prefers merge joins
+(sorted indexes make them nearly free, §2.2.1), inserting Sort pipeline
+breakers otherwise, or a LookupJoin when the build side is small.
+
+The single BARQ-awareness concession the paper describes (§4.2 Component
+Isolation) is reproduced: merge joins expected to produce substantially
+more results than either input ('amplifying joins') get a lower cost when
+BARQ is enabled, because most of their work happens in-memory inside the
+join. The flag flips plan choice exactly the way Listing 4 vs Listing 1
+differ (bind-join plan for the legacy engine, pure merge-join plan for
+BARQ).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union as TUnion
+
+from repro.core import algebra as A
+from repro.core.stats import GraphStats
+
+# ---------------------------------------------------------------------------
+# physical plan nodes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PhysNode:
+    est_rows: float = dataclasses.field(default=0.0, init=False)
+
+
+@dataclasses.dataclass
+class PScan(PhysNode):
+    pattern: A.TriplePattern
+    sort_var: Optional[int]  # variable the scan should come out sorted by
+
+
+@dataclasses.dataclass
+class PPathScan(PhysNode):
+    """Transitive property path ?s :p+ ?o — row-based only (paper §4)."""
+
+    pattern: A.TriplePattern  # path == '+', constant predicate
+
+
+@dataclasses.dataclass
+class PSort(PhysNode):
+    child: "Phys"
+    var: int
+
+
+@dataclasses.dataclass
+class PMergeJoin(PhysNode):
+    left: "Phys"
+    right: "Phys"
+    var: int
+    mode: str = "inner"
+    post_filter: Optional[A.Expr] = None
+    amplifying: bool = False  # output >> inputs: the BARQ sweet spot
+
+
+@dataclasses.dataclass
+class PLookupJoin(PhysNode):
+    probe: "Phys"
+    build: "Phys"
+    var: int
+    mode: str = "inner"
+
+
+@dataclasses.dataclass
+class PCross(PhysNode):
+    left: "Phys"
+    right: "Phys"
+
+
+@dataclasses.dataclass
+class PFilter(PhysNode):
+    expr: A.Expr
+    child: "Phys"
+
+
+@dataclasses.dataclass
+class PExtend(PhysNode):
+    var: int
+    expr: A.Expr
+    child: "Phys"
+
+
+@dataclasses.dataclass
+class PProject(PhysNode):
+    vars: Tuple[int, ...]
+    child: "Phys"
+
+
+@dataclasses.dataclass
+class PDistinct(PhysNode):
+    child: "Phys"
+    streaming_var: Optional[int]  # set => DISTINCT-via-skip applies
+
+
+@dataclasses.dataclass
+class PGroup(PhysNode):
+    child: "Phys"
+    group_vars: Tuple[int, ...]
+    aggs: Tuple[A.AggSpec, ...]
+    streaming: bool  # single sorted group var
+
+
+@dataclasses.dataclass
+class POrderBy(PhysNode):
+    child: "Phys"
+    keys: Tuple[A.SortKey, ...]
+
+
+@dataclasses.dataclass
+class PSlice(PhysNode):
+    child: "Phys"
+    limit: Optional[int]
+    offset: int
+
+
+@dataclasses.dataclass
+class PUnion(PhysNode):
+    left: "Phys"
+    right: "Phys"
+
+
+Phys = TUnion[
+    PScan, PSort, PMergeJoin, PLookupJoin, PCross, PFilter, PExtend,
+    PProject, PDistinct, PGroup, POrderBy, PSlice, PUnion,
+]
+
+
+def phys_vars(n: Phys) -> Tuple[int, ...]:
+    if isinstance(n, (PScan, PPathScan)):
+        return n.pattern.vars()
+    if isinstance(n, (PSort, PFilter, PSlice)):
+        return phys_vars(n.child)
+    if isinstance(n, PDistinct):
+        return phys_vars(n.child)
+    if isinstance(n, PExtend):
+        return tuple(dict.fromkeys(phys_vars(n.child) + (n.var,)))
+    if isinstance(n, PProject):
+        return n.vars
+    if isinstance(n, PMergeJoin):
+        lv = phys_vars(n.left)
+        if n.mode in ("semi", "anti"):
+            return lv
+        return tuple(dict.fromkeys(lv + phys_vars(n.right)))
+    if isinstance(n, PLookupJoin):
+        lv = phys_vars(n.probe)
+        if n.mode in ("semi", "anti"):
+            return lv
+        return tuple(dict.fromkeys(lv + phys_vars(n.build)))
+    if isinstance(n, (PCross, PUnion)):
+        return tuple(dict.fromkeys(phys_vars(n.left) + phys_vars(n.right)))
+    if isinstance(n, PGroup):
+        return n.group_vars + tuple(a.out for a in n.aggs)
+    if isinstance(n, POrderBy):
+        return phys_vars(n.child)
+    raise TypeError(type(n))
+
+
+def phys_sorted_by(n: Phys) -> Optional[int]:
+    if isinstance(n, PScan):
+        return n.sort_var
+    if isinstance(n, PPathScan):
+        return n.pattern.s.id if isinstance(n.pattern.s, A.V) else None
+    if isinstance(n, PSort):
+        return n.var
+    if isinstance(n, PMergeJoin):
+        return None if n.mode == "left_outer" else n.var
+    if isinstance(n, PLookupJoin):
+        return phys_sorted_by(n.probe)
+    if isinstance(n, (PFilter, PSlice)):
+        return phys_sorted_by(n.child)
+    if isinstance(n, PExtend):
+        return phys_sorted_by(n.child)
+    if isinstance(n, PProject):
+        sb = phys_sorted_by(n.child)
+        return sb if sb in n.vars else None
+    if isinstance(n, PDistinct):
+        return n.streaming_var or (
+            phys_vars(n.child)[0] if len(phys_vars(n.child)) == 1 else None
+        )
+    if isinstance(n, PGroup):
+        return n.group_vars[0] if n.streaming and n.group_vars else None
+    return None
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+
+class Planner:
+    def __init__(self, stats: GraphStats, barq_enabled: bool = True):
+        self.stats = stats
+        # §4.2: the one cost-model tweak — amplifying merge joins get cheaper
+        # when BARQ executes them
+        self.barq_enabled = barq_enabled
+
+    # -- public -------------------------------------------------------------------
+
+    def plan(self, node: A.PlanNode) -> Phys:
+        return self._plan(node)
+
+    # -- logical dispatch -------------------------------------------------------------
+
+    def _plan(self, node: A.PlanNode) -> Phys:
+        if isinstance(node, A.BGP):
+            return self._plan_bgp(node.patterns, [])
+        if isinstance(node, A.Filter):
+            # push filters into BGP join ordering when possible (§2.2.2)
+            if isinstance(node.child, A.BGP):
+                return self._plan_bgp(node.child.patterns, [node.expr])
+            child = self._plan(node.child)
+            out = PFilter(node.expr, child)
+            out.est_rows = child.est_rows * 0.5
+            return out
+        if isinstance(node, A.Join):
+            return self._plan_binary_join(node.left, node.right, "inner", None)
+        if isinstance(node, A.LeftJoin):
+            return self._plan_binary_join(node.left, node.right, "left_outer", node.expr)
+        if isinstance(node, A.Minus):
+            return self._plan_binary_join(node.left, node.right, "anti", None)
+        if isinstance(node, A.Union):
+            l, r = self._plan(node.left), self._plan(node.right)
+            out = PUnion(l, r)
+            out.est_rows = l.est_rows + r.est_rows
+            return out
+        if isinstance(node, A.Extend):
+            child = self._plan(node.child)
+            out = PExtend(node.var, node.expr, child)
+            out.est_rows = child.est_rows
+            return out
+        if isinstance(node, A.Project):
+            child = self._plan(node.child)
+            out = PProject(tuple(node.vars), child)
+            out.est_rows = child.est_rows
+            return out
+        if isinstance(node, A.Distinct):
+            child = self._plan(node.child)
+            cvars = phys_vars(child)
+            sv = None
+            if len(cvars) == 1 and phys_sorted_by(child) == cvars[0]:
+                sv = cvars[0]
+            out = PDistinct(child, sv)
+            out.est_rows = max(child.est_rows * 0.5, 1)
+            return out
+        if isinstance(node, A.GroupAgg):
+            child = self._plan(node.child)
+            gv = tuple(node.group_vars)
+            streaming = (len(gv) == 1 and phys_sorted_by(child) == gv[0]) or len(gv) == 0
+            # resort to enable streaming aggregation when cheap (§3.3)
+            if len(gv) == 1 and not streaming:
+                child = PSort(child, gv[0])
+                child.est_rows = child.child.est_rows
+                streaming = True
+            out = PGroup(child, gv, tuple(node.aggs), streaming)
+            out.est_rows = max(child.est_rows * 0.1, 1)
+            return out
+        if isinstance(node, A.OrderBy):
+            child = self._plan(node.child)
+            out = POrderBy(child, tuple(node.keys))
+            out.est_rows = child.est_rows
+            return out
+        if isinstance(node, A.Slice):
+            child = self._plan(node.child)
+            out = PSlice(child, node.limit, node.offset)
+            out.est_rows = min(
+                child.est_rows, node.limit if node.limit is not None else child.est_rows
+            )
+            return out
+        raise TypeError(f"cannot plan {type(node)}")
+
+    # -- BGP join ordering (greedy System-R style) ---------------------------------------
+
+    def _plan_bgp(self, patterns: Sequence[A.TriplePattern], filters: List[A.Expr]) -> Phys:
+        assert patterns
+        remaining = list(patterns)
+        # closure multiplier for transitive paths (heuristic: ~3 hops deep)
+        cards = {
+            id(p): max(self.stats.pattern_cardinality(p), 0)
+            * (3 if p.path == "+" else 1)
+            for p in remaining
+        }
+        # start from the most selective pattern
+        first = min(remaining, key=lambda p: cards[id(p)])
+        remaining.remove(first)
+        current: Phys = self._leaf(first)
+        current.est_rows = cards[id(first)]
+        current_vars = set(first.vars())
+        pending_filters = list(filters)
+
+        while remaining:
+            # pick the joinable pattern with the smallest estimated output
+            best, best_est, best_var = None, None, None
+            for p in remaining:
+                shared = [v for v in p.vars() if v in current_vars]
+                if not shared:
+                    continue
+                jv = self._choose_join_var(current, p, shared)
+                d_a = self._distinct_estimate(current, jv)
+                d_b = self.stats.distinct_values(p, jv)
+                est = self.stats.join_cardinality(
+                    max(int(current.est_rows), 1), cards[id(p)], d_a, d_b
+                )
+                if self.barq_enabled and est > 4 * max(current.est_rows, cards[id(p)]):
+                    # §4.2: amplifying merge joins are cheaper under BARQ
+                    est *= 0.5
+                if best_est is None or est < best_est:
+                    best, best_est, best_var = p, est, jv
+            if best is None:
+                # disconnected: cartesian with the smallest remaining pattern
+                best = min(remaining, key=lambda p: cards[id(p)])
+                remaining.remove(best)
+                rhs: Phys = self._leaf(best)
+                rhs.est_rows = cards[id(best)]
+                current = PCross(current, rhs)
+                current.est_rows = current.left.est_rows * rhs.est_rows
+                current_vars |= set(best.vars())
+            else:
+                remaining.remove(best)
+                current = self._make_join(current, best, best_var, best_est)
+                current_vars |= set(best.vars())
+            current, pending_filters = self._apply_ready_filters(
+                current, current_vars, pending_filters
+            )
+
+        for f in pending_filters:
+            current = PFilter(f, current)
+            current.est_rows = current.child.est_rows * 0.5
+        return current
+
+    def _apply_ready_filters(self, current: Phys, cvars: set, filters: List[A.Expr]):
+        ready = [f for f in filters if set(A.expr_vars(f)) <= cvars]
+        rest = [f for f in filters if f not in ready]
+        for f in ready:
+            nxt = PFilter(f, current)
+            nxt.est_rows = current.est_rows * 0.5
+            current = nxt
+        return current, rest
+
+    def _choose_join_var(self, current: Phys, p: A.TriplePattern, shared: List[int]) -> int:
+        # prefer the current plan's existing sort var to avoid a re-sort
+        sb = phys_sorted_by(current)
+        if sb in shared:
+            return sb
+        return shared[0]
+
+    def _distinct_estimate(self, n: Phys, var: int) -> int:
+        if isinstance(n, PScan):
+            return self.stats.distinct_values(n.pattern, var)
+        return max(int(n.est_rows ** 0.5), 1)
+
+    def _leaf(self, p: A.TriplePattern, sort_var: Optional[int] = None) -> Phys:
+        if p.path == "+":
+            assert isinstance(p.p, A.K), "property paths need a constant predicate"
+            return PPathScan(p)
+        return PScan(p, sort_var)
+
+    def _make_join(self, left: Phys, p: A.TriplePattern, jv: int, est: float) -> Phys:
+        right: Phys = self._leaf(p, jv)
+        right.est_rows = self.stats.pattern_cardinality(p) * (3 if p.path == "+" else 1)
+        if phys_sorted_by(right) != jv:
+            s = PSort(right, jv)
+            s.est_rows = right.est_rows
+            right = s
+        left_sorted = phys_sorted_by(left) == jv
+        if not left_sorted:
+            if left.est_rows <= 4096 and isinstance(left, (PScan, PFilter)):
+                # small unsorted left: lookup-join into the scan instead
+                out = PLookupJoin(probe=right, build=left, var=jv)
+                out.est_rows = est
+                return out
+            left = PSort(left, jv)
+            left.est_rows = left.child.est_rows
+        join = PMergeJoin(left, right, jv)
+        join.est_rows = est
+        join.amplifying = est > 4 * max(left.est_rows, right.est_rows)
+        return join
+
+    # -- generic binary joins (OPTIONAL / MINUS / subplans) -------------------------------
+
+    def _plan_binary_join(
+        self,
+        lnode: A.PlanNode,
+        rnode: A.PlanNode,
+        mode: str,
+        expr: Optional[A.Expr],
+    ) -> Phys:
+        left = self._plan(lnode)
+        right = self._plan(rnode)
+        lv, rv = phys_vars(left), phys_vars(right)
+        shared = [v for v in lv if v in rv]
+        if not shared:
+            if mode == "inner":
+                out = PCross(left, right)
+                out.est_rows = left.est_rows * right.est_rows
+                return out
+            if mode == "anti":
+                # MINUS with disjoint domains keeps everything
+                return left
+            # left_outer without shared vars: cross with NULL fallback ~ cross
+            out = PCross(left, right)
+            out.est_rows = max(left.est_rows, left.est_rows * right.est_rows)
+            return out
+        jv = shared[0]
+        if phys_sorted_by(left) == jv:
+            pass
+        else:
+            s = PSort(left, jv)
+            s.est_rows = left.est_rows
+            left = s
+        if phys_sorted_by(right) != jv:
+            s = PSort(right, jv)
+            s.est_rows = right.est_rows
+            right = s
+        out = PMergeJoin(left, right, jv, mode=mode, post_filter=expr)
+        d = max(int(max(left.est_rows, 1) ** 0.5), 1)
+        out.est_rows = self.stats.join_cardinality(
+            max(int(left.est_rows), 1), max(int(right.est_rows), 1), d, d
+        )
+        if mode in ("semi", "anti"):
+            out.est_rows = left.est_rows * 0.5
+        return out
+
+
+def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) -> str:
+    pad = "  " * indent
+
+    def vname(v):
+        return f"?{var_table.name(v)}" if var_table else f"?v{v}"
+
+    if isinstance(n, PScan):
+        t = []
+        for sl in (n.pattern.s, n.pattern.p, n.pattern.o):
+            t.append(vname(sl.id) if isinstance(sl, A.V) else str(sl.term))
+        return f"{pad}Scan({', '.join(t)}) est={n.est_rows:.0f}"
+    if isinstance(n, PSort):
+        return f"{pad}Sort({vname(n.var)})\n" + explain(n.child, var_table, indent + 1)
+    if isinstance(n, PMergeJoin):
+        amp = " AMPLIFYING" if n.amplifying else ""
+        return (
+            f"{pad}MergeJoin({vname(n.var)}, {n.mode}){amp} est={n.est_rows:.0f}\n"
+            + explain(n.left, var_table, indent + 1)
+            + "\n"
+            + explain(n.right, var_table, indent + 1)
+        )
+    if isinstance(n, PLookupJoin):
+        return (
+            f"{pad}LookupJoin({vname(n.var)}, {n.mode}) est={n.est_rows:.0f}\n"
+            + explain(n.probe, var_table, indent + 1)
+            + "\n"
+            + explain(n.build, var_table, indent + 1)
+        )
+    if isinstance(n, PCross):
+        return (
+            f"{pad}Cross est={n.est_rows:.0f}\n"
+            + explain(n.left, var_table, indent + 1)
+            + "\n"
+            + explain(n.right, var_table, indent + 1)
+        )
+    if isinstance(n, PFilter):
+        return f"{pad}Filter est={n.est_rows:.0f}\n" + explain(n.child, var_table, indent + 1)
+    if isinstance(n, PExtend):
+        return f"{pad}Bind({vname(n.var)})\n" + explain(n.child, var_table, indent + 1)
+    if isinstance(n, PProject):
+        return f"{pad}Project\n" + explain(n.child, var_table, indent + 1)
+    if isinstance(n, PDistinct):
+        kind = "streaming" if n.streaming_var is not None else "sort"
+        return f"{pad}Distinct[{kind}]\n" + explain(n.child, var_table, indent + 1)
+    if isinstance(n, PGroup):
+        kind = "streaming" if n.streaming else "sort"
+        return f"{pad}Group[{kind}]\n" + explain(n.child, var_table, indent + 1)
+    if isinstance(n, POrderBy):
+        return f"{pad}OrderBy\n" + explain(n.child, var_table, indent + 1)
+    if isinstance(n, PSlice):
+        return f"{pad}Slice\n" + explain(n.child, var_table, indent + 1)
+    if isinstance(n, PUnion):
+        return (
+            f"{pad}Union\n"
+            + explain(n.left, var_table, indent + 1)
+            + "\n"
+            + explain(n.right, var_table, indent + 1)
+        )
+    return f"{pad}{type(n).__name__}"

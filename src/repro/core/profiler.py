@@ -1,0 +1,75 @@
+"""Query profiler — Listing 1/3/5-style operator-tree reports.
+
+One reason the paper picked vectorization over code generation is that the
+operator tree stays observable (§3.1). Both engines' operators carry
+OpStats; this walker prints results, batches, next/skip call counts, rows
+scanned from storage (the overfetch metric of §3.4) and wall-time shares.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.algebra import VarTable
+
+
+def _fmt_count(n: float) -> str:
+    if n >= 1e9:
+        return f"{n / 1e9:.1f}B"
+    if n >= 1e6:
+        return f"{n / 1e6:.1f}M"
+    if n >= 1e3:
+        return f"{n / 1e3:.1f}K"
+    return str(int(n))
+
+
+def profile_tree(root, var_table: VarTable = None) -> str:
+    total = max(root.stats.wall_time, 1e-12)
+    lines: List[str] = []
+
+    def walk(op, prefix: str, is_last: bool, is_root: bool) -> None:
+        s = op.stats
+        head = "" if is_root else ("'- " if is_last else "+- ")
+        detail = s.detail
+        if var_table is not None:
+            for vid, name in enumerate(var_table.id_to_name):
+                detail = detail.replace(f"?v{vid}", f"?{name}")
+        parts = [f"{s.name}{detail}", f"results: {_fmt_count(s.results)}"]
+        if s.batches:
+            parts.append(f"batches: {_fmt_count(s.batches)}")
+        parts.append(f"next: {_fmt_count(s.next_calls)}")
+        if s.skip_calls:
+            parts.append(f"skip: {_fmt_count(s.skip_calls)}")
+        if s.rows_scanned:
+            parts.append(f"scanned: {_fmt_count(s.rows_scanned)}")
+        parts.append(f"wall: {100.0 * s.wall_time / total:.1f}%")
+        lines.append(prefix + head + ", ".join(parts))
+        kids = op.children()
+        child_prefix = prefix if is_root else prefix + ("   " if is_last else "|  ")
+        for i, c in enumerate(kids):
+            walk(c, child_prefix, i == len(kids) - 1, False)
+
+    walk(root, "", True, True)
+    return "\n".join(lines)
+
+
+def collect_stats(root) -> dict:
+    """Aggregate tree stats for benchmark reporting."""
+    agg = {
+        "total_results": root.stats.results,
+        "rows_scanned": 0,
+        "next_calls": 0,
+        "skip_calls": 0,
+        "operators": 0,
+    }
+
+    def walk(op):
+        agg["operators"] += 1
+        agg["rows_scanned"] += op.stats.rows_scanned
+        agg["next_calls"] += op.stats.next_calls
+        agg["skip_calls"] += op.stats.skip_calls
+        for c in op.children():
+            walk(c)
+
+    walk(root)
+    return agg

@@ -1,0 +1,188 @@
+"""Vectorized data-plane primitives — numpy reference backend.
+
+Every per-batch computation in the BARQ operators funnels through these
+functions. They have three interchangeable implementations:
+
+  * this module — numpy, the engine's default CPU backend and the oracle;
+  * ``repro.kernels.ref`` — pure-jnp mirrors (jit-compiled);
+  * ``repro.kernels.*`` — Pallas TPU kernels (validated in interpret mode).
+
+``repro.kernels.ops`` dispatches between them. Operators never hand-roll
+per-row loops — that is the point of the paper.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# run / group detection (merge-join Probe phase, paper §3.2)
+# ---------------------------------------------------------------------------
+
+
+def run_boundaries(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Runs of equal values in a sorted key column.
+
+    Returns (values, starts, lengths): values[i] is the key of run i which
+    occupies keys[starts[i] : starts[i] + lengths[i]].
+    """
+    n = len(keys)
+    if n == 0:
+        e = np.zeros(0, dtype=np.int32)
+        return e, e, e
+    is_start = np.empty(n, dtype=bool)
+    is_start[0] = True
+    np.not_equal(keys[1:], keys[:-1], out=is_start[1:])
+    starts = np.nonzero(is_start)[0].astype(np.int32)
+    lengths = np.diff(np.append(starts, n)).astype(np.int32)
+    return keys[starts].astype(np.int32), starts, lengths
+
+
+def probe_groups(
+    lvals: np.ndarray,
+    rvals: np.ndarray,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Match left runs against right runs by key (both sorted ascending,
+    values unique within each side). Returns (left_run_idx, right_run_idx)
+    for every matching pair — the paper's 'input groups'."""
+    pos = np.searchsorted(rvals, lvals, side="left")
+    pos_c = np.minimum(pos, max(len(rvals) - 1, 0))
+    hit = (len(rvals) > 0) & (rvals[pos_c] == lvals) if len(rvals) else np.zeros(
+        len(lvals), dtype=bool
+    )
+    li = np.nonzero(hit)[0].astype(np.int32)
+    return li, pos[li].astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# cross-product materialization (merge-join Build phase, paper §3.2)
+# ---------------------------------------------------------------------------
+
+
+def group_output_offsets(
+    llens: np.ndarray, rlens: np.ndarray
+) -> np.ndarray:
+    """cum[i] = total output rows of groups < i; cum[-1] = grand total.
+    Output rows of group g = left_len[g] * right_len[g] (cross product)."""
+    counts = llens.astype(np.int64) * rlens.astype(np.int64)
+    return np.concatenate([[0], np.cumsum(counts)])
+
+
+def expand_cross(
+    lstarts: np.ndarray,
+    llens: np.ndarray,
+    rstarts: np.ndarray,
+    rlens: np.ndarray,
+    cum: np.ndarray,
+    base: int,
+    count: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Materialize output slots [base, base+count) of the grouped cross
+    product as (left_row_idx, right_row_idx) gather indices.
+
+    For global output slot t: find its group g (binary search over cum),
+    within-group offset w = t - cum[g]; then
+        left_row  = lstarts[g] + w // rlens[g]     (left expanded)
+        right_row = rstarts[g] + w %  rlens[g]     (right repeated)
+    — exactly the paper's 'expand left by right range length, repeat right
+    by left range length', computed slot-parallel so the TPU kernel is a
+    pure map over the output block.
+    """
+    t = base + np.arange(count, dtype=np.int64)
+    g = np.searchsorted(cum, t, side="right") - 1
+    w = t - cum[g]
+    rl = rlens[g].astype(np.int64)
+    li = lstarts[g] + (w // rl).astype(np.int32)
+    ri = rstarts[g] + (w % rl).astype(np.int32)
+    return li.astype(np.int32), ri.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# sorted search (vectorized skip()/seek, paper §3.2 Skip phase)
+# ---------------------------------------------------------------------------
+
+
+def sorted_search(keys: np.ndarray, queries: np.ndarray, side: str = "left") -> np.ndarray:
+    """Positions of ``queries`` in sorted ``keys`` (galloping seek)."""
+    return np.searchsorted(keys, queries, side=side).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# selection-vector ops (paper §3.1)
+# ---------------------------------------------------------------------------
+
+
+def compact_indices(mask: np.ndarray) -> np.ndarray:
+    """Selection vector from validity mask (prefix-sum compaction)."""
+    return np.nonzero(mask)[0].astype(np.int32)
+
+
+def multiway_equal_mask(cols_l: np.ndarray, cols_r: np.ndarray) -> np.ndarray:
+    """Vectorized secondary-join-key equality (paper §3.2 Multiple Join
+    Keys): rows where every secondary key pair matches."""
+    return np.all(cols_l == cols_r, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# sorted segment aggregation (paper §3.3)
+# ---------------------------------------------------------------------------
+
+AGG_INIT = {
+    "count": 0.0,
+    "sum": 0.0,
+    "min": np.inf,
+    "max": -np.inf,
+}
+
+
+def segment_reduce(
+    keys: np.ndarray,
+    values: Optional[np.ndarray],
+    func: str,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-run aggregate over a batch sorted by ``keys``.
+
+    Returns (run_keys, partials). ``values`` is float64 (already decoded via
+    the numeric side-array) or None for COUNT(*). Associative partials merge
+    across batches in the streaming operator (paper: count/min/max/avg are
+    associative and merge across batches).
+    """
+    run_keys, starts, lengths = run_boundaries(keys)
+    n_runs = len(run_keys)
+    if n_runs == 0:
+        return run_keys, np.zeros(0)
+    seg_ids = np.repeat(np.arange(n_runs), lengths)
+    if func == "count":
+        return run_keys, lengths.astype(np.float64)
+    assert values is not None
+    if func == "sum":
+        out = np.zeros(n_runs)
+        np.add.at(out, seg_ids, values)
+    elif func == "min":
+        out = np.full(n_runs, np.inf)
+        np.minimum.at(out, seg_ids, values)
+    elif func == "max":
+        out = np.full(n_runs, -np.inf)
+        np.maximum.at(out, seg_ids, values)
+    else:
+        raise ValueError(func)
+    return run_keys, out
+
+
+# ---------------------------------------------------------------------------
+# hash partitioning (distributed exchange; DESIGN.md §2.1)
+# ---------------------------------------------------------------------------
+
+_HASH_MULT = np.uint32(0x9E3779B1)  # Fibonacci hashing
+
+
+def hash_partition(keys: np.ndarray, n_parts: int) -> np.ndarray:
+    """Multiplicative-hash partition id per key (n_parts power of two)."""
+    h = (keys.astype(np.uint32) * _HASH_MULT) >> np.uint32(16)
+    return (h & np.uint32(n_parts - 1)).astype(np.int32)
+
+
+def partition_histogram(part_ids: np.ndarray, n_parts: int) -> np.ndarray:
+    return np.bincount(part_ids, minlength=n_parts).astype(np.int32)

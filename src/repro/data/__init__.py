@@ -1,0 +1,7 @@
+from repro.data.lsqb import LSQB_QUERIES, generate_social_graph  # noqa: F401
+from repro.data.bsbm import (  # noqa: F401
+    BSBM_BI_QUERIES,
+    BSBM_EXPLORE_TEMPLATES,
+    generate_ecommerce_graph,
+    instantiate_explore,
+)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the engine's compute hot spots (DESIGN.md §2):
+
+    join_expand      — merge-join Build-phase cross-product materialization
+    sorted_search    — vectorized binary search (batched skip()/seek)
+    segment_reduce   — segmented scan for streaming aggregation
+    filter_eval      — fused conjunction predicate masks
+    radix_partition  — distributed-exchange partitioning
+
+``repro.kernels.ops`` dispatches numpy / jnp-ref / pallas-interpret
+backends; ``repro.kernels.ref`` holds the pure-jnp oracles.
+"""

@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: fused vectorized FILTER evaluation (paper §3.1).
+
+Evaluates a conjunction of per-column comparisons (var-vs-var or
+var-vs-constant over dictionary codes) in one pass over the referenced
+columns only, producing the batch's new validity mask — the
+selection-vector update without touching unreferenced columns. The
+predicate spec is static, so each FILTER expression compiles to its own
+fused kernel (the cheap half of the paper's 'compile hot expressions'
+future-work note).
+
+Spec entries: (col_idx, op_code, rhs_col_idx | -1, const); op codes index
+('=', '!=', '<', '<=', '>', '>=').
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+
+
+def _kernel(cols_ref, out_ref, *, spec):
+    cols = cols_ref[...]  # (K, BLOCK)
+    mask = jnp.ones((cols.shape[1],), dtype=jnp.bool_)
+    for col, op, rhs_col, const in spec:
+        a = cols[col]
+        b = cols[rhs_col] if rhs_col >= 0 else jnp.int32(const)
+        m = [a == b, a != b, a < b, a <= b, a > b, a >= b][op]
+        mask = jnp.logical_and(mask, m)
+    out_ref[...] = mask
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def filter_eval_pallas(
+    cols: jax.Array,
+    spec: Tuple[Tuple[int, int, int, int], ...],
+    interpret: bool = True,
+) -> jax.Array:
+    k, n = cols.shape
+    n_pad = pl.cdiv(max(n, 1), BLOCK) * BLOCK
+    cols_p = jnp.zeros((k, n_pad), jnp.int32).at[:, :n].set(cols.astype(jnp.int32))
+    out = pl.pallas_call(
+        functools.partial(_kernel, spec=spec),
+        grid=(n_pad // BLOCK,),
+        in_specs=[pl.BlockSpec((k, BLOCK), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+        interpret=interpret,
+    )(cols_p)
+    return out[:n]

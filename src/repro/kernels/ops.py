@@ -1,0 +1,173 @@
+"""Jit'd public wrappers + backend dispatch for the BARQ kernels.
+
+Backends:
+  numpy  — repro.core.vecops (CPU default, the engine's data plane here);
+  jax    — repro.kernels.ref jnp mirrors (jit; what XLA-TPU would run
+           without custom kernels);
+  pallas — the Pallas TPU kernels, executed in interpret mode on CPU
+           (validated against both other backends in tests/test_kernels.py).
+
+Select globally with REPRO_KERNEL_BACKEND or per call with backend=...
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import vecops
+
+_DEFAULT = os.environ.get("REPRO_KERNEL_BACKEND", "numpy")
+
+
+def _backend(override: Optional[str]) -> str:
+    return override or _DEFAULT
+
+
+# -- join_expand ---------------------------------------------------------------
+
+
+def join_expand(
+    lstarts, llens, rstarts, rlens, cum, base: int, count: int,
+    backend: Optional[str] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    be = _backend(backend)
+    if be == "numpy":
+        return vecops.expand_cross(lstarts, llens, rstarts, rlens, cum, base, count)
+    if be == "jax":
+        from repro.kernels import ref
+
+        li, ri = ref.join_expand(lstarts, llens, rstarts, rlens, cum, base, count)
+        return np.asarray(li), np.asarray(ri)
+    if be == "pallas":
+        from repro.kernels.join_expand import G_MAX, join_expand_pallas
+
+        if len(lstarts) <= G_MAX:
+            li, ri = join_expand_pallas(
+                lstarts, llens, rstarts, rlens, cum, base, count
+            )
+            return np.asarray(li), np.asarray(ri)
+        # split oversized probes into group chunks
+        lis, ris = [], []
+        emitted = 0
+        g0 = int(np.searchsorted(cum, base, side="right") - 1)
+        while emitted < count:
+            g1 = min(g0 + G_MAX, len(lstarts))
+            chunk_cum = cum[g0 : g1 + 1]
+            avail = int(chunk_cum[-1]) - (base + emitted)
+            take = min(count - emitted, avail)
+            li, ri = join_expand_pallas(
+                lstarts[g0:g1],
+                llens[g0:g1],
+                rstarts[g0:g1],
+                rlens[g0:g1],
+                (chunk_cum - chunk_cum[0]).astype(np.int32),
+                base + emitted - int(chunk_cum[0]),
+                take,
+            )
+            lis.append(np.asarray(li))
+            ris.append(np.asarray(ri))
+            emitted += take
+            g0 = g1
+        return np.concatenate(lis), np.concatenate(ris)
+    raise ValueError(be)
+
+
+# -- sorted_search ---------------------------------------------------------------
+
+
+def sorted_search(keys, queries, side: str = "left", backend: Optional[str] = None):
+    be = _backend(backend)
+    if be == "numpy":
+        return vecops.sorted_search(keys, queries, side)
+    if be == "jax":
+        from repro.kernels import ref
+
+        return np.asarray(ref.sorted_search(keys, queries, side))
+    if be == "pallas":
+        from repro.kernels.sorted_search import sorted_search_pallas
+
+        return np.asarray(sorted_search_pallas(keys, queries, side))
+    raise ValueError(be)
+
+
+# -- segment aggregation ---------------------------------------------------------------
+
+
+def segment_reduce(keys, values, func: str, backend: Optional[str] = None):
+    """(run_keys, per-run aggregates) over sorted keys."""
+    be = _backend(backend)
+    if be == "numpy":
+        return vecops.segment_reduce(keys, values, func)
+    # jax / pallas: segmented scan then pick run ends
+    keys = np.asarray(keys)
+    n = len(keys)
+    if n == 0:
+        return keys.astype(np.int32), np.zeros(0)
+    vals = (
+        np.ones(n, dtype=np.float32)
+        if func == "count" or values is None
+        else np.asarray(values, dtype=np.float32)
+    )
+    op = "sum" if func == "count" else func
+    if be == "jax":
+        from repro.kernels import ref
+
+        scan = np.asarray(ref.segment_scan(keys, vals, op))
+    elif be == "pallas":
+        from repro.kernels.segment_reduce import segment_scan_pallas
+
+        scan = np.asarray(segment_scan_pallas(keys, vals, op))
+    else:
+        raise ValueError(be)
+    run_end = np.empty(n, dtype=bool)
+    run_end[-1] = True
+    run_end[:-1] = keys[1:] != keys[:-1]
+    return keys[run_end].astype(np.int32), scan[run_end].astype(np.float64)
+
+
+# -- filter ---------------------------------------------------------------
+
+
+def filter_eval(cols, spec, backend: Optional[str] = None):
+    be = _backend(backend)
+    if be == "numpy":
+        mask = np.ones(cols.shape[1], dtype=bool)
+        for col, op, rhs_col, const in spec:
+            a = cols[col]
+            b = cols[rhs_col] if rhs_col >= 0 else np.int32(const)
+            m = [a == b, a != b, a < b, a <= b, a > b, a >= b][op]
+            mask &= m
+        return mask
+    if be == "jax":
+        from repro.kernels import ref
+
+        return np.asarray(ref.filter_eval(cols, tuple(spec)))
+    if be == "pallas":
+        from repro.kernels.filter_eval import filter_eval_pallas
+
+        return np.asarray(filter_eval_pallas(cols, tuple(spec)))
+    raise ValueError(be)
+
+
+# -- radix partition ---------------------------------------------------------------
+
+
+def radix_partition(keys, n_parts: int, backend: Optional[str] = None):
+    be = _backend(backend)
+    if be == "numpy":
+        pid = vecops.hash_partition(np.asarray(keys), n_parts)
+        return pid, vecops.partition_histogram(pid, n_parts)
+    if be == "jax":
+        from repro.kernels import ref
+
+        pid, hist = ref.radix_partition(keys, n_parts)
+        return np.asarray(pid), np.asarray(hist)
+    if be == "pallas":
+        from repro.kernels.radix_partition import radix_partition_pallas
+
+        pid, hist = radix_partition_pallas(keys, n_parts)
+        return np.asarray(pid), np.asarray(hist)
+    raise ValueError(be)

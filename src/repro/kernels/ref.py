@@ -1,0 +1,142 @@
+"""Pure-jnp oracles for every Pallas kernel (jit-compatible, static shapes).
+
+These mirror repro.core.vecops (numpy) semantics exactly, but with the
+static-shape contracts the TPU kernels need:
+
+  * join_expand    — materialize output slots [base, base+C) of a grouped
+                     cross product as (left_idx, right_idx);
+  * sorted_search  — vectorized binary search (the batched skip()/seek);
+  * segment_scan   — segmented inclusive scan over sorted keys (the
+                     building block of streaming aggregation);
+  * filter_eval    — conjunction of per-column comparisons → mask;
+  * radix_partition— multiplicative-hash partition ids + histogram
+                     (the distributed exchange planner).
+
+Every function here is the `ref` side of a tests/test_kernels.py sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_HASH_MULT = jnp.uint32(0x9E3779B1)
+
+
+# ---------------------------------------------------------------------------
+# join_expand
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("count",))
+def join_expand(
+    lstarts: jax.Array,  # (G,) int32
+    llens: jax.Array,  # (G,) int32
+    rstarts: jax.Array,  # (G,) int32
+    rlens: jax.Array,  # (G,) int32
+    cum: jax.Array,  # (G+1,) int64/int32 cumulative output offsets
+    base,  # scalar int
+    count: int,  # static output count
+) -> Tuple[jax.Array, jax.Array]:
+    t = base + jnp.arange(count, dtype=cum.dtype)
+    g = jnp.searchsorted(cum, t, side="right") - 1
+    g = jnp.clip(g, 0, lstarts.shape[0] - 1)
+    w = t - cum[g]
+    rl = jnp.maximum(rlens[g].astype(cum.dtype), 1)
+    li = lstarts[g] + (w // rl).astype(jnp.int32)
+    ri = rstarts[g] + (w % rl).astype(jnp.int32)
+    valid = t < cum[-1]
+    return jnp.where(valid, li, -1).astype(jnp.int32), jnp.where(valid, ri, -1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# sorted_search
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("side",))
+def sorted_search(keys: jax.Array, queries: jax.Array, side: str = "left") -> jax.Array:
+    return jnp.searchsorted(keys, queries, side=side).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# segment_scan (sorted keys)
+# ---------------------------------------------------------------------------
+
+
+_COMBINE = {
+    "sum": jnp.add,
+    "count": jnp.add,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+}
+_IDENT = {"sum": 0.0, "count": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def segment_scan(keys: jax.Array, values: jax.Array, op: str = "sum") -> jax.Array:
+    """Segmented inclusive scan: out[i] = reduce of values over the maximal
+    run of equal keys ending at i. For sorted keys, key[i]==key[i-d] implies
+    the whole span is one run, so a log-step doubling scan is exact."""
+    n = keys.shape[0]
+    combine = _COMBINE[op]
+    out = values.astype(jnp.float32)
+    d = 1
+    while d < n:
+        prev = jnp.concatenate([jnp.full((d,), _IDENT[op], out.dtype), out[:-d]])
+        prev_key = jnp.concatenate([jnp.full((d,), -1, keys.dtype), keys[:-d]])
+        out = jnp.where(keys == prev_key, combine(out, prev), out)
+        d *= 2
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def segment_totals(keys: jax.Array, values: jax.Array, op: str = "sum") -> Tuple[jax.Array, jax.Array]:
+    """(run_end_mask, totals): totals[i] is the full-run aggregate where
+    run_end_mask[i] (i is the last position of its run), else the scan."""
+    scan = segment_scan(keys, values, op)
+    nxt = jnp.concatenate([keys[1:], jnp.full((1,), -1, keys.dtype)])
+    return keys != nxt, scan
+
+
+# ---------------------------------------------------------------------------
+# filter_eval
+# ---------------------------------------------------------------------------
+
+# predicate spec: tuple of (col_idx, op_code, rhs_col_idx_or_-1, const)
+# op codes: 0 '=', 1 '!=', 2 '<', 3 '<=', 4 '>', 5 '>='
+OPS = ("=", "!=", "<", "<=", ">", ">=")
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def filter_eval(cols: jax.Array, spec: Tuple[Tuple[int, int, int, int], ...]) -> jax.Array:
+    """cols: (K, C) int32. Conjunction of comparisons; rhs is another column
+    (rhs_col >= 0) or an int32 constant."""
+    mask = jnp.ones(cols.shape[1], dtype=bool)
+    for col, op, rhs_col, const in spec:
+        a = cols[col]
+        b = cols[rhs_col] if rhs_col >= 0 else jnp.int32(const)
+        m = [
+            a == b, a != b, a < b, a <= b, a > b, a >= b,
+        ][op]
+        mask &= m
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# radix_partition
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_parts",))
+def radix_partition(keys: jax.Array, n_parts: int) -> Tuple[jax.Array, jax.Array]:
+    """(partition_ids, histogram). n_parts must be a power of two."""
+    h = (keys.astype(jnp.uint32) * _HASH_MULT) >> jnp.uint32(16)
+    pid = (h & jnp.uint32(n_parts - 1)).astype(jnp.int32)
+    hist = jnp.sum(
+        jax.nn.one_hot(pid, n_parts, dtype=jnp.int32), axis=0
+    )
+    return pid, hist

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: segmented inclusive scan over sorted keys —
+the vectorized core of streaming aggregation (paper §3.3).
+
+out[i] = reduce(values over the maximal run of equal keys ending at i).
+Within a block: log-step doubling scan (for sorted keys, key[i]==key[i-d]
+implies the whole span is one run, so doubling is exact). Across blocks:
+the TPU grid is sequential, so a VMEM scratch carries (last_key, last_acc)
+— the batch-boundary carry merge the paper describes for associative
+aggregates ('aggregate within a batch and merge the results across
+batches').
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 1024
+_SENTINEL = jnp.iinfo(jnp.int32).min
+_IDENT = {"sum": 0.0, "count": 0.0, "min": float("inf"), "max": float("-inf")}
+_COMBINE = {
+    "sum": jnp.add,
+    "count": jnp.add,
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+}
+
+
+def _kernel(keys_ref, vals_ref, out_ref, carry_key, carry_val, *, op: str):
+    b = pl.program_id(0)
+    keys = keys_ref[...]
+    out = vals_ref[...].astype(jnp.float32)
+    combine = _COMBINE[op]
+    ident = jnp.float32(_IDENT[op])
+
+    # in-block segmented doubling scan
+    d = 1
+    while d < BLOCK:
+        prev = jnp.concatenate([jnp.full((d,), ident, jnp.float32), out[:-d]])
+        prev_key = jnp.concatenate([jnp.full((d,), _SENTINEL, jnp.int32), keys[:-d]])
+        out = jnp.where(keys == prev_key, combine(out, prev), out)
+        d *= 2
+
+    @pl.when(b == 0)
+    def _init():
+        carry_key[0] = jnp.int32(_SENTINEL)
+        carry_val[0] = ident
+
+    # merge the carried run (first run of this block only, keys are sorted)
+    ck, cv = carry_key[0], carry_val[0]
+    out = jnp.where(keys == ck, combine(out, cv), out)
+
+    out_ref[...] = out
+    carry_key[0] = keys[BLOCK - 1]
+    carry_val[0] = out[BLOCK - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("op", "interpret"))
+def segment_scan_pallas(
+    keys: jax.Array, values: jax.Array, op: str = "sum", interpret: bool = True
+) -> jax.Array:
+    n = keys.shape[0]
+    n_pad = pl.cdiv(max(n, 1), BLOCK) * BLOCK
+    keys_p = jnp.full((n_pad,), _SENTINEL + 1, jnp.int32).at[:n].set(
+        keys.astype(jnp.int32)
+    )
+    vals_p = (
+        jnp.full((n_pad,), _IDENT[op], jnp.float32)
+        .at[:n]
+        .set(values.astype(jnp.float32))
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, op=op),
+        grid=(n_pad // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.int32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(keys_p, vals_p)
+    return out[:n]

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: vectorized binary search over sorted keys.
+
+The batch analogue of the storage seek behind skip() (paper §3.2 Skip
+phase) and the probe-side lookup of the LookupJoin. position(q) = number of
+keys < q (side='left') or <= q (side='right'), computed gather-free as a
+comparison-matrix reduction, accumulated across key tiles through output
+revisiting (TPU grids execute sequentially, so the (q_block, key_tile) grid
+accumulates in-place in VMEM).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Q_BLOCK = 512
+K_TILE = 2048
+_PAD_KEY = jnp.iinfo(jnp.int32).max  # never counted
+
+
+def _kernel(keys_ref, q_ref, out_ref, *, left: bool):
+    k_idx = pl.program_id(1)
+    keys = keys_ref[...]  # (K_TILE,)
+    q = q_ref[...]  # (Q_BLOCK,)
+    m = (keys[:, None] < q[None, :]) if left else (keys[:, None] <= q[None, :])
+    counts = jnp.sum(m.astype(jnp.int32), axis=0)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        out_ref[...] = counts
+
+    @pl.when(k_idx != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + counts
+
+
+@functools.partial(jax.jit, static_argnames=("side", "interpret"))
+def sorted_search_pallas(
+    keys: jax.Array, queries: jax.Array, side: str = "left", interpret: bool = True
+) -> jax.Array:
+    n, m = keys.shape[0], queries.shape[0]
+    n_pad = pl.cdiv(max(n, 1), K_TILE) * K_TILE
+    m_pad = pl.cdiv(max(m, 1), Q_BLOCK) * Q_BLOCK
+    keys_p = jnp.full((n_pad,), _PAD_KEY, jnp.int32).at[:n].set(keys.astype(jnp.int32))
+    qs_p = jnp.zeros((m_pad,), jnp.int32).at[:m].set(queries.astype(jnp.int32))
+
+    grid = (m_pad // Q_BLOCK, n_pad // K_TILE)
+    out = pl.pallas_call(
+        functools.partial(_kernel, left=(side == "left")),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((K_TILE,), lambda i, j: (j,)),
+            pl.BlockSpec((Q_BLOCK,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((Q_BLOCK,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m_pad,), jnp.int32),
+        interpret=interpret,
+    )(keys_p, qs_p)
+    return out[:m]

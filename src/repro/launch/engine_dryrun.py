@@ -1,0 +1,100 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512"
+)
+
+"""Dry-run of the BARQ engine's own scale-out path: the distributed
+hash-partitioned join (core/distributed.py) lowered on the production
+meshes — the paper's technique as the workload, alongside the assigned
+architectures.
+
+    PYTHONPATH=src python -m repro.launch.engine_dryrun [--edges 30] \
+        [--cap-factor 2.0] [--mesh single]
+"""  # noqa: E402
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distributed as D
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import collective_bytes, roofline_terms
+
+
+def run(log2_edges: int, cap_factor: float, multi_pod: bool, out_dir: str,
+        tag: str = "") -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    n = 1 << log2_edges
+    prod = make_production_mesh(multi_pod=multi_pod)
+    # the engine runs under a flat view of the same chips (one exchange
+    # group spanning pods — DESIGN.md §2.1)
+    mesh = D.engine_mesh(prod.devices.reshape(-1))
+    chips = int(mesh.devices.size)
+    fn = D.make_join_count(mesh, cap_factor=cap_factor)
+    args = (
+        jax.ShapeDtypeStruct((2, n), jnp.int32),
+        jax.ShapeDtypeStruct((2, n), jnp.int32),
+    )
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    coll = collective_bytes(compiled.as_text())
+    terms = roofline_terms(
+        float(cost.get("flops", 0)),
+        float(cost.get("bytes accessed", 0)),
+        float(coll["total_bytes"]),
+    )
+    rec = dict(
+        arch="barq-dist-join",
+        shape=f"edges_2e{log2_edges}_cf{cap_factor}",
+        mesh=mesh_name,
+        status="ok",
+        n_chips=chips,
+        compile_s=round(time.time() - t0, 2),
+        cost=dict(
+            flops_per_device=float(cost.get("flops", 0)),
+            bytes_per_device=float(cost.get("bytes accessed", 0)),
+        ),
+        memory=dict(
+            argument_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+        ),
+        collectives=coll,
+        roofline=terms,
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    with open(os.path.join(
+            out_dir, f"barq-dist-join__{rec['shape']}__{mesh_name}{suffix}.json"),
+            "w") as f:
+        json.dump(rec, f, indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--edges", type=int, default=30, help="log2 edge count")
+    ap.add_argument("--cap-factor", type=float, default=2.0)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="both")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for m in meshes:
+        rec = run(args.edges, args.cap_factor, m == "multi", args.out, args.tag)
+        rt = rec["roofline"]
+        print(
+            f"barq-dist-join 2^{args.edges} edges x {m}: "
+            f"compute={rt['compute_s']:.3e}s memory={rt['memory_s']:.3e}s "
+            f"collective={rt['collective_s']:.3e}s dominant={rt['dominant']} "
+            f"(compile {rec['compile_s']}s)"
+        )
+
+
+if __name__ == "__main__":
+    main()

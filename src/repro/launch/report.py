@@ -1,0 +1,90 @@
+"""Roofline report generator: experiments/dryrun/*.json -> markdown tables
+for EXPERIMENTS.md §Dry-run / §Roofline."""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(out_dir: str) -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _f(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.1f}µs"
+    if x < 1:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x:.2f}s"
+
+
+def _gb(x: float) -> str:
+    return f"{x / 1e9:.2f}"
+
+
+def roofline_table(recs: List[Dict], mesh: str, tag_filter: str = "") -> str:
+    rows = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "step LB | useful/HLO | temp GB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        rt = r["roofline"]
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            "| {arch} | {shape} | {c} | {m} | {k} | **{dom}** | {lb} | {ur} | {tmp} | {cs} |".format(
+                arch=r["arch"],
+                shape=r["shape"],
+                c=_f(rt["compute_s"]),
+                m=_f(rt["memory_s"]),
+                k=_f(rt["collective_s"]),
+                dom=rt["dominant"],
+                lb=_f(rt["step_time_lower_bound_s"]),
+                ur=f"{ratio:.2f}" if ratio else "—",
+                tmp=_gb(r["memory"]["temp_bytes"]),
+                cs=r["compile_s"],
+            )
+        )
+    return "\n".join(rows)
+
+
+def summary(recs: List[Dict]) -> str:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    fail = [r for r in recs if r.get("status") != "ok"]
+    doms = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+    lines = [
+        f"cells ok: {len(ok)}, failed: {len(fail)}",
+        f"dominant-term distribution: {doms}",
+    ]
+    for r in fail:
+        lines.append(f"FAILED {r['arch']} x {r['shape']} x {r['mesh']}: {r.get('error')}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = [r for r in load(args.out) if "__" not in (r.get("tag") or "")]
+    print(summary(recs))
+    print()
+    print(roofline_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` — XLA reports the
+*partitioned per-device* program, so global = per-device × chips, and the
+per-chip terms divide by peak directly. collective_bytes is parsed from the
+compiled HLO text: the summed output sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op (output
+size ~ payload moved per device per step; methodology note in
+EXPERIMENTS.md).
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output sizes per collective kind from compiled HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        shape_str, opname = m.group(1), m.group(2)
+        # opname like 'all-reduce', 'all-gather-start', ...
+        base = opname
+        for k in _COLLECTIVES:
+            if base == k or base.startswith(k + "-"):
+                if base.endswith("-done"):
+                    break  # avoid double counting async pairs
+                out[k] += _shape_bytes(shape_str)
+                counts[k] += 1
+                break
+    return {
+        "per_kind_bytes": out,
+        "per_kind_counts": counts,
+        "total_bytes": sum(out.values()),
+    }
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_s = bytes_per_dev / HBM_BW
+    collective_s = coll_bytes_per_dev / LINK_BW
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+    }
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms["dominant"] = dom.replace("_s", "")
+    terms["step_time_lower_bound_s"] = bound
+    # fraction of the bound spent on the dominant term's roofline resource
+    terms["roofline_fraction"] = (
+        max(compute_s, memory_s) / bound if bound > 0 else 0.0
+    )
+    return terms
+
+
+def model_flops(arch_kind: str, model, shape: Dict, n_tokens_or_items: int,
+                training: bool) -> float:
+    """'Useful' model FLOPs: 6·N·D dense / 6·N_active·D MoE for training,
+    2·N·D inference (N = params, D = tokens/items processed)."""
+    mult = 6.0 if training else 2.0
+    if arch_kind == "lm":
+        n = model.active_param_count() if model.moe else model.param_count()
+        return mult * n * n_tokens_or_items
+    # gnn / recsys: use dense-parameter work as the useful-FLOPs proxy
+    return mult * n_tokens_or_items

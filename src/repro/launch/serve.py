@@ -1,0 +1,78 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+
+Two modes:
+  --mode queries  — batched SPARQL serving through the BARQ engine
+                    (the paper's kind of service; QueryServer)
+  --mode lm       — continuous-batching LM decode on the reduced config
+                    (LMServer; adaptive admission)
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import numpy as np
+
+
+def serve_queries(requests: int, scale: float) -> None:
+    from repro.core import EngineConfig
+    from repro.data import (
+        BSBM_EXPLORE_TEMPLATES, generate_ecommerce_graph, instantiate_explore,
+    )
+    from repro.serve.query_server import QueryServer
+
+    store, meta = generate_ecommerce_graph(scale=scale)
+    server = QueryServer(store, EngineConfig(engine="barq"))
+    rng = np.random.RandomState(0)
+    reqs = []
+    tpls = list(BSBM_EXPLORE_TEMPLATES.items())
+    for _ in range(requests):
+        k, tpl = tpls[rng.randint(len(tpls))]
+        reqs.append((k, instantiate_explore(tpl, meta, rng)))
+    stats = server.run_workload(reqs, warmup=min(10, requests // 10))
+    print("query serving:", stats)
+
+
+def serve_lm(arch_id: str, requests: int) -> None:
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as TF
+    from repro.serve.lm_server import LMServer, Request
+
+    cfg = dataclasses.replace(get_config(arch_id).reduced_model, remat="none")
+    params = TF.init_params(cfg, jax.random.PRNGKey(0))
+    server = LMServer(cfg, params, n_slots=4, cache_len=128)
+    rng = np.random.RandomState(0)
+    for i in range(requests):
+        server.submit(Request(
+            rid=i,
+            prompt=rng.randint(0, cfg.vocab, rng.randint(4, 12)).astype(np.int32),
+            max_new=16,
+        ))
+    import time
+
+    t0 = time.perf_counter()
+    out = server.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(v) for v in out.values())
+    print(f"lm serving: {len(out)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s, {server.steps} engine steps)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("queries", "lm"), default="queries")
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--requests", type=int, default=100)
+    ap.add_argument("--scale", type=float, default=0.1)
+    args = ap.parse_args()
+    if args.mode == "queries":
+        serve_queries(args.requests, args.scale)
+    else:
+        serve_lm(args.arch, args.requests)
+
+
+if __name__ == "__main__":
+    main()

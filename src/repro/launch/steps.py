@@ -1,0 +1,374 @@
+"""Step builders: (arch, shape, mesh) -> jitted step + abstract inputs +
+shardings. Shared by the dry-run (lower/compile on ShapeDtypeStructs), the
+trainers and the smoke tests (concrete arrays, 1-device mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as TF
+from repro.models.gnn import models as GNN
+from repro.models.recsys import dcn as DCN
+from repro.parallel.sharding import MeshAxes, spec
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+# DimeNet static triplet budgets per shape (DESIGN.md §4)
+DIMENET_TRIPLET_CAP = {
+    "full_graph_sm": 131072,
+    "minibatch_lg": 1048576,
+    "ogb_products": 4194304,
+    "molecule": 32768,
+}
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything the dry-run / trainer needs for one (arch, shape) cell."""
+
+    fn: Callable  # positional (state..., inputs...)
+    abstract_args: Tuple[Any, ...]  # ShapeDtypeStructs matching fn args
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+    description: str = ""
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _zero_shard(spec_tree, abs_tree, axes: MeshAxes, mesh: Mesh):
+    """ZeRO-1: additionally shard optimizer-moment leaves over the dp axes
+    on the first unsharded dim whose size divides the dp degree (§Perf
+    memory lever — cuts the 2x fp32 moments to 2x/dp per device at the cost
+    of a params all-gather in the update)."""
+    dp_size = int(np.prod([mesh.shape[a] for a in axes.dp]))
+    dp_entry = axes.resolve("dp")
+
+    dp_names = set(axes.dp)
+
+    def one(s: P, a) -> P:
+        entries = list(s) + [None] * (len(a.shape) - len(s))
+        for e in entries:  # idempotent: already dp-sharded leaves unchanged
+            names = e if isinstance(e, tuple) else (e,)
+            if any(n in dp_names for n in names if n):
+                return s
+        for i, (e, dim) in enumerate(zip(entries, a.shape)):
+            if e is None and dim % dp_size == 0 and dim > 0:
+                entries[i] = dp_entry
+                return P(*entries)
+        return s
+
+    return jax.tree.map(one, spec_tree, abs_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _dp_batch_spec(axes: MeshAxes, mesh: Mesh, batch: int, *rest) -> P:
+    """Shard batch over dp only when divisible; replicate otherwise
+    (batch-1 long-context decode)."""
+    dp_size = int(np.prod([mesh.shape[a] for a in axes.dp]))
+    lead = axes.resolve("dp") if batch % dp_size == 0 else None
+    return P(lead, *rest)
+
+
+# ---------------------------------------------------------------------------
+# LM steps
+# ---------------------------------------------------------------------------
+
+
+def _lm_bundle(arch: ArchConfig, shape_name: str, mesh: Mesh,
+               opt_cfg: Optional[OptimizerConfig] = None,
+               model_override=None) -> StepBundle:
+    axes = MeshAxes.for_mesh(mesh)
+    sh = arch.shapes[shape_name]
+    cfg: TF.TransformerConfig = model_override or arch.model
+    if sh.get("window"):
+        cfg = dataclasses.replace(cfg, window=sh["window"])
+    for knob in ("unroll_layers", "seq_parallel", "microbatches", "remat"):
+        if knob in sh:
+            cfg = dataclasses.replace(cfg, **{knob: sh[knob]})
+    if "moe_impl" in sh and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, impl=sh["moe_impl"])
+        )
+    pspecs = TF.param_specs(cfg, axes)
+    params_abs = jax.eval_shape(lambda k: TF.init_params(cfg, k), jax.random.PRNGKey(0))
+    if sh.get("zero_params") and sh["step"] == "train":
+        # FSDP / ZeRO-3: additionally shard the master params over dp; XLA
+        # all-gathers each weight at its use sites (collective for memory)
+        pspecs = _zero_shard(pspecs, params_abs, axes, mesh)
+    params_sh = _named(mesh, pspecs)
+    b, s = sh["global_batch"], sh["seq_len"]
+
+    if sh["step"] == "train":
+        opt_cfg = opt_cfg or OptimizerConfig()
+        opt_abs = jax.eval_shape(init_opt_state, params_abs)
+        moment_specs = pspecs
+        if sh.get("zero_opt"):
+            moment_specs = _zero_shard(pspecs, params_abs, axes, mesh)
+        opt_specs = {"mu": moment_specs, "nu": moment_specs, "step": P()}
+        opt_sh = _named(mesh, opt_specs)
+        tok_spec = _dp_batch_spec(axes, mesh, b, None)
+        tok_sh = NamedSharding(mesh, tok_spec)
+
+        def train_step(params, opt, tokens, labels):
+            loss, grads = TF.grads_fn(params, cfg, axes, tokens, labels)
+            params, opt, metrics = adamw_update(opt_cfg, params, grads, opt)
+            return params, opt, {"loss": loss, **metrics}
+
+        return StepBundle(
+            fn=train_step,
+            abstract_args=(
+                params_abs,
+                opt_abs,
+                jax.ShapeDtypeStruct((b, s), jnp.int32),
+                jax.ShapeDtypeStruct((b, s), jnp.int32),
+            ),
+            in_shardings=(params_sh, opt_sh, tok_sh, tok_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+            description=f"train_step {cfg.name} B={b} S={s}",
+        )
+
+    if sh["step"] == "prefill":
+        tok_sh = NamedSharding(mesh, _dp_batch_spec(axes, mesh, b, None))
+
+        def prefill_step(params, tokens):
+            return TF.prefill(params, cfg, axes, tokens)
+
+        cache_sh = _named(mesh, TF.cache_specs(axes))
+        return StepBundle(
+            fn=prefill_step,
+            abstract_args=(params_abs, jax.ShapeDtypeStruct((b, s), jnp.int32)),
+            in_shardings=(params_sh, tok_sh),
+            out_shardings=(None, cache_sh),
+            description=f"serve_prefill {cfg.name} B={b} S={s}",
+        )
+
+    # decode: one new token against a KV cache of seq_len (or the window)
+    cache_len = min(s, sh.get("window") or s)
+    cache_abs = TF.cache_shapes(cfg, b, cache_len)
+    cache_specs = TF.cache_specs(axes)
+    if b == 1:  # batch-1 long-context: no dp sharding of batch
+        cache_specs = {
+            "k": P(None, None, axes.mp, None, None),
+            "v": P(None, None, axes.mp, None, None),
+            "pos": P(None, None, axes.mp),
+        }
+    cache_sh = _named(mesh, cache_specs)
+    tok_sh = NamedSharding(mesh, _dp_batch_spec(axes, mesh, b, None))
+
+    def decode(params, cache, token, pos):
+        return TF.decode_step(params, cfg, axes, cache, token, pos)
+
+    return StepBundle(
+        fn=decode,
+        abstract_args=(
+            params_abs,
+            cache_abs,
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ),
+        in_shardings=(params_sh, cache_sh, tok_sh, tok_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+        description=f"serve_decode {cfg.name} B={b} cache={cache_len}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN steps
+# ---------------------------------------------------------------------------
+
+
+def _pad512(n: int) -> int:
+    """Round node/edge counts up to a multiple of 512 so every sharded dim
+    divides both production meshes (padding rows are -1 / masked)."""
+    return int(-(-n // 512) * 512)
+
+
+def _gnn_graph_shape(arch: ArchConfig, shape_name: str,
+                     model_cfg) -> GNN.GraphShape:
+    sh = arch.shapes[shape_name]
+    trip = DIMENET_TRIPLET_CAP.get(shape_name, 0) if model_cfg.kind == "dimenet" else 0
+    if sh["step"] == "gnn_minibatch":
+        b, (f1, f2) = sh["batch_nodes"], sh["fanouts"]
+        n_nodes = b + b * f1 + b * f1 * f2
+        n_edges = b * f1 + b * f1 * f2
+        return GNN.GraphShape(_pad512(n_nodes), _pad512(n_edges), sh["d_feat"],
+                              sh["n_classes"], trip)
+    if sh["step"] == "gnn_molecule":
+        nb = sh["batch"]
+        return GNN.GraphShape(
+            _pad512(sh["n_nodes"] * nb), _pad512(sh["n_edges"] * nb),
+            sh["d_feat"], sh["n_classes"], trip, n_graphs=nb,
+        )
+    return GNN.GraphShape(_pad512(sh["n_nodes"]), _pad512(sh["n_edges"]),
+                          sh["d_feat"], sh["n_classes"], trip)
+
+
+def _gnn_bundle(arch: ArchConfig, shape_name: str, mesh: Mesh,
+                opt_cfg: Optional[OptimizerConfig] = None,
+                model_override=None) -> StepBundle:
+    axes = MeshAxes.for_mesh(mesh)
+    cfg: GNN.GNNConfig = model_override or arch.model
+    gshape = _gnn_graph_shape(arch, shape_name, cfg)
+    params_abs = jax.eval_shape(
+        lambda k: GNN.init(k, cfg, gshape), jax.random.PRNGKey(0)
+    )
+    params_sh = _named(mesh, jax.tree.map(lambda x: P(*([None] * x.ndim)), params_abs))
+    opt_cfg = opt_cfg or OptimizerConfig()
+    opt_abs = jax.eval_shape(init_opt_state, params_abs)
+    opt_sh = _named(
+        mesh,
+        {
+            "mu": jax.tree.map(lambda x: P(*([None] * x.ndim)), params_abs),
+            "nu": jax.tree.map(lambda x: P(*([None] * x.ndim)), params_abs),
+            "step": P(),
+        },
+    )
+
+    gspecs = GNN.graph_input_specs(gshape)
+    all_axes = spec(axes, "dp+mp")  # node/edge dims over every mesh axis
+    partitioned = (
+        arch.shapes[shape_name].get("gnn_impl") == "partitioned"
+        and cfg.kind == "dimenet"
+    )
+    edge_keys = ("edge_src", "edge_dst", "trip_kj", "trip_ji")
+
+    def graph_spec(k, v):
+        if partitioned and k not in edge_keys:
+            return NamedSharding(mesh, P(*([None] * v.ndim)))  # replicated
+        return NamedSharding(mesh, P(all_axes[0], *([None] * (v.ndim - 1))))
+
+    graph_sh = {k: graph_spec(k, v) for k, v in gspecs.items()}
+
+    if partitioned:
+        axis_names = tuple(mesh.axis_names)
+
+        def loss_fn(params, graph):
+            return GNN.dimenet_loss_partitioned(params, cfg, graph, mesh, axis_names)
+    else:
+        def loss_fn(params, graph):
+            return GNN.loss(params, cfg, graph)
+
+    def train_step(params, opt, graph):
+        loss, grads = jax.value_and_grad(loss_fn)(params, graph)
+        params, opt, metrics = adamw_update(opt_cfg, params, grads, opt)
+        return params, opt, {"loss": loss, **metrics}
+
+    return StepBundle(
+        fn=train_step,
+        abstract_args=(params_abs, opt_abs, gspecs),
+        in_shardings=(params_sh, opt_sh, graph_sh),
+        out_shardings=(params_sh, opt_sh, None),
+        donate_argnums=(0, 1),
+        description=f"gnn train_step {cfg.name} N={gshape.n_nodes} E={gshape.n_edges}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# RecSys steps
+# ---------------------------------------------------------------------------
+
+
+def _recsys_bundle(arch: ArchConfig, shape_name: str, mesh: Mesh,
+                   opt_cfg: Optional[OptimizerConfig] = None,
+                   model_override=None) -> StepBundle:
+    axes = MeshAxes.for_mesh(mesh)
+    sh = arch.shapes[shape_name]
+    cfg: DCN.DCNConfig = model_override or arch.model
+    for knob in ("table_dtype", "qr_threshold"):
+        if knob in sh:
+            cfg = dataclasses.replace(cfg, **{knob: sh[knob]})
+    b = sh["batch"]
+    params_abs = jax.eval_shape(lambda k: DCN.init_params(cfg, k), jax.random.PRNGKey(0))
+    pspecs = DCN.param_specs(cfg, axes)
+    params_sh = _named(mesh, pspecs)
+    dense_abs = jax.ShapeDtypeStruct((b, cfg.n_dense), jnp.float32)
+    sparse_abs = jax.ShapeDtypeStruct((b, cfg.n_sparse), jnp.int32)
+    bspec = _dp_batch_spec(axes, mesh, b, None)
+    dsh = NamedSharding(mesh, bspec)
+
+    if sh["step"] == "recsys_train":
+        opt_cfg = opt_cfg or OptimizerConfig()
+        opt_abs = jax.eval_shape(init_opt_state, params_abs)
+        opt_sh = _named(mesh, {"mu": pspecs, "nu": pspecs, "step": P()})
+        lab_abs = jax.ShapeDtypeStruct((b,), jnp.int32)
+        lab_sh = NamedSharding(mesh, _dp_batch_spec(axes, mesh, b))
+
+        def train_step(params, opt, dense, sparse, labels):
+            loss, grads = jax.value_and_grad(DCN.loss_fn)(
+                params, cfg, axes, dense, sparse, labels
+            )
+            params, opt, metrics = adamw_update(opt_cfg, params, grads, opt)
+            return params, opt, {"loss": loss, **metrics}
+
+        return StepBundle(
+            fn=train_step,
+            abstract_args=(params_abs, opt_abs, dense_abs, sparse_abs, lab_abs),
+            in_shardings=(params_sh, opt_sh, dsh, dsh, lab_sh),
+            out_shardings=(params_sh, opt_sh, None),
+            donate_argnums=(0, 1),
+            description=f"dcn train_step B={b}",
+        )
+
+    if sh["step"] == "recsys_serve":
+        def serve(params, dense, sparse):
+            return jax.nn.sigmoid(DCN.logits(params, cfg, axes, dense, sparse))
+
+        return StepBundle(
+            fn=serve,
+            abstract_args=(params_abs, dense_abs, sparse_abs),
+            in_shardings=(params_sh, dsh, dsh),
+            out_shardings=None,
+            description=f"dcn serve B={b}",
+        )
+
+    # retrieval: 1 query vs n_candidates
+    nc = _pad512(sh["n_candidates"])
+    d_q = cfg.mlp_dims[-1]
+    cand_abs = jax.ShapeDtypeStruct((nc, d_q), jnp.float32)
+    cand_sh = NamedSharding(mesh, P(spec(axes, "dp+mp")[0], None))
+
+    def retrieve(params, dense, sparse, candidates):
+        return DCN.retrieval_scores(params, cfg, axes, dense, sparse, candidates)
+
+    return StepBundle(
+        fn=retrieve,
+        abstract_args=(params_abs, dense_abs, sparse_abs, cand_abs),
+        in_shardings=(params_sh, NamedSharding(mesh, P(None, None)),
+                      NamedSharding(mesh, P(None, None)), cand_sh),
+        out_shardings=None,
+        description=f"dcn retrieval 1x{nc}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def build_step(arch: ArchConfig, shape_name: str, mesh: Mesh,
+               opt_cfg: Optional[OptimizerConfig] = None,
+               use_reduced: bool = False) -> StepBundle:
+    override = arch.reduced_model if use_reduced else None
+    if arch.kind == "lm":
+        return _lm_bundle(arch, shape_name, mesh, opt_cfg, override)
+    if arch.kind == "gnn":
+        return _gnn_bundle(arch, shape_name, mesh, opt_cfg, override)
+    if arch.kind == "recsys":
+        return _recsys_bundle(arch, shape_name, mesh, opt_cfg, override)
+    raise ValueError(arch.kind)

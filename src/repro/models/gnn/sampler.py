@@ -1,0 +1,174 @@
+"""Neighbor samplers for minibatch GNN training (GraphSAGE fanout 25-10 /
+15-10 shapes).
+
+Two implementations with identical output contracts (padded static-shape
+subgraph blocks):
+
+  * CSRSampler   — classic CSR-adjacency uniform fanout sampling (numpy);
+  * BARQSampler  — the same sampling expressed as BARQ merge-join scans
+    over the sorted quad store: seeds ⋈ :edge triples is exactly a
+    (sorted-seed × SPO-index) merge join, and fanout capping is batch
+    truncation per group. This is the paper's engine acting as the
+    framework's data pipeline (DESIGN.md §3).
+
+Output block (for L=2 layers, seeds B, fanouts f1, f2):
+  nodes:   (B + B*f1 + B*f1*f2,) int32 global node ids (-1 padding)
+  edge_src/edge_dst: (B*f1 + B*f1*f2,) int32 *local* indices into nodes
+  seed_mask: which local nodes are seeds (loss is computed there)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.algebra import K, TriplePattern, V, VarTable
+from repro.core.batch import ColumnBatch
+from repro.core.operators.merge_join import MergeJoin
+from repro.core.operators.scan import IndexScan
+from repro.core.operators.sort import MaterializedSource
+from repro.core.storage import QuadStore
+
+
+@dataclasses.dataclass
+class SampledBlock:
+    nodes: np.ndarray  # (n_total,) global ids, -1 pad
+    edge_src: np.ndarray  # (n_edges,) local idx, -1 pad
+    edge_dst: np.ndarray
+    seed_mask: np.ndarray  # (n_total,) bool
+    labels: np.ndarray  # (n_total,) int32 (global label table gathered)
+
+
+class CSRSampler:
+    def __init__(self, edge_index: np.ndarray, n_nodes: int, seed: int = 0):
+        """edge_index: (2, E) src->dst. Builds CSR over outgoing edges."""
+        src, dst = edge_index
+        order = np.argsort(src, kind="stable")
+        self.dst_sorted = dst[order].astype(np.int32)
+        self.indptr = np.searchsorted(
+            src[order], np.arange(n_nodes + 1), side="left"
+        ).astype(np.int64)
+        self.n_nodes = n_nodes
+        self.rng = np.random.RandomState(seed)
+
+    def sample_neighbors(self, nodes: np.ndarray, fanout: int) -> np.ndarray:
+        """(len(nodes), fanout) neighbor ids, -1 padded."""
+        out = np.full((len(nodes), fanout), -1, dtype=np.int32)
+        for i, u in enumerate(nodes):
+            if u < 0:
+                continue
+            lo, hi = self.indptr[u], self.indptr[u + 1]
+            deg = hi - lo
+            if deg == 0:
+                continue
+            if deg <= fanout:
+                out[i, :deg] = self.dst_sorted[lo:hi]
+            else:
+                sel = self.rng.choice(deg, size=fanout, replace=False)
+                out[i] = self.dst_sorted[lo + sel]
+        return out
+
+    def sample_block(self, seeds: np.ndarray, fanouts: List[int],
+                     labels: Optional[np.ndarray] = None) -> SampledBlock:
+        return _assemble_block(self, seeds, fanouts, labels)
+
+
+class BARQSampler:
+    """Fanout sampling as vectorized merge joins over the quad store."""
+
+    def __init__(self, store: QuadStore, edge_pred, seed: int = 0):
+        self.store = store
+        self.edge_pred = edge_pred
+        self.rng = np.random.RandomState(seed)
+        self.vt = VarTable()
+        self.n_nodes = len(store.dict)
+
+    def sample_neighbors(self, nodes: np.ndarray, fanout: int) -> np.ndarray:
+        """Join sorted seeds against the (?s :edge ?o) scan; cap each
+        group at ``fanout`` rows."""
+        valid = nodes[nodes >= 0]
+        if len(valid) == 0:
+            return np.full((len(nodes), fanout), -1, np.int32)
+        v_s, v_o = self.vt.var("s"), self.vt.var("o")
+        uniq = np.unique(valid).astype(np.int32)
+        seeds_src = MaterializedSource((v_s,), uniq[None, :], v_s, name="Seeds")
+        scan = IndexScan(
+            self.store,
+            TriplePattern(V(v_s), K(self.edge_pred), V(v_o)),
+            want_sorted_var=v_s,
+        )
+        join = MergeJoin(seeds_src, scan, v_s)
+        # drain join; group rows per seed, sample fanout
+        per_seed = {}
+        while True:
+            b = join.next_batch()
+            if b is None:
+                break
+            cb = b.compact()
+            if not cb.n_rows:
+                continue
+            ss = cb.column(v_s)
+            oo = cb.column(v_o)
+            for s_val, o_val in zip(ss.tolist(), oo.tolist()):
+                per_seed.setdefault(s_val, []).append(o_val)
+        out = np.full((len(nodes), fanout), -1, dtype=np.int32)
+        for i, u in enumerate(nodes):
+            nb = per_seed.get(int(u))
+            if not nb:
+                continue
+            if len(nb) <= fanout:
+                out[i, : len(nb)] = nb
+            else:
+                sel = self.rng.choice(len(nb), size=fanout, replace=False)
+                out[i] = np.asarray(nb, np.int32)[sel]
+        return out
+
+    def sample_block(self, seeds: np.ndarray, fanouts: List[int],
+                     labels: Optional[np.ndarray] = None) -> SampledBlock:
+        return _assemble_block(self, seeds, fanouts, labels)
+
+
+def _assemble_block(sampler, seeds: np.ndarray, fanouts: List[int],
+                    labels: Optional[np.ndarray]) -> SampledBlock:
+    seeds = np.asarray(seeds, dtype=np.int32)
+    levels = [seeds]
+    edges_src_g: List[np.ndarray] = []
+    edges_dst_g: List[np.ndarray] = []
+    frontier = seeds
+    for f in fanouts:
+        nbrs = sampler.sample_neighbors(frontier, f)  # (len(frontier), f)
+        src = nbrs.reshape(-1)
+        dst = np.repeat(frontier, f)
+        dst = np.where(src >= 0, dst, -1)
+        edges_src_g.append(src)
+        edges_dst_g.append(dst)
+        levels.append(src)
+        frontier = src
+    nodes = np.concatenate(levels)
+    n_total = len(nodes)
+    # map global -> local (first occurrence wins; padding stays -1)
+    local = {}
+    nodes_local = np.full(n_total, -1, np.int32)
+    for i, u in enumerate(nodes.tolist()):
+        if u < 0:
+            continue
+        if u not in local:
+            local[u] = i
+        nodes_local[i] = local[u]
+
+    def to_local(arr):
+        return np.asarray(
+            [local.get(int(u), -1) if u >= 0 else -1 for u in arr], np.int32
+        )
+
+    e_src = to_local(np.concatenate(edges_src_g))
+    e_dst = to_local(np.concatenate(edges_dst_g))
+    seed_mask = np.zeros(n_total, bool)
+    seed_mask[: len(seeds)] = seeds >= 0
+    lab = np.zeros(n_total, np.int32)
+    if labels is not None:
+        ok = nodes >= 0
+        lab[ok] = labels[nodes[ok]]
+    return SampledBlock(nodes, e_src, e_dst, seed_mask, lab)

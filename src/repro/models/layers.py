@@ -1,0 +1,217 @@
+"""Shared transformer layers: RMSNorm, rotary embedding, GQA attention
+(optionally qk-norm, sliding window), SwiGLU MLP, embedding, sharded-safe
+cross entropy. Pure-function style: init_* returns a param pytree,
+matching apply functions take (params, x, ...).
+
+Mixed precision: params fp32, compute bf16 (cast at entry), reductions
+(norms, softmax, logsumexp) fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 1e6) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., seq, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA + optional qk-norm)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    use_bias: bool = False
+
+
+def init_attention(key, cfg: AttnConfig):
+    ks = jax.random.split(key, 4)
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": _dense_init(ks[0], (d, h * hd)),
+        "wk": _dense_init(ks[1], (d, k * hd)),
+        "wv": _dense_init(ks[2], (d, k * hd)),
+        "wo": _dense_init(ks[3], (h * hd, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd)
+        p["k_norm"] = init_rmsnorm(hd)
+    return p
+
+
+def _qkv(p, cfg: AttnConfig, x, positions):
+    b, s, _ = x.shape
+    h, k, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    kk = (x @ p["wk"].astype(x.dtype)).reshape(b, s, k, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, k, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        kk = rmsnorm(p["k_norm"], kk)
+    q = rope(q, positions, cfg.rope_theta)
+    kk = rope(kk, positions, cfg.rope_theta)
+    return q, kk, v
+
+
+def _gqa_scores(q, k, cfg: AttnConfig):
+    """q: (b, sq, h, hd), k: (b, sk, kv, hd) -> (b, sq, h, sk) fp32."""
+    b, sq, h, hd = q.shape
+    kv = cfg.n_kv_heads
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bqkgs", qg, k, preferred_element_type=jnp.float32)
+    return s.reshape(b, sq, h, k.shape[1]) / math.sqrt(hd)
+
+
+def _gqa_mix(probs, v, cfg: AttnConfig):
+    """probs: (b, sq, h, sk) fp32, v: (b, sk, kv, hd) -> (b, sq, h, hd)."""
+    b, sq, h, sk = probs.shape
+    kv = cfg.n_kv_heads
+    g = h // kv
+    pg = probs.reshape(b, sq, kv, g, sk)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", pg.astype(v.dtype), v)
+    return out.reshape(b, sq, h, -1)
+
+
+def attention(p, cfg: AttnConfig, x, positions, causal: bool = True,
+              window: Optional[int] = None):
+    """Full self-attention over x: (b, s, d)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    scores = _gqa_scores(q, k, cfg)
+    ii = positions[:, :, None, None]  # query pos
+    jj = positions[:, None, None, :]  # key pos — positions (b, s)
+    mask = jj <= ii if causal else jnp.ones_like(scores, dtype=bool)
+    if window is not None:
+        mask = mask & (jj > ii - window)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_mix(probs, v, cfg)
+    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def attention_decode(p, cfg: AttnConfig, x, cache_k, cache_v, cache_pos,
+                     positions):
+    """One-token decode: x (b, 1, d); cache_{k,v} (b, S, kv, hd) already
+    rope'd; cache_pos (b, S) int32 key positions (-1 = empty slot).
+    Returns (out, new_k, new_v) with the token written at its slot."""
+    b = x.shape[0]
+    q, k_new, v_new = _qkv(p, cfg, x, positions)
+    slot = positions % cache_k.shape[1]  # rolling buffer (sliding window)
+
+    def write(cache, val):
+        return jax.vmap(
+            lambda c, v_, s_: jax.lax.dynamic_update_slice(c, v_, (s_, 0, 0))
+        )(cache, val, slot[:, 0])
+
+    cache_k = write(cache_k, k_new)
+    cache_v = write(cache_v, v_new)
+    cache_pos = jax.vmap(
+        lambda cp, ps, s_: jax.lax.dynamic_update_slice(cp, ps, (s_,))
+    )(cache_pos, positions, slot[:, 0])
+
+    scores = _gqa_scores(q, cache_k, cfg)  # (b, 1, h, S)
+    valid = (cache_pos >= 0) & (cache_pos <= positions[:, :1])
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_mix(probs, cache_v, cfg)
+    out = out.reshape(b, 1, -1) @ p["wo"].astype(x.dtype)
+    return out, cache_k, cache_v, cache_pos
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(ks[0], (d_model, d_ff)),
+        "w_up": _dense_init(ks[1], (d_model, d_ff)),
+        "w_down": _dense_init(ks[2], (d_ff, d_model)),
+    }
+
+
+def mlp(p, x):
+    g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_up"].astype(x.dtype)
+    return (g * u) @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding + loss
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int):
+    return {"table": _dense_init(key, (vocab, d_model), scale=0.02)}
+
+
+def embed(p, tokens):
+    return jnp.take(p["table"], tokens, axis=0).astype(jnp.bfloat16)
+
+
+def logits_from_hidden(p_embed, h):
+    return h @ p_embed["table"].T.astype(h.dtype)
+
+
+def cross_entropy(logits, labels, vocab: int) -> jax.Array:
+    """Sharding-friendly CE: one-hot multiply-reduce (fuses under SPMD even
+    with vocab-sharded logits; no cross-shard gather)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    onehot = jax.nn.one_hot(labels, vocab, dtype=lf.dtype)
+    label_logit = jnp.sum(lf * onehot, axis=-1)
+    return jnp.mean(lse - label_logit)

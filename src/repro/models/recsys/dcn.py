@@ -1,0 +1,187 @@
+"""DCN-v2 [arXiv:2008.13535]: 13 dense + 26 sparse features, embed_dim 16,
+3 full-rank cross layers, MLP 1024-1024-512, sigmoid CTR head.
+
+Sparse embedding tables use Criteo-style vocab sizes (heavy-tailed; the
+largest tables dominate memory and are row-sharded over the model axis).
+Four serving shapes: train (65k batch), p99 online (512), bulk offline
+scoring (262k), and retrieval scoring of 1M candidates against one query
+via a dot-product tower (batched matmul, not a loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.recsys.embedding import embedding_bag, init_table
+from repro.parallel.sharding import MeshAxes, constrain
+
+# Criteo Kaggle display-advertising vocab sizes (26 categorical fields),
+# clipped: the public dataset's exact sizes vary per day; these are the
+# standard rounded sizes used by DLRM reference implementations.
+CRITEO_VOCABS: Tuple[int, ...] = (
+    1460, 583, 10131227, 2202608, 305, 24, 12517, 633, 3, 93145,
+    5683, 8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4,
+    7046547, 18, 15, 286181, 105, 142572,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DCNConfig:
+    name: str = "dcn-v2"
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    n_cross_layers: int = 3
+    mlp_dims: Tuple[int, ...] = (1024, 1024, 512)
+    vocab_sizes: Tuple[int, ...] = CRITEO_VOCABS
+    max_table_rows: int = 0  # 0 = full Criteo sizes; >0 clips (smoke tests)
+    # §Perf levers
+    table_dtype: str = "float32"  # bf16 halves table memory + grad traffic
+    qr_threshold: int = 0  # >0: quotient-remainder for tables above this
+
+    @property
+    def d_interact(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+    def table_rows(self, i: int) -> int:
+        v = self.vocab_sizes[i % len(self.vocab_sizes)]
+        return min(v, self.max_table_rows) if self.max_table_rows else v
+
+    def padded_rows(self, i: int) -> int:
+        """Row-sharded tables pad to a multiple of 512 so the row dim
+        divides the model axis on both meshes; lookups stay mod table_rows,
+        padding rows are never addressed."""
+        v = self.table_rows(i)
+        return int(-(-v // 512) * 512) if v >= 16384 else v
+
+
+def _uses_qr(cfg: DCNConfig, i: int) -> bool:
+    return bool(cfg.qr_threshold) and cfg.table_rows(i) > cfg.qr_threshold
+
+
+_QR_COLLISIONS = 4096
+
+
+def init_params(cfg: DCNConfig, key) -> Dict:
+    keys = jax.random.split(key, cfg.n_sparse + cfg.n_cross_layers + len(cfg.mlp_dims) + 2)
+    dt = jnp.bfloat16 if cfg.table_dtype == "bf16" else jnp.float32
+    tables = {}
+    for i in range(cfg.n_sparse):
+        if _uses_qr(cfg, i):
+            # quotient-remainder trick [arXiv:1909.02107]: two small tables
+            q_rows = int(-(-cfg.table_rows(i) // _QR_COLLISIONS))
+            q_rows = int(-(-q_rows // 512) * 512)
+            k1, k2 = jax.random.split(keys[i])
+            tables[f"t{i}"] = {
+                "q": init_table(k1, q_rows, cfg.embed_dim).astype(dt),
+                "r": init_table(k2, _QR_COLLISIONS, cfg.embed_dim).astype(dt),
+            }
+        else:
+            tables[f"t{i}"] = init_table(
+                keys[i], cfg.padded_rows(i), cfg.embed_dim
+            ).astype(dt)
+    d = cfg.d_interact
+    cross = []
+    for l in range(cfg.n_cross_layers):
+        k = keys[cfg.n_sparse + l]
+        cross.append(
+            {"w": jax.random.normal(k, (d, d), jnp.float32) / jnp.sqrt(d),
+             "b": jnp.zeros((d,), jnp.float32)}
+        )
+    mlp = []
+    dims = (d,) + cfg.mlp_dims
+    for l in range(len(cfg.mlp_dims)):
+        k = keys[cfg.n_sparse + cfg.n_cross_layers + l]
+        mlp.append(
+            {"w": jax.random.normal(k, (dims[l], dims[l + 1]), jnp.float32)
+             / jnp.sqrt(dims[l]),
+             "b": jnp.zeros((dims[l + 1],), jnp.float32)}
+        )
+    k_out = keys[-1]
+    return {
+        "tables": tables,
+        "cross": cross,
+        "mlp": mlp,
+        "w_out": jax.random.normal(k_out, (cfg.mlp_dims[-1] + d, 1), jnp.float32) * 0.01,
+    }
+
+
+def param_specs(cfg: DCNConfig, axes: MeshAxes):
+    from repro.parallel.sharding import tree_spec
+
+    def rule(path, leaf):
+        if path and path[0] == "tables" and leaf.ndim == 2:
+            # row-shard the big tables; tiny ones replicate
+            return P(axes.mp, None) if leaf.shape[0] >= 16384 else P(None, None)
+        return P(*([None] * leaf.ndim))  # qr sub-tables fall through here too
+
+    shape_tree = jax.eval_shape(lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    return tree_spec(shape_tree, rule)
+
+
+def features(params, cfg: DCNConfig, axes: MeshAxes, dense, sparse) -> jax.Array:
+    """dense: (B, 13) float32; sparse: (B, 26) int32 -> (B, d_interact)."""
+    b = dense.shape[0]
+    embs = []
+    for i in range(cfg.n_sparse):
+        idx = sparse[:, i] % cfg.table_rows(i)
+        t = params["tables"][f"t{i}"]
+        if isinstance(t, dict):  # quotient-remainder compressed table
+            from repro.models.recsys.embedding import qr_embedding_lookup
+
+            e = qr_embedding_lookup(t["q"], t["r"], idx, _QR_COLLISIONS)
+        else:
+            e = embedding_bag(t, idx)  # (B, dim) bag of 1
+        embs.append(e.astype(jnp.float32))
+    x = jnp.concatenate([jnp.log1p(jnp.abs(dense))] + embs, axis=-1)
+    return constrain(x, axes, "dp", None)
+
+
+def interact(params, cfg: DCNConfig, x0: jax.Array) -> jax.Array:
+    """DCN-v2 cross network: x_{l+1} = x0 * (W x_l + b) + x_l, then MLP."""
+    x = x0
+    for lp in params["cross"]:
+        x = x0 * (x @ lp["w"] + lp["b"]) + x
+    h = x
+    for lp in params["mlp"]:
+        h = jax.nn.relu(h @ lp["w"] + lp["b"])
+    return jnp.concatenate([x, h], axis=-1)
+
+
+def logits(params, cfg: DCNConfig, axes: MeshAxes, dense, sparse) -> jax.Array:
+    x0 = features(params, cfg, axes, dense, sparse)
+    z = interact(params, cfg, x0)
+    return (z @ params["w_out"])[:, 0]
+
+
+def loss_fn(params, cfg: DCNConfig, axes: MeshAxes, dense, sparse, labels) -> jax.Array:
+    lg = logits(params, cfg, axes, dense, sparse).astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(lg, 0) - lg * y + jnp.log1p(jnp.exp(-jnp.abs(lg))))
+
+
+# -- retrieval scoring: 1 query vs n_candidates ------------------------------------
+
+
+def query_embedding(params, cfg: DCNConfig, axes: MeshAxes, dense, sparse) -> jax.Array:
+    """Query tower: the MLP branch output as the query vector (B, d_q)."""
+    x0 = features(params, cfg, axes, dense, sparse)
+    h = x0
+    for lp in params["mlp"]:
+        h = jax.nn.relu(h @ lp["w"] + lp["b"])
+    return h
+
+
+def retrieval_scores(params, cfg: DCNConfig, axes: MeshAxes, dense, sparse,
+                     candidates: jax.Array) -> jax.Array:
+    """candidates: (n_cand, d_q) precomputed item tower embeddings, sharded
+    over all axes. Scores = one batched matmul + top-k, never a loop."""
+    q = query_embedding(params, cfg, axes, dense, sparse)  # (B, d_q)
+    cands = constrain(candidates, axes, "dp+mp", None)
+    scores = q @ cands.T  # (B, n_cand)
+    return jax.lax.top_k(scores, 100)[0]

@@ -1,0 +1,341 @@
+"""Decoder-only transformer LM (dense + MoE), scan-over-layers, GQA,
+qk-norm, KV-cache decode, sliding-window long-context serving.
+
+Covers the five assigned LM architectures (qwen3-8b, deepseek-7b,
+command-r-plus-104b, qwen3-moe-30b-a3b, moonshot-v1-16b-a3b). Sharding:
+DP over (pod, data) for batch; TP over model for heads / ffn / vocab;
+EP over model for MoE experts; decode KV caches shard sequence over model
+(split-K decode — XLA SPMD inserts the cross-shard softmax reductions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.moe import MoEConfig, init_moe, moe_block
+from repro.parallel.sharding import MeshAxes, constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    moe: Optional[MoEConfig] = None
+    window: Optional[int] = None  # sliding-window serving (long_500k)
+    remat: str = "full"  # none | full | dots
+    unroll_layers: bool = False  # dry-run: per-layer HLO for exact cost analysis
+    seq_parallel: bool = False  # shard activations over (dp, mp) — §Perf lever
+    microbatches: int = 1  # gradient accumulation — §Perf memory lever
+
+    @property
+    def attn(self) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            head_dim=self.head_dim,
+            qk_norm=self.qk_norm,
+            rope_theta=self.rope_theta,
+        )
+
+    def param_count(self) -> int:
+        d, f, v, hd = self.d_model, self.d_ff, self.vocab, self.head_dim
+        attn = d * hd * (self.n_heads * 2 + self.n_kv_heads * 2)
+        if self.moe:
+            ffn = self.moe.n_experts * 3 * d * self.moe.d_expert_ff + d * self.moe.n_experts
+        else:
+            ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + v * d + d
+
+    def active_param_count(self) -> int:
+        if not self.moe:
+            return self.param_count()
+        d = self.d_model
+        attn = d * self.head_dim * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ffn = self.moe.top_k * 3 * d * self.moe.d_expert_ff + d * self.moe.n_experts
+        per_layer = attn + ffn + 2 * d
+        return self.n_layers * per_layer + self.vocab * d + d
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(cfg: TransformerConfig, key):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model),
+        "ln2": L.init_rmsnorm(cfg.d_model),
+        "attn": L.init_attention(ks[0], cfg.attn),
+    }
+    if cfg.moe:
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.moe)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(cfg: TransformerConfig, key) -> Dict[str, Any]:
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers_p = jax.vmap(partial(_init_layer, cfg))(layer_keys)
+    return {
+        "embed": L.init_embedding(k_emb, cfg.vocab, cfg.d_model),
+        "layers": layers_p,  # stacked (L, ...)
+        "ln_f": L.init_rmsnorm(cfg.d_model),
+    }
+
+
+def param_specs(cfg: TransformerConfig, axes: MeshAxes):
+    mp = axes.mp
+
+    def rule(path: Tuple[str, ...], leaf):
+        name = path[-1]
+        stacked = path[0] == "layers"  # leading L axis from scan stacking
+
+        def wrap(*dims):
+            return P(*((None,) + dims if stacked else dims))
+
+        if name == "table":
+            return P(mp, None)  # vocab-sharded embedding
+        if name == "scale":
+            return wrap(None) if leaf.ndim == (2 if stacked else 1) else P(None)
+        if "experts" in path:
+            # stacked MoE expert weights: (L, E, d, f) -> experts over mp
+            return wrap(mp, None, None)
+        if name == "w_router":
+            return wrap(None, None)
+        if name in ("wq", "wk", "wv", "w_gate", "w_up"):
+            return wrap(None, mp)
+        if name in ("wo", "w_down"):
+            return wrap(mp, None)
+        return P(*([None] * leaf.ndim))
+
+    from repro.parallel.sharding import tree_spec
+
+    return tree_spec(jax.eval_shape(lambda k: init_params(cfg, k),
+                                    jax.random.PRNGKey(0)), rule)
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(cfg: TransformerConfig, axes: MeshAxes, h, lp, positions):
+    if cfg.seq_parallel:
+        # sequence parallelism: activations shard (batch over dp, seq over
+        # mp); XLA all-gathers the sequence axis around attention only
+        h = constrain(h, axes, "dp", "mp", None)
+    else:
+        h = constrain(h, axes, "dp", None, None)
+    a = L.attention(lp["attn"], cfg.attn, L.rmsnorm(lp["ln1"], h), positions,
+                    causal=True, window=cfg.window)
+    h = h + a
+    x = L.rmsnorm(lp["ln2"], h)
+    if cfg.moe:
+        f = moe_block(lp["moe"], cfg.moe, axes, x)
+    else:
+        f = L.mlp(lp["mlp"], x)
+    return h + f
+
+
+def forward_hidden(params, cfg: TransformerConfig, axes: MeshAxes, tokens):
+    b, s = tokens.shape
+    h = L.embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def step(h, lp):
+        out = _layer_fwd(cfg, axes, h, lp, positions)
+        return out, None
+
+    if cfg.remat != "none":
+        policy = (
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            if cfg.remat == "dots"
+            else jax.checkpoint_policies.nothing_saveable
+        )
+        step = jax.checkpoint(step, policy=policy)
+    if cfg.unroll_layers:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            h, _ = step(h, lp)
+    else:
+        h, _ = jax.lax.scan(step, h, params["layers"])
+    return L.rmsnorm(params["ln_f"], h)
+
+
+def loss_fn(params, cfg: TransformerConfig, axes: MeshAxes, tokens, labels):
+    h = forward_hidden(params, cfg, axes, tokens)
+    logits = L.logits_from_hidden(params["embed"], h)
+    logits = constrain(logits, axes, "dp", None, "mp")
+    return L.cross_entropy(logits, labels, cfg.vocab)
+
+
+def grads_fn(params, cfg: TransformerConfig, axes: MeshAxes, tokens, labels):
+    """(loss, grads) with optional gradient accumulation over microbatches
+    (cfg.microbatches splits the batch axis; peak activation memory divides
+    accordingly — §Perf memory lever)."""
+    if cfg.microbatches <= 1:
+        return jax.value_and_grad(loss_fn)(params, cfg, axes, tokens, labels)
+    m = cfg.microbatches
+    b = tokens.shape[0]
+    assert b % m == 0, "batch must divide microbatches"
+    tok_m = tokens.reshape(m, b // m, -1)
+    lab_m = labels.reshape(m, b // m, -1)
+
+    def one(carry, xs):
+        loss_acc, grad_acc = carry
+        t, l = xs
+        loss, g = jax.value_and_grad(loss_fn)(params, cfg, axes, t, l)
+        grad_acc = jax.tree.map(jnp.add, grad_acc, g)
+        return (loss_acc + loss, grad_acc), None
+
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    if cfg.unroll_layers:
+        # analysis mode: unrolled so cost analysis counts every microbatch
+        carry = (jnp.float32(0), zero)
+        for i in range(m):
+            carry, _ = one(carry, (tok_m[i], lab_m[i]))
+        loss_sum, grads = carry
+    else:
+        (loss_sum, grads), _ = jax.lax.scan(one, (jnp.float32(0), zero), (tok_m, lab_m))
+    return loss_sum / m, jax.tree.map(lambda g: g / m, grads)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: TransformerConfig, batch: int, cache_len: int):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((cfg.n_layers, batch, cache_len, kv, hd), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((cfg.n_layers, batch, cache_len, kv, hd), jnp.bfloat16),
+        "pos": jax.ShapeDtypeStruct((cfg.n_layers, batch, cache_len), jnp.int32),
+    }
+
+
+def cache_specs(axes: MeshAxes):
+    dp = axes.resolve("dp")
+    mp = axes.mp
+    return {
+        "k": P(None, dp, mp, None, None),  # sequence split-K over model axis
+        "v": P(None, dp, mp, None, None),
+        "pos": P(None, dp, mp),
+    }
+
+
+def init_cache(cfg: TransformerConfig, batch: int, cache_len: int):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, cache_len, kv, hd), jnp.bfloat16),
+        "v": jnp.zeros((cfg.n_layers, batch, cache_len, kv, hd), jnp.bfloat16),
+        "pos": jnp.full((cfg.n_layers, batch, cache_len), -1, jnp.int32),
+    }
+
+
+def prefill(params, cfg: TransformerConfig, axes: MeshAxes, tokens):
+    """Run the prompt, return (last-token logits, filled cache).
+    Cache length = prompt length (padded externally if needed)."""
+    b, s = tokens.shape
+    h = L.embed(params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def step(h, lp):
+        h = constrain(h, axes, "dp", None, None)
+        x = L.rmsnorm(lp["ln1"], h)
+        q, k, v = L._qkv(lp["attn"], cfg.attn, x, positions)
+        scores = L._gqa_scores(q, k, cfg.attn)
+        ii = positions[:, :, None, None]
+        jj = positions[:, None, None, :]
+        mask = jj <= ii
+        if cfg.window is not None:
+            mask = mask & (jj > ii - cfg.window)
+        probs = jax.nn.softmax(jnp.where(mask, scores, -1e30), axis=-1)
+        a = L._gqa_mix(probs, v, cfg.attn).reshape(b, s, -1) @ lp["attn"]["wo"].astype(h.dtype)
+        h = h + a
+        x2 = L.rmsnorm(lp["ln2"], h)
+        f = moe_block(lp["moe"], cfg.moe, axes, x2) if cfg.moe else L.mlp(lp["mlp"], x2)
+        return h + f, (k, v)
+
+    if cfg.remat != "none":
+        step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.unroll_layers:
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda x: x[i], params["layers"])
+            h, (k_i, v_i) = step(h, lp)
+            ks_l.append(k_i)
+            vs_l.append(v_i)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+    else:
+        h, (ks, vs) = jax.lax.scan(step, h, params["layers"])
+    h = L.rmsnorm(params["ln_f"], h)
+    logits = L.logits_from_hidden(params["embed"], h[:, -1:, :])
+    cache = {
+        "k": ks,
+        "v": vs,
+        "pos": jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32), (cfg.n_layers, b, s)
+        ),
+    }
+    return logits, cache
+
+
+def decode_step(params, cfg: TransformerConfig, axes: MeshAxes, cache, token, pos):
+    """token: (b, 1) int32; pos: (b, 1) int32 absolute position.
+    Returns (logits (b, 1, V), new cache). Cache layout: rolling buffer of
+    length cache_len (= window for sliding-window serving)."""
+    b = token.shape[0]
+    h = L.embed(params["embed"], token)
+
+    def step(h, xs):
+        lp, ck, cv, cp = xs
+        h = constrain(h, axes, "dp", None, None)
+        x = L.rmsnorm(lp["ln1"], h)
+        a, ck, cv, cp = L.attention_decode(lp["attn"], cfg.attn, x, ck, cv, cp, pos)
+        h = h + a
+        x2 = L.rmsnorm(lp["ln2"], h)
+        f = moe_block(lp["moe"], cfg.moe, axes, x2) if cfg.moe else L.mlp(lp["mlp"], x2)
+        return h + f, (ck, cv, cp)
+
+    if cfg.unroll_layers:
+        ks_l, vs_l, ps_l = [], [], []
+        for i in range(cfg.n_layers):
+            xs = jax.tree.map(
+                lambda x: x[i],
+                (params["layers"], cache["k"], cache["v"], cache["pos"]),
+            )
+            h, (k_i, v_i, p_i) = step(h, xs)
+            ks_l.append(k_i)
+            vs_l.append(v_i)
+            ps_l.append(p_i)
+        ks, vs, ps = jnp.stack(ks_l), jnp.stack(vs_l), jnp.stack(ps_l)
+    else:
+        h, (ks, vs, ps) = jax.lax.scan(
+            step, h, (params["layers"], cache["k"], cache["v"], cache["pos"])
+        )
+    h = L.rmsnorm(params["ln_f"], h)
+    logits = L.logits_from_hidden(params["embed"], h)
+    logits = constrain(logits, axes, "dp", None, "mp")
+    return logits, {"k": ks, "v": vs, "pos": ps}

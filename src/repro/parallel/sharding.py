@@ -1,0 +1,73 @@
+"""Mesh-axis abstraction + partition-spec helpers.
+
+Models describe sharding against *logical* roles — dp (data-parallel
+batch axis), mp (model/tensor-parallel axis) — and MeshAxes binds the roles
+to the concrete mesh: ("data","model") single-pod, ("pod","data","model")
+multi-pod. The pod axis extends data parallelism across pods (DESIGN.md §5),
+so dp = ("pod","data") on the multi-pod mesh and every spec written against
+roles works on both meshes unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    dp: Tuple[str, ...] = ("data",)
+    mp: str = "model"
+
+    @staticmethod
+    def for_mesh(mesh) -> "MeshAxes":
+        names = tuple(mesh.axis_names)
+        if "pod" in names:
+            return MeshAxes(dp=("pod", "data"), mp="model")
+        return MeshAxes(dp=("data",), mp="model")
+
+    def resolve(self, role: Optional[str]):
+        """role -> concrete axis entry for PartitionSpec."""
+        if role is None:
+            return None
+        if role == "dp":
+            return self.dp if len(self.dp) > 1 else self.dp[0]
+        if role == "mp":
+            return self.mp
+        if role == "dp+mp":  # fully flattened (e.g. GNN node dim)
+            return tuple(self.dp) + (self.mp,)
+        raise ValueError(role)
+
+
+def spec(axes: MeshAxes, *roles: Optional[str]) -> PartitionSpec:
+    """spec(axes, 'dp', None, 'mp') -> PartitionSpec over concrete axes."""
+    return PartitionSpec(*[axes.resolve(r) for r in roles])
+
+
+def constrain(x, axes: MeshAxes, *roles: Optional[str]):
+    """Apply a logical sharding constraint inside jit. No-op outside a mesh
+    context (single-device smoke tests)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover - older jax
+        mesh = None
+    if mesh is None or mesh.empty:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(axes, *roles))
+
+
+def tree_spec(param_tree, rule_fn) -> dict:
+    """Build a PartitionSpec tree by applying rule_fn(path, leaf) over the
+    param tree. rule_fn returns a PartitionSpec."""
+    flat = jax.tree_util.tree_flatten_with_path(param_tree)
+    leaves, treedef = flat
+    specs = []
+    for path, leaf in leaves:
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        specs.append(rule_fn(keys, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)

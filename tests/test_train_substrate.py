@@ -1,0 +1,190 @@
+"""Fault-tolerance substrate: checkpoint roundtrip/GC, trainer resume,
+crash-retry, watchdog, gradient compression numerics."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel.compression import (
+    compress_tree,
+    decompress_tree,
+    init_residuals,
+)
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import (
+    OptimizerConfig,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    lr_at,
+)
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (8, 16)),
+        "nested": {"b": jax.random.normal(k, (4,)), "step": jnp.int32(3)},
+    }
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        t = _tree()
+        mgr.save(10, t)
+        mgr.wait()
+        restored, manifest = mgr.restore(None, jax.tree.map(np.asarray, t))
+        assert manifest["step"] == 10
+        jax.tree.map(
+            lambda a, b: np.testing.assert_array_equal(np.asarray(a), b), t, restored
+        )
+
+    def test_keep_k_gc(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save(s, _tree())
+            mgr.wait()
+        assert mgr.all_steps() == [3, 4]
+
+    def test_crash_leaves_no_partial(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3, async_save=False)
+        mgr.save(5, _tree())
+        # simulate a crash mid-write of a later step: orphan tmp dir
+        os.makedirs(tmp_path / "step_000000009.tmp")
+        assert mgr.latest_step() == 5  # tmp ignored
+        mgr.save(7, _tree())  # gc removes the orphan
+        assert not (tmp_path / "step_000000009.tmp").exists()
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, _tree())
+        bad = {"a": np.zeros((2, 2)), "nested": {"b": np.zeros(4), "step": np.int32(0)}}
+        with pytest.raises(ValueError):
+            mgr.restore(1, bad)
+
+
+class TestOptimizer:
+    def test_lr_schedule(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                              min_lr_ratio=0.1)
+        assert float(lr_at(cfg, 0)) == 0.0
+        assert float(lr_at(cfg, 10)) == pytest.approx(1.0, rel=1e-3)
+        assert float(lr_at(cfg, 110)) == pytest.approx(0.1, rel=1e-2)
+
+    def test_adamw_descends_quadratic(self):
+        cfg = OptimizerConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                              weight_decay=0.0)
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        opt = init_opt_state(params)
+        for _ in range(150):
+            grads = {"w": 2 * params["w"]}
+            params, opt, _ = adamw_update(cfg, params, grads, opt)
+        assert float(jnp.abs(params["w"]).max()) < 0.1
+
+    def test_clipping(self):
+        cfg = OptimizerConfig(clip_norm=1.0, warmup_steps=0)
+        params = {"w": jnp.ones((4,))}
+        opt = init_opt_state(params)
+        grads = {"w": jnp.full((4,), 1e6)}
+        _, _, metrics = adamw_update(cfg, params, grads, opt)
+        assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+
+class TestTrainer:
+    def _mk(self, tmp_path, total=20, fault_hook=None, ckpt_every=5):
+        cfg = OptimizerConfig(lr=0.05, warmup_steps=1, total_steps=total)
+
+        def init_state():
+            p = {"w": jnp.asarray([4.0])}
+            return (p, init_opt_state(p))
+
+        @jax.jit
+        def step_impl(params, opt, x):
+            loss, g = jax.value_and_grad(
+                lambda p: jnp.sum((p["w"] - 1.0) ** 2) + 0.0 * x
+            )(params)
+            params, opt, m = adamw_update(cfg, params, g, opt)
+            return params, opt, {"loss": loss, **m}
+
+        def train_step(state, batch):
+            p, o = state
+            p, o, m = step_impl(p, o, batch)
+            return (p, o), m
+
+        return Trainer(
+            TrainerConfig(total_steps=total, ckpt_every=ckpt_every,
+                          ckpt_dir=str(tmp_path), log_every=100),
+            train_step,
+            init_state,
+            lambda step: jnp.float32(step),
+            fault_hook=fault_hook,
+        )
+
+    def test_runs_and_checkpoints(self, tmp_path):
+        t = self._mk(tmp_path)
+        out = t.run()
+        assert out["step"] == 20 and not out["preempted"]
+        assert t.ckpt.latest_step() == 20
+
+    def test_resume_from_checkpoint(self, tmp_path):
+        t1 = self._mk(tmp_path, total=10)
+        t1.run()
+        # new trainer continues to 20 from step 10 without redoing work
+        t2 = self._mk(tmp_path, total=20)
+        out = t2.run()
+        assert out["step"] == 20
+        assert len(t2.metrics_history) == 10  # only steps 10..20
+
+    def test_crash_retry_restores(self, tmp_path):
+        crashes = {"n": 0}
+
+        def fault(step):
+            if step == 7 and crashes["n"] == 0:
+                crashes["n"] += 1
+                raise RuntimeError("injected node failure")
+
+        t = self._mk(tmp_path, total=12, fault_hook=fault)
+        out = t.run()
+        assert out["step"] == 12
+        assert crashes["n"] == 1  # crashed once, resumed from step-5 ckpt
+
+    def test_crash_budget_exhausted(self, tmp_path):
+        def fault(step):
+            raise RuntimeError("permanent failure")
+
+        t = self._mk(tmp_path, total=5, fault_hook=fault)
+        with pytest.raises(RuntimeError):
+            t.run()
+
+
+class TestCompression:
+    def test_error_feedback_reduces_bias(self):
+        rng = np.random.RandomState(0)
+        g_true = {"w": jnp.asarray(rng.randn(1000).astype(np.float32))}
+        res = init_residuals(g_true)
+        acc = jnp.zeros(1000)
+        acc_ref = jnp.zeros(1000)
+        for _ in range(50):
+            qs, ss, res = compress_tree(g_true, res)
+            deq = decompress_tree(qs, ss, g_true)
+            acc = acc + deq["w"]
+            acc_ref = acc_ref + g_true["w"]
+        # accumulated compressed gradients converge to the true sum
+        rel = float(jnp.linalg.norm(acc - acc_ref) / jnp.linalg.norm(acc_ref))
+        assert rel < 0.01
+
+    def test_single_shot_quantization_error_bounded(self):
+        x = jnp.linspace(-3, 3, 512)
+        qs, ss, _ = compress_tree({"w": x}, init_residuals({"w": x}))
+        deq = decompress_tree(qs, ss, {"w": x})
+        assert float(jnp.max(jnp.abs(deq["w"] - x))) <= float(ss["w"]) * 0.51
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
