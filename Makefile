@@ -1,0 +1,17 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: check test smoke bench
+
+# tier-1 gate: full test suite + the operator microbenchmark suite as an
+# allocation/perf smoke test (see DESIGN.md §6)
+check: test smoke
+
+test:
+	$(PYTHON) -m pytest -q
+
+smoke:
+	$(PYTHON) -m benchmarks.run --fast --suite ops
+
+bench:
+	$(PYTHON) -m benchmarks.run --json bench_results.json

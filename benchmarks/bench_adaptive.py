@@ -27,6 +27,7 @@ def run(scale: float = 0.2, runs: int = 5) -> str:
         f = time_query(
             store, q, "barq", runs=runs,
             adaptive_batching=False, initial_batch=fixed, max_batch=fixed,
+            join_initial_batch=fixed,
         )
         suite.add(
             f"fixed_{fixed}", f["mean_s"] * 1e6,

@@ -28,23 +28,45 @@ def _sorted_rel(rng, n, n_keys, extra_cols=1):
     return np.stack(cols)
 
 
+def _drain_timed(make_join, reps=3):
+    """Warmup + best-of-N: rebuild and drain the operator tree per rep,
+    timing only the drain (single-shot numbers on a shared box are ~10%
+    noisy; the min is the standard microbenchmark estimator)."""
+    out = 0
+    best = float("inf")
+    for rep in range(reps + 1):  # rep 0 = warmup
+        j = make_join()
+        t0 = time.perf_counter()
+        out = 0
+        while True:
+            b = j.next_batch()
+            if b is None:
+                break
+            out += b.n_active
+            if hasattr(b, "release"):
+                b.release()
+        dt = time.perf_counter() - t0
+        if rep > 0:
+            best = min(best, dt)
+    return out, best
+
+
 def bench_merge_join(rng, n=60000, n_keys=6000, batch=4096):
+    from repro.core.batch import BatchPool
+
     l = _sorted_rel(rng, n, n_keys)
     r = _sorted_rel(rng, n, n_keys)
-    j = MergeJoin(
-        MaterializedSource((0, 1), l, 0, batch),
-        MaterializedSource((0, 2), r, 0, batch),
-        0,
-    )
-    t0 = time.perf_counter()
-    out = 0
-    while True:
-        b = j.next_batch()
-        if b is None:
-            break
-        out += b.n_active
-    dt = time.perf_counter() - t0
-    return out, dt
+
+    def make():
+        pool = BatchPool()
+        return MergeJoin(
+            MaterializedSource((0, 1), l, 0, batch, pool=pool),
+            MaterializedSource((0, 2), r, 0, batch, pool=pool),
+            0,
+            pool=pool,
+        )
+
+    return _drain_timed(make)
 
 
 def bench_row_merge_join(rng, n=60000, n_keys=6000):
@@ -65,6 +87,25 @@ def bench_row_merge_join(rng, n=60000, n_keys=6000):
         out += 1
     dt = time.perf_counter() - t0
     return out, dt
+
+
+def bench_lookup_join(rng, n_probe=200000, n_build=50000, n_keys=20000, batch=4096):
+    from repro.core.batch import BatchPool
+    from repro.core.operators.lookup_join import LookupJoin
+
+    p = _sorted_rel(rng, n_probe, n_keys)
+    b = _sorted_rel(rng, n_build, n_keys)
+
+    def make():
+        pool = BatchPool()
+        return LookupJoin(
+            MaterializedSource((0, 1), p, 0, batch, pool=pool),
+            MaterializedSource((0, 2), b, 0, batch, pool=pool),
+            0,
+            pool=pool,
+        )
+
+    return _drain_timed(make)
 
 
 def bench_filter(rng, n=2_000_000):
@@ -111,6 +152,10 @@ def run(seed: int = 0) -> str:
     out_r, dt_r = bench_row_merge_join(rng, n=8000, n_keys=800)
     suite.add("merge_join_row", dt_r * 1e6,
               f"tuples_out={out_r};Mtps={out_r / dt_r / 1e6:.3f}")
+
+    out_l, dt_l = bench_lookup_join(rng)
+    suite.add("lookup_join_batch", dt_l * 1e6,
+              f"tuples_out={out_l};Mtps={out_l / dt_l / 1e6:.1f}")
 
     nsel, dtf = bench_filter(rng)
     suite.add("filter_vectorized_2M", dtf * 1e6, f"Mtps={2.0 / dtf:.0f}")

@@ -47,5 +47,6 @@ class Suite:
         self.lines.append(row(name, us, derived))
 
     def emit(self) -> str:
+        """CSV block; benchmarks.run re-parses it for --json output."""
         head = f"# {self.title}\nname,us_per_call,derived"
         return head + "\n" + "\n".join(self.lines)

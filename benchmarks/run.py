@@ -1,6 +1,6 @@
 """Benchmark harness — one suite per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--json out.json]
 
 Prints ``name,us_per_call,derived`` CSV blocks per suite:
   Fig 6a  LSQB CPU-bound joins           (bench_lsqb)
@@ -8,12 +8,29 @@ Prints ``name,us_per_call,derived`` CSV blocks per suite:
   Fig 6c  BSBM Business Intelligence     (bench_bsbm_bi)
   List. 3 adaptive vs fixed batch size   (bench_adaptive)
   List. 1/5 operator microbenchmarks     (bench_operators)
+
+With ``--json <path>`` the same per-suite ``us_per_call`` rows are written
+as a JSON document (suite → [{name, us_per_call, derived}]) so perf
+trajectories can be tracked across PRs (see BENCH_PR1.json).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import Dict, List
+
+
+def _parse_rows(csv_block: str) -> List[Dict[str, object]]:
+    """CSV block emitted by benchmarks.common.Suite → row dicts."""
+    rows: List[Dict[str, object]] = []
+    for line in csv_block.splitlines():
+        if line.startswith("#") or line.startswith("name,") or not line.strip():
+            continue
+        name, us, derived = line.split(",", 2)
+        rows.append({"name": name, "us_per_call": float(us), "derived": derived})
+    return rows
 
 
 def main() -> None:
@@ -21,6 +38,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true", help="smaller scales")
     ap.add_argument("--suite", default="all",
                     choices=("all", "lsqb", "explore", "bi", "adaptive", "ops"))
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write per-suite us_per_call results as JSON")
     args = ap.parse_args()
     f = args.fast
 
@@ -44,10 +63,17 @@ def main() -> None:
         "ops": lambda: bench_operators.run(),
     }
     selected = suites if args.suite == "all" else {args.suite: suites[args.suite]}
+    report: Dict[str, object] = {}
     for name, fn in selected.items():
         t0 = time.time()
-        print(fn())
+        out = fn()
+        print(out)
         print(f"# suite {name} finished in {time.time() - t0:.1f}s\n", flush=True)
+        report[name] = _parse_rows(out)
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report, fh, indent=2)
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""jax version compatibility shims.
+
+The training/distributed code targets the current jax API (`jax.shard_map`,
+`jax.set_mesh`); older releases (<= 0.4.x, as in the pinned verification
+container) spell these `jax.experimental.shard_map.shard_map` and use
+`Mesh` itself as the ambient-mesh context manager. Route through here so
+both work.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def set_mesh(mesh):
+    """Ambient-mesh context manager across jax versions."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh  # 0.4.x: Mesh is a context manager
+    return contextlib.nullcontext(mesh)

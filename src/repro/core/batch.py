@@ -9,13 +9,16 @@ representation on demand (used at materialization boundaries and by the
 batch→row adapter).
 
 Shapes are static per capacity bucket so every per-batch kernel compiles
-once per (n_vars, capacity) signature.
+once per (n_vars, capacity) signature. Buffers are recycled through a
+``BatchPool`` arena keyed by that same signature (DESIGN.md §2.3): on the
+steady state a query's data plane performs zero buffer allocations — each
+operator's output batches reuse the buffers its consumer released.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,6 +43,63 @@ def bucket_for(n: int) -> int:
     return MAX_BATCH
 
 
+class BatchPool:
+    """Arena of recycled batch buffers, keyed by (n_vars, capacity).
+
+    The release()/acquire() cycle makes steady-state execution
+    allocation-free: the number of fresh allocations is bounded by the
+    number of batches simultaneously alive, which is O(plan depth), not
+    O(batches emitted) (DESIGN.md §2.3). ``drain()`` returns the arena's
+    memory at end of query.
+
+    Counters feed the profiler: ``allocations``/``bytes_allocated`` count
+    fresh numpy buffers, ``reuses`` recycled ones, and ``bytes_copied`` is
+    credited by the join windows / concat paths for every byte of column
+    data they physically move.
+    """
+
+    def __init__(self, max_per_bucket: int = 32) -> None:
+        self.max_per_bucket = max_per_bucket
+        self._free: Dict[Tuple[int, int], List[Tuple[np.ndarray, np.ndarray]]] = {}
+        self.allocations = 0
+        self.reuses = 0
+        self.releases = 0
+        self.bytes_allocated = 0
+        self.bytes_copied = 0
+
+    def acquire(self, n_vars: int, capacity: int) -> Tuple[np.ndarray, np.ndarray]:
+        """A (columns, mask) buffer pair; contents are UNINITIALIZED."""
+        stack = self._free.get((n_vars, capacity))
+        if stack:
+            self.reuses += 1
+            return stack.pop()
+        self.allocations += 1
+        cols = np.empty((n_vars, capacity), dtype=np.int32)
+        mask = np.empty(capacity, dtype=bool)
+        self.bytes_allocated += cols.nbytes + mask.nbytes
+        return cols, mask
+
+    def release(self, cols: np.ndarray, mask: np.ndarray) -> None:
+        self.releases += 1
+        key = (int(cols.shape[0]), int(cols.shape[1]))
+        stack = self._free.setdefault(key, [])
+        if len(stack) < self.max_per_bucket:
+            stack.append((cols, mask))
+
+    def drain(self) -> None:
+        """Drop every recycled buffer (end-of-query teardown)."""
+        self._free.clear()
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "allocations": self.allocations,
+            "reuses": self.reuses,
+            "releases": self.releases,
+            "bytes_allocated": self.bytes_allocated,
+            "bytes_copied": self.bytes_copied,
+        }
+
+
 @dataclasses.dataclass
 class ColumnBatch:
     """A batch of solutions in columnar layout.
@@ -53,6 +113,10 @@ class ColumnBatch:
       n_rows:   number of *physically filled* rows (<= capacity). Rows in
                 [n_rows, capacity) are padding and always masked out.
       sorted_by: var id the active rows are non-decreasing in, or None.
+      pool:     owning BatchPool, or None for unpooled buffers. Exactly one
+                holder owns the buffers; transforms that share them
+                (with_mask) MOVE ownership to the derived batch. The final
+                consumer calls release() after copying data out.
     """
 
     var_ids: Tuple[int, ...]
@@ -60,6 +124,7 @@ class ColumnBatch:
     mask: np.ndarray
     n_rows: int
     sorted_by: Optional[int] = None
+    pool: Optional[BatchPool] = None
 
     # -- constructors -----------------------------------------------------
 
@@ -69,22 +134,61 @@ class ColumnBatch:
         cols: Sequence[np.ndarray],
         sorted_by: Optional[int] = None,
         capacity: Optional[int] = None,
+        pool: Optional[BatchPool] = None,
     ) -> "ColumnBatch":
         var_ids = tuple(int(v) for v in var_ids)
         n = int(cols[0].shape[0]) if cols else 0
         cap = capacity or bucket_for(max(n, 1))
-        data = np.full((len(var_ids), cap), NULL_ID, dtype=np.int32)
+        if pool is not None:
+            # pool-aware fast path: write into a recycled buffer instead of
+            # zero-filling a fresh one (DESIGN.md §2.3)
+            data, mask = pool.acquire(len(var_ids), cap)
+            mask[:n] = True
+            mask[n:] = False
+        else:
+            data = np.full((len(var_ids), cap), NULL_ID, dtype=np.int32)
+            mask = np.zeros(cap, dtype=bool)
+            mask[:n] = True
         for i, c in enumerate(cols):
             data[i, :n] = np.asarray(c, dtype=np.int32)
-        mask = np.zeros(cap, dtype=bool)
-        mask[:n] = True
-        return ColumnBatch(var_ids, data, mask, n, sorted_by)
+        if pool is not None and n < cap:
+            data[:, n:] = NULL_ID  # deterministic padding on recycled memory
+        return ColumnBatch(var_ids, data, mask, n, sorted_by, pool)
+
+    @staticmethod
+    def alloc(
+        var_ids: Sequence[int],
+        capacity: int,
+        pool: Optional[BatchPool] = None,
+        sorted_by: Optional[int] = None,
+    ) -> "ColumnBatch":
+        """A writable batch for kernel emit paths: columns content is
+        undefined, mask is all-False, n_rows is 0. The writer fills
+        columns[:, :n], sets mask[:n] and n_rows, and must NULL-fill
+        columns[:, n:] when it stops short of capacity."""
+        var_ids = tuple(int(v) for v in var_ids)
+        if pool is not None:
+            data, mask = pool.acquire(len(var_ids), capacity)
+            mask[:] = False
+        else:
+            data = np.full((len(var_ids), capacity), NULL_ID, dtype=np.int32)
+            mask = np.zeros(capacity, dtype=bool)
+        return ColumnBatch(var_ids, data, mask, 0, sorted_by, pool)
 
     @staticmethod
     def empty(var_ids: Sequence[int], capacity: int = MIN_BATCH) -> "ColumnBatch":
         var_ids = tuple(int(v) for v in var_ids)
         data = np.full((len(var_ids), capacity), NULL_ID, dtype=np.int32)
         return ColumnBatch(var_ids, data, np.zeros(capacity, dtype=bool), 0, None)
+
+    # -- pooling ----------------------------------------------------------
+
+    def release(self) -> None:
+        """Return the buffers to the owning pool. Idempotent; no-op for
+        unpooled batches. The caller must not touch columns/mask after."""
+        pool, self.pool = self.pool, None
+        if pool is not None:
+            pool.release(self.columns, self.mask)
 
     # -- accessors ---------------------------------------------------------
 
@@ -113,20 +217,36 @@ class ColumnBatch:
     # -- transforms ----------------------------------------------------------
 
     def compact(self) -> "ColumnBatch":
-        """Drop inactive rows (materialization boundary)."""
+        """Drop inactive rows (materialization boundary). Buffer ownership
+        moves to the compacted batch; when rows are actually dropped the
+        source buffers are recycled (fancy indexing copied the data out)."""
         if self.n_active == self.n_rows:
             return self
         sel = self.selection_vector()
         cols = [self.columns[i, sel] for i in range(len(self.var_ids))]
-        return ColumnBatch.from_columns(self.var_ids, cols, self.sorted_by)
+        out = ColumnBatch.from_columns(self.var_ids, cols, self.sorted_by, pool=self.pool)
+        self.release()
+        return out
 
     def project(self, keep: Sequence[int]) -> "ColumnBatch":
         keep = tuple(int(v) for v in keep)
         idx = [self.col_index(v) for v in keep]
         sb = self.sorted_by if self.sorted_by in keep else None
-        return ColumnBatch(keep, self.columns[idx], self.mask, self.n_rows, sb)
+        # row fancy-indexing copies, so the projected batch is unpooled and
+        # this batch keeps ownership of its buffers; the mask is only shared
+        # when that ownership can't be released out from under the copy
+        m = self.mask if self.pool is None else self.mask.copy()
+        return ColumnBatch(keep, self.columns[idx], m, self.n_rows, sb)
 
     def with_mask(self, mask: np.ndarray) -> "ColumnBatch":
+        if self.pool is not None:
+            # pooled batches are single-owner: narrow the mask in place and
+            # MOVE buffer ownership to the derived batch (zero-copy)
+            np.logical_and(self.mask, mask, out=self.mask)
+            pool, self.pool = self.pool, None
+            return ColumnBatch(
+                self.var_ids, self.columns, self.mask, self.n_rows, self.sorted_by, pool
+            )
         m = self.mask & mask
         return ColumnBatch(self.var_ids, self.columns, m, self.n_rows, self.sorted_by)
 
@@ -148,9 +268,20 @@ class ColumnBatch:
 
 
 def concat_batches(
-    batches: Sequence[ColumnBatch], var_ids: Optional[Sequence[int]] = None
+    batches: Sequence[ColumnBatch],
+    var_ids: Optional[Sequence[int]] = None,
+    pool: Optional[BatchPool] = None,
+    release_inputs: bool = False,
 ) -> ColumnBatch:
-    """Concatenate batches, aligning schemas and NULL-filling missing vars."""
+    """Concatenate batches, aligning schemas and NULL-filling missing vars.
+
+    Built on the fused gather_emit primitive: each input batch is gathered
+    straight into the output buffer at its offset (one pass per source, no
+    intermediate per-column materialization). With ``pool``, the output
+    buffer is recycled; with ``release_inputs``, consumed batches return
+    their buffers to the pool."""
+    from repro.core import vecops
+
     if not batches:
         return ColumnBatch.empty(tuple(var_ids or ()))
     if var_ids is None:
@@ -161,16 +292,31 @@ def concat_batches(
         var_ids = tuple(seen)
     var_ids = tuple(int(v) for v in var_ids)
     total = sum(b.n_active for b in batches)
-    out = np.full((len(var_ids), max(total, 1)), NULL_ID, dtype=np.int32)
+    # bucket capacities top out at MAX_BATCH; a materialization-sized concat
+    # gets an exact-size buffer instead of a silently clipped one
+    cap = bucket_for(max(total, 1))
+    if total > cap:
+        cap = total
+    out = ColumnBatch.alloc(var_ids, cap, pool)
     pos = 0
     for b in batches:
         sel = b.selection_vector()
         n = len(sel)
-        if n == 0:
-            continue
-        for j, v in enumerate(var_ids):
-            if v in b.var_ids:
-                out[j, pos : pos + n] = b.columns[b.col_index(v), sel]
-        pos += n
-    cols = [out[j, :total] for j in range(len(var_ids))]
-    return ColumnBatch.from_columns(var_ids, cols, None)
+        if n:
+            src_rows = tuple(
+                b.var_ids.index(v) if v in b.var_ids else -1 for v in var_ids
+            )
+            vecops.gather_emit(
+                b.columns, None, sel, None, src_rows, (), (),
+                out=out.columns, out_offset=pos,
+            )
+            if pool is not None:  # NULL-filled missing vars aren't copies
+                pool.bytes_copied += sum(1 for r in src_rows if r >= 0) * n * 4
+            pos += n
+        if release_inputs:
+            b.release()
+    if total < cap:
+        out.columns[:, total:] = NULL_ID
+    out.mask[:total] = True
+    out.n_rows = total
+    return out

@@ -21,6 +21,8 @@ import functools
 from typing import Tuple
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -116,7 +118,7 @@ def make_join_count(mesh: Mesh, cap_factor: float = 2.0):
         of = jax.lax.psum(lof + rof, AXIS)
         return total, of
 
-    shmapped = jax.shard_map(
+    shmapped = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(None, AXIS), P(None, AXIS)),
@@ -164,7 +166,7 @@ def make_join_materialize(mesh: Mesh, out_cap_per_device: int, cap_factor: float
         n = jax.lax.psum(jnp.minimum(total, out_cap).astype(jnp.int32), AXIS)
         return out_keys, out_li, out_ri, n, of
 
-    shmapped = jax.shard_map(
+    shmapped = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(None, AXIS), P(None, AXIS)),
@@ -207,7 +209,7 @@ def make_group_count(mesh: Mesh, cap_factor: float = 2.0, max_groups_per_dev: in
         )
         return gkeys, counts, jax.lax.psum(of, AXIS)
 
-    shmapped = jax.shard_map(
+    shmapped = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(None, AXIS),),

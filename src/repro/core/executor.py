@@ -24,7 +24,7 @@ import numpy as np
 from repro.core import algebra as A
 from repro.core import planner as PL
 from repro.core.adaptive import AdaptiveBatchSizer
-from repro.core.batch import NULL_ID
+from repro.core.batch import NULL_ID, BatchPool, bucket_for
 from repro.core.dictionary import Dictionary
 from repro.core.legacy import operators as LOP
 from repro.core.operators.adapters import BatchToRow, RowToBatch
@@ -56,12 +56,24 @@ class EngineConfig:
     max_batch: int = 4096
     allow_child_skip: bool = True
     spill_dir: Optional[str] = None
+    # join emission batch size: None = default (256); fixed-batch ablations
+    # (bench_adaptive) set it so the joins follow the experiment too
+    join_initial_batch: Optional[int] = None
+    # buffer pooling (DESIGN.md §2.3): recycle batch buffers through a
+    # per-query arena so steady-state execution is allocation-free
+    pool_buffers: bool = True
+    pool_max_per_bucket: int = 32
 
 
 class Translator:
     def __init__(self, store: QuadStore, cfg: EngineConfig):
         self.store = store
         self.cfg = cfg
+        self.pool: Optional[BatchPool] = (
+            BatchPool(cfg.pool_max_per_bucket)
+            if cfg.pool_buffers and cfg.engine != "legacy"
+            else None
+        )
 
     # -- entry ------------------------------------------------------------------
 
@@ -72,11 +84,19 @@ class Translator:
         return op
 
     def _sizer(self, initial: Optional[int] = None) -> AdaptiveBatchSizer:
+        # clamp the configured size to the compiled capacity buckets so
+        # every operator's requests stay on the static-shape grid
         return AdaptiveBatchSizer(
-            initial=initial or self.cfg.initial_batch,
+            initial=min(
+                bucket_for(initial or self.cfg.initial_batch),
+                bucket_for(self.cfg.max_batch),
+            ),
             max_size=self.cfg.max_batch,
             enabled=self.cfg.adaptive_batching,
         )
+
+    def _join_sizer(self) -> AdaptiveBatchSizer:
+        return self._sizer(self.cfg.join_initial_batch or 256)
 
     # -- engine-aware build (barq / mixed) ---------------------------------------------
 
@@ -84,12 +104,13 @@ class Translator:
         mixed = self.cfg.engine == "mixed"
         if isinstance(n, PL.PScan):
             return IndexScan(
-                self.store, n.pattern, n.sort_var, sizer=self._sizer()
+                self.store, n.pattern, n.sort_var, sizer=self._sizer(),
+                pool=self.pool,
             )
         if isinstance(n, PL.PPathScan):
             # property paths stay row-based under every engine (paper §4);
             # the adapter bridges them into batch plans
-            return RowToBatch(self._path_op(n), self.cfg.max_batch)
+            return RowToBatch(self._path_op(n), self.cfg.max_batch, pool=self.pool)
         if isinstance(n, PL.PSort):
             child = self._build(n.child)
             if mixed:
@@ -97,9 +118,12 @@ class Translator:
                 # between, then back to batches at the pipeline break (§4.2)
                 row_child = self._to_row(child)
                 return RowToBatch(
-                    LOP.RowSort(row_child, var=n.var), self.cfg.max_batch
+                    LOP.RowSort(row_child, var=n.var), self.cfg.max_batch,
+                    pool=self.pool,
                 )
-            return SortByVarOp(self._to_batch(child), n.var, self.cfg.max_batch)
+            return SortByVarOp(
+                self._to_batch(child), n.var, self.cfg.max_batch, pool=self.pool
+            )
         if isinstance(n, PL.PMergeJoin):
             left = self._to_batch(self._build(n.left))
             right = self._to_batch(self._build(n.right))
@@ -110,18 +134,20 @@ class Translator:
                 mode=n.mode,
                 post_filter=n.post_filter,
                 dictionary=self.store.dict,
-                sizer=self._sizer(256),
+                sizer=self._join_sizer(),  # honors EngineConfig.join_initial_batch
                 spill_dir=self.cfg.spill_dir,
                 allow_child_skip=self.cfg.allow_child_skip,
+                pool=self.pool,
             )
         if isinstance(n, PL.PLookupJoin):
             probe = self._to_batch(self._build(n.probe))
             build = self._to_batch(self._build(n.build))
-            return LookupJoin(probe, build, n.var, n.mode)
+            return LookupJoin(probe, build, n.var, n.mode, pool=self.pool)
         if isinstance(n, PL.PCross):
             return CrossJoin(
                 self._to_batch(self._build(n.left)),
                 self._to_batch(self._build(n.right)),
+                pool=self.pool,
             )
         if isinstance(n, PL.PFilter):
             return FilterOp(
@@ -129,13 +155,14 @@ class Translator:
             )
         if isinstance(n, PL.PExtend):
             return ExtendOp(
-                self._to_batch(self._build(n.child)), n.var, n.expr, self.store.dict
+                self._to_batch(self._build(n.child)), n.var, n.expr,
+                self.store.dict, pool=self.pool,
             )
         if isinstance(n, PL.PProject):
             child = self._build(n.child)
             if isinstance(child, LOP.RowOperator):
                 return LOP.RowProject(child, n.vars)
-            return ProjectOp(child, n.vars)
+            return ProjectOp(child, n.vars, pool=self.pool)
         if isinstance(n, PL.PDistinct):
             child = self._build(n.child)
             if mixed:
@@ -168,9 +195,11 @@ class Translator:
                         self._to_row(child), keys=n.keys, dictionary=self.store.dict
                     ),
                     self.cfg.max_batch,
+                    pool=self.pool,
                 )
             return OrderByOp(
-                self._to_batch(child), n.keys, self.store.dict, self.cfg.max_batch
+                self._to_batch(child), n.keys, self.store.dict,
+                self.cfg.max_batch, pool=self.pool,
             )
         if isinstance(n, PL.PSlice):
             child = self._build(n.child)
@@ -181,6 +210,7 @@ class Translator:
             return UnionOp(
                 self._to_batch(self._build(n.left)),
                 self._to_batch(self._build(n.right)),
+                pool=self.pool,
             )
         raise TypeError(type(n))
 
@@ -189,7 +219,7 @@ class Translator:
     def _to_batch(self, op: AnyOp) -> BatchOperator:
         if isinstance(op, BatchOperator):
             return op
-        return RowToBatch(op, self.cfg.max_batch)
+        return RowToBatch(op, self.cfg.max_batch, pool=self.pool)
 
     def _to_row(self, op: AnyOp) -> LOP.RowOperator:
         if isinstance(op, LOP.RowOperator):
@@ -338,11 +368,13 @@ class _RowExtend(LOP.RowOperator):
 
 class QueryResult:
     def __init__(self, var_table: A.VarTable, proj: Tuple[int, ...],
-                 rows: np.ndarray, root: AnyOp):
+                 rows: np.ndarray, root: AnyOp,
+                 pool: Optional[BatchPool] = None):
         self.var_table = var_table
         self.proj = proj
         self.rows = rows  # (n, n_proj) int32 codes
         self.root = root
+        self.pool = pool  # per-query buffer arena (counters survive drain)
 
     @property
     def n_rows(self) -> int:
@@ -361,7 +393,7 @@ class QueryResult:
         return out
 
     def profile(self) -> str:
-        return profile_tree(self.root, self.var_table)
+        return profile_tree(self.root, self.var_table, pool=self.pool)
 
 
 class Engine:
@@ -384,7 +416,9 @@ class Engine:
     def execute_plan(
         self, phys: PL.Phys, var_table: Optional[A.VarTable] = None
     ) -> QueryResult:
-        op = Translator(self.store, self.cfg).translate(phys)
+        translator = Translator(self.store, self.cfg)
+        op = translator.translate(phys)
+        pool = translator.pool
         proj = tuple(
             phys_v for phys_v in PL.phys_vars(phys)
         )
@@ -395,18 +429,29 @@ class Engine:
                 for j, v in enumerate(proj):
                     arr[i, j] = r.get(v, int(NULL_ID))
         else:
-            batches = op.drain()
+            # streaming drain: copy each batch's projection out, then give
+            # the buffers straight back to the arena — the release() side of
+            # the zero-copy pipeline (DESIGN.md §2.3)
             blocks = []
-            for b in batches:
+            while True:
+                b = op.next_batch()
+                if b is None:
+                    break
+                if not b.n_active:
+                    b.release()
+                    continue
                 cb = b.compact()
                 order = [cb.col_index(v) for v in proj]
-                blocks.append(cb.columns[order, : cb.n_rows].T)
+                blocks.append(cb.columns[order, : cb.n_rows].T)  # fancy-index copy
+                cb.release()
             arr = (
                 np.concatenate(blocks, axis=0)
                 if blocks
                 else np.zeros((0, len(proj)), dtype=np.int32)
             )
-        return QueryResult(var_table or A.VarTable(), proj, arr, op)
+        if pool is not None:
+            pool.drain()  # return arena memory; counters remain readable
+        return QueryResult(var_table or A.VarTable(), proj, arr, op, pool)
 
     def execute(self, node_or_text: Union[str, A.PlanNode],
                 var_table: Optional[A.VarTable] = None) -> QueryResult:

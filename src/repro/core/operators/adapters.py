@@ -12,7 +12,7 @@ from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.batch import NULL_ID, ColumnBatch, bucket_for
+from repro.core.batch import NULL_ID, BatchPool, ColumnBatch, bucket_for
 from repro.core.legacy.operators import Row, RowOperator
 from repro.core.operators.base import BatchOperator
 
@@ -45,6 +45,8 @@ class BatchToRow(RowOperator):
                     for ci, v in enumerate(b.var_ids)
                     if b.columns[ci, r] != NULL_ID
                 }
+            if self._batch is not None:
+                self._batch.release()  # rows were copied out as dicts
             self._batch = self.child.next_batch()
             if self._batch is None:
                 return None
@@ -58,19 +60,28 @@ class BatchToRow(RowOperator):
             col = self._batch.columns[ci, self._sel[self._i :]]
             self._i += int(np.searchsorted(col, target, side="left"))
             if self._i >= len(self._sel):
+                self._batch.release()
                 self._batch = None
         self.child.skip(var, target)
 
     def _reset(self) -> None:
         self.child.reset()
+        if self._batch is not None:
+            self._batch.release()
         self._batch = None
         self._i = 0
 
 
 class RowToBatch(BatchOperator):
-    def __init__(self, child: RowOperator, batch_size: int = 1024):
+    def __init__(
+        self,
+        child: RowOperator,
+        batch_size: int = 1024,
+        pool: Optional[BatchPool] = None,
+    ):
         self.child = child
         self.batch_size = batch_size
+        self.pool = pool
         super().__init__("RowToBatch", "")
 
     def var_ids(self) -> Tuple[int, ...]:
@@ -85,7 +96,8 @@ class RowToBatch(BatchOperator):
     def _next(self) -> Optional[ColumnBatch]:
         vars_ = tuple(self.child.var_ids())
         cap = bucket_for(self.batch_size)
-        cols = np.full((len(vars_), cap), NULL_ID, dtype=np.int32)
+        b = ColumnBatch.alloc(vars_, cap, self.pool, self.child.sorted_by())
+        cols = b.columns
         n = 0
         while n < self.batch_size:
             r = self.child.next_row()
@@ -95,10 +107,14 @@ class RowToBatch(BatchOperator):
                 cols[ci, n] = r.get(v, int(NULL_ID))
             n += 1
         if n == 0:
+            b.release()
             return None
-        mask = np.zeros(cap, dtype=bool)
-        mask[:n] = True
-        return ColumnBatch(vars_, cols, mask, n, self.child.sorted_by())
+        if n < cap:
+            cols[:, n:] = NULL_ID
+        b.mask[:n] = True
+        b.n_rows = n
+        b.sorted_by = self.child.sorted_by()
+        return b
 
     def _skip(self, var: int, target: int) -> None:
         self.child.skip(var, target)

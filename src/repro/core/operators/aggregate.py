@@ -92,6 +92,7 @@ class StreamingGroupBy(BatchOperator):
                 break
             cb = b.compact()
             if cb.n_rows == 0:
+                cb.release()
                 continue
             keys = (
                 cb.column(self.g)
@@ -99,6 +100,7 @@ class StreamingGroupBy(BatchOperator):
                 else np.zeros(cb.n_rows, dtype=np.int32)
             )
             self._consume_batch(keys, cb)
+            cb.release()  # aggregates copied into the carry state
         self._close_carry()
         self._drained = True
 
@@ -323,7 +325,9 @@ class StreamingDistinct(BatchOperator):
             b = self.child.next_batch()
             if b is None:
                 return None
-            cb = b.compact().project((self.var,))
+            fb = b.compact()
+            cb = fb.project((self.var,))
+            fb.release()  # project copied the kept column
             if cb.n_rows == 0:
                 continue
             keys = cb.column(self.var)

@@ -9,15 +9,21 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.core import vecops
-from repro.core.batch import ColumnBatch, bucket_for
+from repro.core.batch import BatchPool, ColumnBatch, bucket_for
 from repro.core.operators.base import BatchOperator
 from repro.core.operators.sort import materialize
 
 
 class CrossJoin(BatchOperator):
-    def __init__(self, left: BatchOperator, right: BatchOperator):
+    def __init__(
+        self,
+        left: BatchOperator,
+        right: BatchOperator,
+        pool: Optional[BatchPool] = None,
+    ):
         self.left = left
         self.right = right
+        self.pool = pool
         lv = tuple(left.var_ids())
         self._right_out = tuple(v for v in right.var_ids() if v not in lv)
         self._vars = lv + self._right_out
@@ -59,7 +65,7 @@ class CrossJoin(BatchOperator):
         cols = [self._lcols[self._lvars.index(v), li] for v in self._lvars]
         for v in self._right_out:
             cols.append(self._rcols[self._rvars.index(v), ri])
-        return ColumnBatch.from_columns(self._vars, cols, None)
+        return ColumnBatch.from_columns(self._vars, cols, None, pool=self.pool)
 
     def _reset(self) -> None:
         self.left.reset()

@@ -15,13 +15,17 @@ The classical sort-merge join decomposed into three phases:
            exploiting sorted storage (the BARQ contribution over
            CockroachDB's vectorized merge joiner).
 
-Right-side ranges can span batches; the right window accumulates them and
-spills to disk beyond a threshold (paper: 'a special collection that can
-spill off to disk'). Multiple join keys are handled by a vectorized
-post-build equality pass on the secondary key columns updating the
-selection mask (§3.2 Multiple Join Keys). Modes: inner, left_outer
-(OPTIONAL, incl. the per-group all-rows-filtered → NULL-row case the paper
-sketches), semi (EXISTS) and anti (MINUS) on the same machinery.
+Right-side ranges can span batches; the right window accumulates them in an
+amortized ring/doubling buffer (append is in-place, trims are head-offset
+bumps — no whole-window copies; DESIGN.md §2.3) and spills to disk beyond a
+threshold (paper: 'a special collection that can spill off to disk'); a
+spilled window trims and gathers without being read back. Emission runs
+through the fused gather_emit kernel: gather + NULL-extension + the
+vectorized multi-key equality pass (§3.2 Multiple Join Keys) in one
+dispatch, writing straight into a pool-recycled output buffer. Modes:
+inner, left_outer (OPTIONAL, incl. the per-group all-rows-filtered →
+NULL-row case the paper sketches), semi (EXISTS) and anti (MINUS) on the
+same machinery.
 """
 
 from __future__ import annotations
@@ -34,53 +38,93 @@ import numpy as np
 
 from repro.core import vecops
 from repro.core.adaptive import AdaptiveBatchSizer
-from repro.core.batch import NULL_ID, ColumnBatch, bucket_for
+from repro.core.batch import NULL_ID, BatchPool, ColumnBatch, bucket_for
 from repro.core.expressions import eval_expr_mask
 from repro.core.operators.base import BatchOperator
+from repro.kernels import ops as KOPS
 
 _SPILL_THRESHOLD_ROWS = 1 << 20
+_WINDOW_MIN_CAP = 256  # rows; first append sizes the buffer (pow2 doubling)
 
 
 class _Window:
     """Sorted row window for one side: payload columns keyed by the join
     variable, accumulated across child batches and trimmed as the other
-    side advances past keys."""
+    side advances past keys.
 
-    def __init__(self, var_ids: Tuple[int, ...], key_var: int, spill_dir: Optional[str]):
+    Implemented as an amortized ring/doubling buffer: live rows occupy
+    ``_buf[:, head:tail]``. ``append_batch`` writes in place at the tail
+    (compacting to the front or doubling capacity only when out of room, so
+    total copy traffic is O(rows appended), not O(rows × batches));
+    ``drop_prefix``/``trim_below`` just advance the head. A spilled window
+    (memory-mapped) keeps trimming and gathering without being read back —
+    only a subsequent append materializes it."""
+
+    def __init__(
+        self,
+        var_ids: Tuple[int, ...],
+        key_var: int,
+        spill_dir: Optional[str],
+        pool: Optional[BatchPool] = None,
+    ):
         self.var_ids = var_ids
         self.key_pos = var_ids.index(key_var)
-        self.cols = np.zeros((len(var_ids), 0), dtype=np.int32)
+        self._buf: np.ndarray = np.empty((len(var_ids), 0), dtype=np.int32)
+        self._head = 0
+        self._tail = 0
         self.exhausted = False
         self.spill_dir = spill_dir
+        self.pool = pool  # copy-traffic accounting + recycling of consumed batches
         self._spill_path: Optional[str] = None
+        self._spilled = False
+
+    # -- views (no copies) -------------------------------------------------
+
+    @property
+    def cols(self) -> np.ndarray:
+        """Live rows as an (n_vars, n) view."""
+        return self._buf[:, self._head : self._tail]
 
     @property
     def keys(self) -> np.ndarray:
-        return self.cols[self.key_pos]
+        return self._buf[self.key_pos, self._head : self._tail]
 
     @property
     def n(self) -> int:
-        return int(self.cols.shape[1])
+        return self._tail - self._head
 
     def last_key(self) -> int:
-        return int(self.keys[-1])
+        return int(self._buf[self.key_pos, self._tail - 1])
+
+    # -- mutation ----------------------------------------------------------
 
     def append_batch(self, b: ColumnBatch) -> int:
-        cb = b.compact()
-        if cb.n_rows == 0:
+        n = b.n_active
+        if n == 0:
+            b.release()
             return 0
-        order = [cb.col_index(v) for v in self.var_ids]
-        new_cols = cb.columns[order, : cb.n_rows]
-        self._unspill()
-        self.cols = np.concatenate([self.cols, new_cols], axis=1)
-        if self.spill_dir and self.n > _SPILL_THRESHOLD_ROWS:
+        self._reserve(n)
+        dst = self._buf[:, self._tail : self._tail + n]
+        contiguous = n == b.n_rows
+        sel = None if contiguous else b.selection_vector()
+        for j, v in enumerate(self.var_ids):
+            src = b.columns[b.col_index(v)]
+            dst[j] = src[:n] if contiguous else src[sel]
+        self._tail += n
+        if self.pool is not None:
+            self.pool.bytes_copied += dst.nbytes
+        b.release()
+        if (
+            self.spill_dir
+            and not self._spilled
+            and self.n > _SPILL_THRESHOLD_ROWS
+        ):
             self._spill()
-        return int(new_cols.shape[1])
+        return n
 
     def drop_prefix(self, k: int) -> None:
         if k > 0:
-            self._unspill()
-            self.cols = self.cols[:, k:]
+            self._head += k  # O(1); valid for spilled windows too
 
     def trim_below(self, key: int) -> int:
         """Drop rows with keys < key; returns number dropped."""
@@ -91,18 +135,65 @@ class _Window:
         return cut
 
     def gather(self, idx: np.ndarray) -> np.ndarray:
-        return np.asarray(self.cols[:, idx])
+        return np.asarray(self._buf[:, self._head + idx])
+
+    def close(self) -> None:
+        if self._spill_path is not None:
+            self._buf = np.empty((len(self.var_ids), 0), dtype=np.int32)
+            self._head = self._tail = 0
+            self._spilled = False
+            os.unlink(self._spill_path)
+            self._spill_path = None
+
+    # -- internals ---------------------------------------------------------
+
+    def _reserve(self, n: int) -> None:
+        if self._spilled:
+            self._materialize(extra=n)
+        cap = int(self._buf.shape[1])
+        if self._tail + n <= cap:
+            return
+        live = self.n
+        if live + n <= cap and self._head >= live:
+            # shift live rows to the front (regions don't overlap); the head
+            # must clear half the buffer first, so each row is moved O(1)
+            # times on average
+            self._buf[:, :live] = self._buf[:, self._head : self._tail]
+            if self.pool is not None:
+                self.pool.bytes_copied += live * len(self.var_ids) * 4
+            self._head, self._tail = 0, live
+            return
+        new_cap = max(cap, _WINDOW_MIN_CAP)
+        while new_cap < live + n:
+            new_cap *= 2
+        nb = np.empty((len(self.var_ids), new_cap), dtype=np.int32)
+        nb[:, :live] = self._buf[:, self._head : self._tail]
+        if self.pool is not None:
+            self.pool.bytes_copied += live * len(self.var_ids) * 4
+        self._buf, self._head, self._tail = nb, 0, live
 
     def _spill(self) -> None:
         fd, path = tempfile.mkstemp(suffix=".npy", dir=self.spill_dir)
         os.close(fd)
-        np.save(path, self.cols)
+        np.save(path, self._buf[:, self._head : self._tail])
+        live = self.n
         self._spill_path = path
-        self.cols = np.load(path, mmap_mode="r")
+        self._buf = np.load(path, mmap_mode="r")
+        self._head, self._tail = 0, live
+        self._spilled = True
 
-    def _unspill(self) -> None:
+    def _materialize(self, extra: int = 0) -> None:
+        live = self.n
+        cap = _WINDOW_MIN_CAP
+        while cap < live + extra:
+            cap *= 2
+        nb = np.empty((len(self.var_ids), cap), dtype=np.int32)
+        nb[:, :live] = np.asarray(self._buf[:, self._head : self._tail])
+        if self.pool is not None:
+            self.pool.bytes_copied += live * len(self.var_ids) * 4
+        self._buf, self._head, self._tail = nb, 0, live
+        self._spilled = False
         if self._spill_path is not None:
-            self.cols = np.asarray(self.cols)
             os.unlink(self._spill_path)
             self._spill_path = None
 
@@ -119,6 +210,7 @@ class MergeJoin(BatchOperator):
         sizer: Optional[AdaptiveBatchSizer] = None,
         spill_dir: Optional[str] = None,
         allow_child_skip: bool = True,
+        pool: Optional[BatchPool] = None,
     ) -> None:
         assert mode in ("inner", "left_outer", "semi", "anti")
         assert left.sorted_by() == join_var, "left child must be sorted by join var"
@@ -131,6 +223,7 @@ class MergeJoin(BatchOperator):
         self.dictionary = dictionary
         self.sizer = sizer or AdaptiveBatchSizer(initial=256)
         self.allow_child_skip = allow_child_skip
+        self.pool = pool
 
         lv, rv = tuple(left.var_ids()), tuple(right.var_ids())
         self.shared = tuple(x for x in lv if x in rv)
@@ -142,10 +235,16 @@ class MergeJoin(BatchOperator):
             self._right_out = tuple(x for x in rv if x not in lv)
         self._out_vars: Tuple[int, ...] = lv + self._right_out
 
-        self._lwin = _Window(lv, join_var, None)
-        self._rwin = _Window(rv, join_var, spill_dir)
+        # static gather_emit plan: emit all left rows, then the right-only
+        # rows; secondary keys become fused equality pairs
+        self._lsel = tuple(range(len(lv)))
+        self._rsel = tuple(rv.index(x) for x in self._right_out)
+        self._pairs = tuple((lv.index(sv), rv.index(sv)) for sv in self.secondary)
+
+        self._lwin = _Window(lv, join_var, None, pool)
+        self._rwin = _Window(rv, join_var, spill_dir, pool)
         self._lmatched = np.zeros(0, dtype=bool)  # aligned with left window
-        # pending build: (lstarts, llens, rstarts, rlens, cum, emitted, l_hi)
+        # pending build: (lstarts, llens, rstarts, rlens, cum, emitted)
         self._pending: Optional[Tuple] = None
         self._finalize_l_hi: Optional[int] = None
         self._leftover_queue: List[np.ndarray] = []  # (n_lvars, n) row blocks
@@ -206,8 +305,10 @@ class MergeJoin(BatchOperator):
     def _reset(self) -> None:
         self.left.reset()
         self.right.reset()
-        self._lwin = _Window(self._lwin.var_ids, self.v, None)
-        self._rwin = _Window(self._rwin.var_ids, self.v, self._rwin.spill_dir)
+        self._lwin.close()
+        self._rwin.close()
+        self._lwin = _Window(self._lwin.var_ids, self.v, None, self.pool)
+        self._rwin = _Window(self._rwin.var_ids, self.v, self._rwin.spill_dir, self.pool)
         self._lmatched = np.zeros(0, dtype=bool)
         self._pending = None
         self._finalize_l_hi = None
@@ -289,9 +390,17 @@ class MergeJoin(BatchOperator):
         gl, gr = vecops.probe_groups(lvals, rvals)
 
         if len(gl) and not self._needs_expansion_for_match:
-            # fast path: primary-key membership decides matched
-            for s, ln in zip(lstarts[gl], llens[gl]):
-                self._lmatched[s : s + ln] = True
+            # fast path: primary-key membership decides matched. The ranges
+            # are marked with a +1/-1 boundary diff + running sum instead of
+            # a per-group Python loop.
+            d = np.zeros(l_hi + 1, dtype=np.int32)
+            ls, ll = lstarts[gl], llens[gl]
+            np.add.at(d, ls, 1)
+            np.add.at(d, ls + ll, -1)
+            np.logical_or(
+                self._lmatched[:l_hi], np.cumsum(d[:-1]) > 0,
+                out=self._lmatched[:l_hi],
+            )
 
         need_build = len(gl) > 0 and (
             self.mode in ("inner", "left_outer") or self._needs_expansion_for_match
@@ -341,25 +450,32 @@ class MergeJoin(BatchOperator):
         g_ls, g_ll, g_rs, g_rl, cum, emitted = self._pending
         total = int(cum[-1])
         count = min(cap, total - emitted)
-        li, ri = vecops.expand_cross(g_ls, g_ll, g_rs, g_rl, cum, emitted, count)
+        li, ri = KOPS.join_expand(g_ls, g_ll, g_rs, g_rl, cum, emitted, count)
         emitted += count
         self._pending = None if emitted >= total else (g_ls, g_ll, g_rs, g_rl, cum, emitted)
 
-        lcols = self._lwin.gather(li)
-        rcols = self._rwin.gather(ri)
-        mask = np.ones(count, dtype=bool)
-        for sv in self.secondary:  # multi-key vectorized equality (paper §3.2)
-            lp = self._lwin.var_ids.index(sv)
-            rp = self._rwin.var_ids.index(sv)
-            mask &= lcols[lp] == rcols[rp]
+        if self.mode in ("semi", "anti") and self.post_filter is None:
+            # expansion only feeds matched-tracking: fused mask, no columns
+            _, mask = KOPS.gather_emit(
+                self._lwin.cols, self._rwin.cols, li, ri, (), (), self._pairs
+            )
+            if mask.any():
+                self._lmatched[li[mask]] = True
+            return None
 
-        out_cols = [lcols[i] for i in range(lcols.shape[0])]
-        for rv_ in self._right_out:
-            out_cols.append(rcols[self._rwin.var_ids.index(rv_)])
-        b = ColumnBatch.from_columns(self._out_vars, out_cols, self.v)
-        m = np.zeros(b.capacity, dtype=bool)
-        m[:count] = mask
-        b = b.with_mask(m)
+        b = ColumnBatch.alloc(
+            self._out_vars, bucket_for(max(count, 1)), self.pool, self.v
+        )
+        _, mask = KOPS.gather_emit(
+            self._lwin.cols, self._rwin.cols, li, ri,
+            self._lsel, self._rsel, self._pairs, out=b.columns,
+        )
+        b.n_rows = count
+        if count < b.capacity:
+            b.columns[:, count:] = NULL_ID
+        b.mask[:count] = mask
+        if self.pool is not None:
+            self.pool.bytes_copied += len(self._out_vars) * count * 4
         if self.post_filter is not None:
             b = b.with_mask(eval_expr_mask(self.post_filter, b, self.dictionary))
 
@@ -369,8 +485,12 @@ class MergeJoin(BatchOperator):
                 self._lmatched[li[surv]] = True
 
         if self.mode in ("semi", "anti"):
+            b.release()
             return None  # expansion only feeds matched-tracking
-        return b if b.n_active else None
+        if b.n_active:
+            return b
+        b.release()
+        return None
 
     def _emit_leftovers(self, cap: int) -> ColumnBatch:
         rows = self._leftover_queue.pop(0)
@@ -382,4 +502,4 @@ class MergeJoin(BatchOperator):
         out_cols = [rows[i] for i in range(rows.shape[0])]
         for _ in self._right_out:
             out_cols.append(np.full(n, NULL_ID, dtype=np.int32))
-        return ColumnBatch.from_columns(self._out_vars, out_cols, self.v)
+        return ColumnBatch.from_columns(self._out_vars, out_cols, self.v, pool=self.pool)

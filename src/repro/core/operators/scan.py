@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.core.adaptive import AdaptiveBatchSizer
 from repro.core.algebra import K, TriplePattern, V
-from repro.core.batch import ColumnBatch
+from repro.core.batch import BatchPool, ColumnBatch
 from repro.core.operators.base import BatchOperator
 from repro.core.storage import INDEX_ORDERS, QuadStore, ScanRange
 
@@ -29,9 +29,11 @@ class IndexScan(BatchOperator):
         want_sorted_var: Optional[int] = None,
         sizer: Optional[AdaptiveBatchSizer] = None,
         detail: str = "",
+        pool: Optional[BatchPool] = None,
     ) -> None:
         self.store = store
         self.pattern = pattern
+        self.pool = pool
 
         # encode constant slots; a constant not present in the dictionary
         # means the pattern matches nothing
@@ -111,7 +113,9 @@ class IndexScan(BatchOperator):
         self.offset += len(rows)
         self.stats.rows_scanned += len(rows)
         cols = [rows[:, self.var_col_pos[v]] for v in self._var_ids]
-        b = ColumnBatch.from_columns(self._var_ids, cols, self._sorted_var)
+        b = ColumnBatch.from_columns(
+            self._var_ids, cols, self._sorted_var, pool=self.pool
+        )
         for ra, rb in self.residual_pairs:
             pa, pb = self.perm.index(ra), self.perm.index(rb)
             m = np.zeros(b.capacity, dtype=bool)

@@ -13,7 +13,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.core.algebra import Expr
-from repro.core.batch import NULL_ID, ColumnBatch, concat_batches
+from repro.core.batch import NULL_ID, BatchPool, ColumnBatch, concat_batches
 from repro.core.dictionary import Dictionary
 from repro.core.expressions import eval_expr_mask, eval_expr_values
 from repro.core.operators.base import BatchOperator
@@ -43,7 +43,7 @@ class FilterOp(BatchOperator):
             b = b.with_mask(eval_expr_mask(self.expr, b, self.dictionary))
             if b.n_active:
                 return b
-            # all rows inactive: discard batch, keep pulling
+            b.release()  # all rows inactive: recycle batch, keep pulling
 
     def _skip(self, var: int, target: int) -> None:
         self.child.skip(var, target)
@@ -53,9 +53,15 @@ class FilterOp(BatchOperator):
 
 
 class ProjectOp(BatchOperator):
-    def __init__(self, child: BatchOperator, keep: Tuple[int, ...]):
+    def __init__(
+        self,
+        child: BatchOperator,
+        keep: Tuple[int, ...],
+        pool: Optional[BatchPool] = None,
+    ):
         self.child = child
         self.keep = tuple(keep)
+        self.pool = pool
         super().__init__("Project", f"{len(keep)} vars")
 
     def var_ids(self) -> Tuple[int, ...]:
@@ -70,7 +76,21 @@ class ProjectOp(BatchOperator):
 
     def _next(self) -> Optional[ColumnBatch]:
         b = self.child.next_batch()
-        return None if b is None else b.project(self.keep)
+        if b is None:
+            return None
+        if self.pool is None:
+            return b.project(self.keep)
+        # pooled path: copy the kept columns into a recycled buffer and
+        # give the source buffers back
+        idx = [b.col_index(v) for v in self.keep]
+        sb = b.sorted_by if b.sorted_by in self.keep else None
+        out = ColumnBatch.alloc(self.keep, b.capacity, self.pool, sb)
+        out.columns[...] = b.columns[idx]
+        out.mask[...] = b.mask
+        out.n_rows = b.n_rows
+        self.pool.bytes_copied += out.columns.nbytes
+        b.release()
+        return out
 
     def _skip(self, var: int, target: int) -> None:
         self.child.skip(var, target)
@@ -83,11 +103,19 @@ class ExtendOp(BatchOperator):
     """BIND (expr AS ?v): computes the value expression vectorized over the
     batch, dictionary-encodes the distinct results, appends a column."""
 
-    def __init__(self, child: BatchOperator, var: int, expr: Expr, dictionary: Dictionary):
+    def __init__(
+        self,
+        child: BatchOperator,
+        var: int,
+        expr: Expr,
+        dictionary: Dictionary,
+        pool: Optional[BatchPool] = None,
+    ):
         self.child = child
         self.var = var
         self.expr = expr
         self.dictionary = dictionary
+        self.pool = pool
         super().__init__("Bind", f"?v{var}")
 
     def var_ids(self) -> Tuple[int, ...]:
@@ -115,8 +143,15 @@ class ExtendOp(BatchOperator):
         if len(uniq):
             tmp[ok[:n]] = uniq_ids[inv]
         codes[:n] = tmp
-        cols = np.concatenate([b.columns, codes[None, :]], axis=0)
-        return ColumnBatch(self.var_ids(), cols, b.mask, b.n_rows, b.sorted_by)
+        out = ColumnBatch.alloc(self.var_ids(), b.capacity, self.pool, b.sorted_by)
+        out.columns[:-1] = b.columns
+        out.columns[-1] = codes
+        out.mask[...] = b.mask
+        out.n_rows = b.n_rows
+        if self.pool is not None:
+            self.pool.bytes_copied += out.columns.nbytes
+        b.release()
+        return out
 
     def _reset(self) -> None:
         self.child.reset()
@@ -157,11 +192,14 @@ class SliceOp(BatchOperator):
             if self.limit is not None:
                 keep = keep[: self.limit - self._emitted]
             if len(keep) == 0:
+                b.release()
                 continue
             m = np.zeros(b.capacity, dtype=bool)
             m[keep] = True
             self._emitted += len(keep)
-            return ColumnBatch(b.var_ids, b.columns, m, b.n_rows, b.sorted_by)
+            # keep ⊆ active rows, so narrowing the mask is equivalent to
+            # replacing it (and moves pooled-buffer ownership along)
+            return b.with_mask(m)
 
     def _reset(self) -> None:
         self.child.reset()
@@ -170,9 +208,15 @@ class SliceOp(BatchOperator):
 
 
 class UnionOp(BatchOperator):
-    def __init__(self, left: BatchOperator, right: BatchOperator):
+    def __init__(
+        self,
+        left: BatchOperator,
+        right: BatchOperator,
+        pool: Optional[BatchPool] = None,
+    ):
         self.left = left
         self.right = right
+        self.pool = pool
         lv = tuple(left.var_ids())
         self._vars = lv + tuple(v for v in right.var_ids() if v not in lv)
         self._on_right = False
@@ -196,8 +240,11 @@ class UnionOp(BatchOperator):
             if set(b.var_ids) == set(self._vars):
                 # cheap path: same schema, reorder columns only
                 order = [b.col_index(v) for v in self._vars]
-                return ColumnBatch(self._vars, b.columns[order], b.mask, b.n_rows, None)
-            return concat_batches([b], self._vars)
+                m = b.mask if b.pool is None else b.mask.copy()
+                out = ColumnBatch(self._vars, b.columns[order], m, b.n_rows, None)
+                b.release()  # row fancy-indexing copied the columns
+                return out
+            return concat_batches([b], self._vars, pool=self.pool, release_inputs=True)
 
     def _reset(self) -> None:
         self.left.reset()

@@ -17,7 +17,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.algebra import SortKey
-from repro.core.batch import MAX_BATCH, ColumnBatch
+from repro.core.batch import MAX_BATCH, BatchPool, ColumnBatch
 from repro.core.dictionary import Dictionary
 from repro.core.operators.base import BatchOperator
 from repro.core.vecops import sorted_search
@@ -37,11 +37,13 @@ class MaterializedSource(BatchOperator):
         sorted_var: Optional[int] = None,
         batch_size: int = MAX_BATCH,
         name: str = "Materialized",
+        pool: Optional[BatchPool] = None,
     ):
         self._vars = tuple(int(v) for v in var_ids)
         self.cols = cols
         self._sorted_var = sorted_var
         self.batch_size = batch_size
+        self.pool = pool
         self.offset = 0
         super().__init__(name, f"{cols.shape[1]} rows")
 
@@ -59,7 +61,10 @@ class MaterializedSource(BatchOperator):
         block = self.cols[:, self.offset : hi]
         self.offset = hi
         return ColumnBatch.from_columns(
-            self._vars, [block[i] for i in range(block.shape[0])], self._sorted_var
+            self._vars,
+            [block[i] for i in range(block.shape[0])],
+            self._sorted_var,
+            pool=self.pool,
         )
 
     def _skip(self, var: int, target: int) -> None:
@@ -74,7 +79,8 @@ class MaterializedSource(BatchOperator):
 
 
 def materialize(child: BatchOperator) -> Tuple[Tuple[int, ...], np.ndarray]:
-    """Drain a child into one (n_vars, n) compacted block."""
+    """Drain a child into one (n_vars, n) compacted block, recycling the
+    consumed batches (pipeline-breaker boundary)."""
     vars_ = tuple(child.var_ids())
     blocks = []
     while True:
@@ -84,7 +90,8 @@ def materialize(child: BatchOperator) -> Tuple[Tuple[int, ...], np.ndarray]:
         cb = b.compact()
         if cb.n_rows:
             order = [cb.col_index(v) for v in vars_]
-            blocks.append(cb.columns[order, : cb.n_rows])
+            blocks.append(cb.columns[order, : cb.n_rows])  # fancy-index copy
+        cb.release()
     if blocks:
         return vars_, np.concatenate(blocks, axis=1)
     return vars_, np.zeros((len(vars_), 0), dtype=np.int32)
@@ -94,10 +101,17 @@ class SortByVarOp(BatchOperator):
     """Re-sort by one variable's *code* so a merge join can consume the
     stream (the Sort(?person2) in the paper's Listing 1)."""
 
-    def __init__(self, child: BatchOperator, var: int, batch_size: int = MAX_BATCH):
+    def __init__(
+        self,
+        child: BatchOperator,
+        var: int,
+        batch_size: int = MAX_BATCH,
+        pool: Optional[BatchPool] = None,
+    ):
         self.child = child
         self.var = var
         self.batch_size = batch_size
+        self.pool = pool
         self._src: Optional[MaterializedSource] = None
         super().__init__("Sort", f"(?v{var})")
 
@@ -116,7 +130,8 @@ class SortByVarOp(BatchOperator):
             key = cols[vars_.index(self.var)]
             order = np.argsort(key, kind="stable")
             self._src = MaterializedSource(
-                vars_, cols[:, order], self.var, self.batch_size, name="SortBuffer"
+                vars_, cols[:, order], self.var, self.batch_size,
+                name="SortBuffer", pool=self.pool,
             )
         return self._src
 
@@ -140,11 +155,13 @@ class OrderByOp(BatchOperator):
         keys: Sequence[SortKey],
         dictionary: Dictionary,
         batch_size: int = MAX_BATCH,
+        pool: Optional[BatchPool] = None,
     ):
         self.child = child
         self.keys = list(keys)
         self.dictionary = dictionary
         self.batch_size = batch_size
+        self.pool = pool
         self._src: Optional[MaterializedSource] = None
         super().__init__("OrderBy", ",".join(f"?v{k.var}" for k in keys))
 
@@ -172,7 +189,8 @@ class OrderByOp(BatchOperator):
                 sort_cols.extend([tiebreak, primary])
             order = np.lexsort(sort_cols) if sort_cols else np.arange(cols.shape[1])
             self._src = MaterializedSource(
-                vars_, cols[:, order], None, self.batch_size, name="OrderBuffer"
+                vars_, cols[:, order], None, self.batch_size,
+                name="OrderBuffer", pool=self.pool,
             )
         return self._src
 

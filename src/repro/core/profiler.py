@@ -23,9 +23,31 @@ def _fmt_count(n: float) -> str:
     return str(int(n))
 
 
-def profile_tree(root, var_table: VarTable = None) -> str:
+def _fmt_bytes(n: float) -> str:
+    for unit in ("B", "KB", "MB"):
+        if abs(n) < 1024:
+            return f"{n:.0f}{unit}"
+        n /= 1024.0
+    return f"{n:.1f}GB"
+
+
+def profile_tree(root, var_table: VarTable = None, pool=None) -> str:
     total = max(root.stats.wall_time, 1e-12)
     lines: List[str] = []
+    if pool is not None:
+        # arena report (DESIGN.md §2.3): steady-state allocations should be
+        # O(plan depth) — `alloc` counts fresh buffers, `reuse` recycled ones
+        s = pool.stats()
+        lines.append(
+            "pool: alloc: {alloc}, reuse: {reuse}, release: {release}, "
+            "allocated: {ab}, copied: {cb}".format(
+                alloc=_fmt_count(s["allocations"]),
+                reuse=_fmt_count(s["reuses"]),
+                release=_fmt_count(s["releases"]),
+                ab=_fmt_bytes(s["bytes_allocated"]),
+                cb=_fmt_bytes(s["bytes_copied"]),
+            )
+        )
 
     def walk(op, prefix: str, is_last: bool, is_root: bool) -> None:
         s = op.stats
@@ -53,7 +75,7 @@ def profile_tree(root, var_table: VarTable = None) -> str:
     return "\n".join(lines)
 
 
-def collect_stats(root) -> dict:
+def collect_stats(root, pool=None) -> dict:
     """Aggregate tree stats for benchmark reporting."""
     agg = {
         "total_results": root.stats.results,
@@ -62,6 +84,9 @@ def collect_stats(root) -> dict:
         "skip_calls": 0,
         "operators": 0,
     }
+    if pool is not None:
+        for k, v in pool.stats().items():
+            agg[f"pool_{k}"] = v
 
     def walk(op):
         agg["operators"] += 1

@@ -90,13 +90,128 @@ def expand_cross(
     by left range length', computed slot-parallel so the TPU kernel is a
     pure map over the output block.
     """
-    t = base + np.arange(count, dtype=np.int64)
-    g = np.searchsorted(cum, t, side="right") - 1
-    w = t - cum[g]
-    rl = rlens[g].astype(np.int64)
-    li = lstarts[g] + (w // rl).astype(np.int32)
-    ri = rstarts[g] + (w % rl).astype(np.int32)
-    return li.astype(np.int32), ri.astype(np.int32)
+    # the slots [base, base+count) are contiguous, so instead of a per-slot
+    # binary search the group ids are a run-length expansion of the (few)
+    # groups the window spans: O(count + groups) instead of O(count log G)
+    hi = base + count
+    g0 = int(np.searchsorted(cum, base, side="right")) - 1
+    g1 = int(np.searchsorted(cum, hi, side="left"))
+    seg = np.minimum(cum[g0 + 1 : g1 + 1], hi) - np.maximum(cum[g0:g1], base)
+    g = np.repeat(np.arange(g0, g1, dtype=np.intp), seg)
+    # stay in int32 while the offsets fit — int64 div/mod is ~2x slower and
+    # dominates the Build phase otherwise
+    dt = np.int32 if int(cum[-1]) < np.iinfo(np.int32).max else np.int64
+    t = np.arange(base, hi, dtype=dt)
+    w = t - cum[g].astype(dt)
+    # unit-length runs need no div/mod: the within-group offset walks the
+    # other side directly. Lookup joins always hit the llens==1 case (every
+    # probe row is a length-1 left range).
+    if llens[g0:g1].max(initial=1) == 1:
+        li = lstarts[g]
+        ri = rstarts[g] + w.astype(np.int32)
+    elif rlens[g0:g1].max(initial=1) == 1:
+        li = lstarts[g] + w.astype(np.int32)
+        ri = rstarts[g]
+    else:
+        rl = rlens[g].astype(dt)
+        li = lstarts[g] + (w // rl).astype(np.int32)
+        ri = rstarts[g] + (w % rl).astype(np.int32)
+    return np.asarray(li, dtype=np.int32), np.asarray(ri, dtype=np.int32)
+
+
+# ---------------------------------------------------------------------------
+# fused gather-emit (merge/lookup join Build emission, DESIGN.md §2.3)
+# ---------------------------------------------------------------------------
+
+_NULL = np.int32(-1)  # == batch.NULL_ID (kept local to avoid an import cycle)
+
+
+def _take(src: np.ndarray, idx: np.ndarray, out: np.ndarray) -> None:
+    """Gather src[idx] straight into ``out``, skipping the temporary that
+    fancy indexing would allocate. Falls back when the destination isn't
+    contiguous (np.take requires it)."""
+    if out.flags.c_contiguous and src.flags.c_contiguous:
+        np.take(src, idx, out=out, mode="clip")
+    else:
+        out[...] = src[idx]
+
+
+def gather_emit(
+    lcols: np.ndarray,
+    rcols: Optional[np.ndarray],
+    li: np.ndarray,
+    ri: Optional[np.ndarray],
+    lsel: Tuple[int, ...],
+    rsel: Tuple[int, ...],
+    pairs: Tuple[Tuple[int, int], ...],
+    out: Optional[np.ndarray] = None,
+    out_offset: int = 0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused join emission: gather + NULL-extend + secondary-key equality.
+
+    One primitive replaces the per-column Python loops and the intermediate
+    whole-window materializations of the join emit paths:
+
+      lcols: (KL, NL) int32 source columns (left / probe side);
+      rcols: (KR, NR) int32 source columns (right / build side), or None;
+      li:    (C,) int32 row gather indices into lcols;
+      ri:    (C,) int32 row gather indices into rcols, or None. ri == -1
+             marks a *virtual NULL row* (left_outer padding): right outputs
+             become NULL_ID and pair comparisons auto-pass for that slot.
+      lsel:  source-row ids of lcols to emit, in output order. A -1 entry
+             emits a NULL_ID column (schema alignment in concat_batches).
+      rsel:  source-row ids of rcols to emit after the left block.
+      pairs: (l_row, r_row) secondary join-key comparisons (paper §3.2
+             Multiple Join Keys) folded into the returned validity mask.
+      out:   optional (>=len(lsel)+len(rsel), >=out_offset+C) destination;
+             rows [0, K) of out[:, out_offset:out_offset+C] are written in
+             place (the pooled-buffer zero-copy path). A fresh array is
+             allocated when omitted.
+
+    Returns (out_block, mask): the (K, C) emitted block and the (C,) bool
+    combined validity mask.
+    """
+    C = int(len(li))
+    K = len(lsel) + len(rsel)
+    if out is None:
+        out = np.empty((K, C), dtype=np.int32)
+        view = out
+    else:
+        view = out[:K, out_offset : out_offset + C]
+
+    if ri is None:
+        rvalid = None
+        ric = None
+    else:
+        rvalid = ri >= 0
+        if rvalid.all():
+            rvalid = None  # fast path: no virtual rows
+            ric = ri
+        else:
+            ric = np.where(rvalid, ri, 0)
+
+    for j, row in enumerate(lsel):
+        if row < 0:
+            view[j] = _NULL
+        else:
+            _take(lcols[row], li, view[j])
+    r_empty = rcols is None or rcols.shape[1] == 0
+    for j, row in enumerate(rsel):
+        dst = view[len(lsel) + j]
+        if row < 0 or r_empty:
+            dst[:] = _NULL
+        elif rvalid is None:
+            _take(rcols[row], ric, dst)
+        else:
+            np.copyto(dst, np.where(rvalid, rcols[row, ric], _NULL))
+
+    mask = np.ones(C, dtype=bool)
+    for lrow, rrow in pairs:
+        lv = lcols[lrow, li]
+        rv = np.zeros(C, dtype=np.int32) if r_empty else rcols[rrow, ric]
+        eq = lv == rv
+        mask &= eq if rvalid is None else (~rvalid | eq)
+    return view, mask
 
 
 # ---------------------------------------------------------------------------

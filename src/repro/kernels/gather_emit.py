@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: fused join emission (gather_emit, DESIGN.md §2.3).
+
+One kernel dispatch materializes an output block of a join: gather the
+emitted left/right source rows through the (li, ri) index vectors, NULL-
+extend virtual right rows (ri == -1, the left_outer padding), and evaluate
+the secondary join-key equality pairs into the combined validity mask —
+the work MergeJoin/LookupJoin emission previously did column-by-column in
+Python with intermediate whole-window materializations.
+
+TPU adaptation: random-access gathers are HBM-latency-bound, so — like
+join_expand.py — the gather is computed **gather-free**: the source is
+streamed chunk-by-chunk through VMEM and each chunk contributes a one-hot
+comparison-matrix select-accumulate into the resident output tile. Every
+index hits exactly one chunk, so summing partials over the chunk axis of
+the grid reconstructs the gather exactly. The secondary-key mask and the
+virtual-row NULL fill run in the same kernel on the final chunk, while the
+gathered tile is still in VMEM — that is the fusion.
+
+Grid: (n_source_chunks, n_output_blocks); output tiles are indexed by the
+output block only, so they stay resident across the chunk axis.
+
+Layout contract (enforced by the kernels.ops wrapper): the *emitted* rows
+of each source come first and the rows referenced by the k-th equality
+pair sit at tail position K - n_pairs + k of their source.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_TILE = 512  # source rows streamed per chunk
+BLOCK = 256  # output slots per grid step
+
+_NULL = -1
+
+
+def _kernel(lsrc_ref, rsrc_ref, li_ref, ri_ref, lout_ref, rout_ref, mask_ref,
+            *, n_pairs: int, n_chunks: int):
+    nc = pl.program_id(0)
+    n0 = nc * N_TILE
+    li = li_ref[...]  # (BLOCK,)
+    ri = ri_ref[...]
+    offs = jax.lax.iota(jnp.int32, N_TILE)
+
+    # one-hot chunk-local selects; indices outside [n0, n0+N_TILE) (and the
+    # virtual ri == -1 rows) match nothing and contribute zero
+    sel_l = (li[None, :] - n0) == offs[:, None]  # (N_TILE, BLOCK)
+    sel_r = (ri[None, :] - n0) == offs[:, None]
+
+    kl = lsrc_ref.shape[0]
+    kr = rsrc_ref.shape[0]
+    partial_l = jnp.stack(
+        [jnp.sum(jnp.where(sel_l, lsrc_ref[k][:, None], 0), axis=0) for k in range(kl)]
+    )
+    partial_r = jnp.stack(
+        [jnp.sum(jnp.where(sel_r, rsrc_ref[k][:, None], 0), axis=0) for k in range(kr)]
+    )
+
+    @pl.when(nc == 0)
+    def _init():
+        lout_ref[...] = partial_l
+        rout_ref[...] = partial_r
+
+    @pl.when(nc != 0)
+    def _accumulate():
+        lout_ref[...] += partial_l
+        rout_ref[...] += partial_r
+
+    @pl.when(nc == n_chunks - 1)
+    def _finalize():  # mask + NULL-extension while the tile is in VMEM
+        lg = lout_ref[...]
+        rg = rout_ref[...]
+        virtual = ri < 0
+        m = jnp.ones_like(ri)
+        for p in range(n_pairs):
+            eq = lg[kl - n_pairs + p] == rg[kr - n_pairs + p]
+            m = m * jnp.where(virtual | eq, 1, 0)
+        rout_ref[...] = jnp.where(virtual[None, :], _NULL, rg)
+        mask_ref[...] = m
+
+
+@functools.partial(jax.jit, static_argnames=("n_pairs", "interpret"))
+def gather_emit_pallas(
+    lsrc: jax.Array,  # (KL, NL) int32: emit rows first, pair-left rows at tail
+    rsrc: jax.Array,  # (KR, NR) int32: emit rows first, pair-right rows at tail
+    li: jax.Array,  # (C,) int32
+    ri: jax.Array,  # (C,) int32; -1 = virtual NULL right row
+    n_pairs: int,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (lout (KL, C), rout (KR, C), mask (C,) int32)."""
+    kl, nl = lsrc.shape
+    kr, nr = rsrc.shape
+    c = li.shape[0]
+    n = max(nl, nr, 1)
+    n_chunks = pl.cdiv(n, N_TILE)
+    n_pad = n_chunks * N_TILE
+    c_blocks = pl.cdiv(c, BLOCK)
+    c_pad = c_blocks * BLOCK
+
+    lsrc = jnp.pad(lsrc.astype(jnp.int32), ((0, 0), (0, n_pad - nl)))
+    rsrc = jnp.pad(rsrc.astype(jnp.int32), ((0, 0), (0, n_pad - nr)))
+    # pad li with 0 (a real row; the padded output slots are sliced off) and
+    # ri with -1 (virtual, selects nothing)
+    li = jnp.pad(li.astype(jnp.int32), (0, c_pad - c))
+    ri = jnp.pad(ri.astype(jnp.int32), (0, c_pad - c), constant_values=_NULL)
+
+    grid = (n_chunks, c_blocks)
+    src_l = pl.BlockSpec((kl, N_TILE), lambda nc, cb: (0, nc))
+    src_r = pl.BlockSpec((kr, N_TILE), lambda nc, cb: (0, nc))
+    idx = pl.BlockSpec((BLOCK,), lambda nc, cb: (cb,))
+    out_l = pl.BlockSpec((kl, BLOCK), lambda nc, cb: (0, cb))
+    out_r = pl.BlockSpec((kr, BLOCK), lambda nc, cb: (0, cb))
+    out_m = pl.BlockSpec((BLOCK,), lambda nc, cb: (cb,))
+
+    lout, rout, mask = pl.pallas_call(
+        functools.partial(_kernel, n_pairs=n_pairs, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[src_l, src_r, idx, idx],
+        out_specs=[out_l, out_r, out_m],
+        out_shape=[
+            jax.ShapeDtypeStruct((kl, c_pad), jnp.int32),
+            jax.ShapeDtypeStruct((kr, c_pad), jnp.int32),
+            jax.ShapeDtypeStruct((c_pad,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(lsrc, rsrc, li, ri)
+    return lout[:, :c], rout[:, :c], mask[:c]

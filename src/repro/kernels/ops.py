@@ -75,6 +75,79 @@ def join_expand(
     raise ValueError(be)
 
 
+# -- gather_emit ---------------------------------------------------------------
+
+
+def gather_emit(
+    lcols,
+    rcols,
+    li,
+    ri,
+    lsel=(),
+    rsel=(),
+    pairs=(),
+    backend: Optional[str] = None,
+    out: Optional[np.ndarray] = None,
+    out_offset: int = 0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Fused join emission (see vecops.gather_emit for the contract):
+    gather emitted rows through (li, ri), NULL-extend virtual right rows
+    (ri == -1), and fold secondary-key equality ``pairs`` into the validity
+    mask — one dispatch per output block instead of per column."""
+    be = _backend(backend)
+    lsel, rsel, pairs = tuple(lsel), tuple(rsel), tuple(pairs)
+    if be == "numpy":
+        return vecops.gather_emit(lcols, rcols, li, ri, lsel, rsel, pairs,
+                                  out, out_offset)
+    c = int(len(li))
+    k = len(lsel) + len(rsel)
+    lcols = np.ascontiguousarray(lcols, dtype=np.int32)
+    # normalize a missing/empty right side to a 1-wide dummy addressed only
+    # by virtual (-1) indices, so the jitted paths keep static shapes
+    if rcols is None or rcols.shape[1] == 0:
+        kr_src = 1 if rcols is None else max(int(rcols.shape[0]), 1)
+        rcols_n = np.full((kr_src, 1), -1, dtype=np.int32)
+        ri_n = np.full(c, -1, dtype=np.int32)
+    else:
+        rcols_n = np.ascontiguousarray(rcols, dtype=np.int32)
+        ri_n = np.asarray(ri, dtype=np.int32)
+    li_n = np.asarray(li, dtype=np.int32)
+
+    if be == "jax":
+        from repro.kernels import ref
+
+        block, mask = ref.gather_emit(lcols, rcols_n, li_n, ri_n, lsel, rsel, pairs)
+        block, mask = np.asarray(block), np.asarray(mask)
+    elif be == "pallas":
+        from repro.kernels.gather_emit import gather_emit_pallas
+
+        # kernel layout: emitted rows first, pair rows at the source tails
+        lrows = [max(r, 0) for r in lsel] + [lp for lp, _ in pairs]
+        rrows = [max(r, 0) for r in rsel] + [rp for _, rp in pairs]
+        lsrc = lcols[lrows] if lrows else np.zeros((1, max(lcols.shape[1], 1)), np.int32)
+        rsrc = rcols_n[rrows] if rrows else np.zeros((1, rcols_n.shape[1]), np.int32)
+        lout, rout, maski = gather_emit_pallas(lsrc, rsrc, li_n, ri_n, len(pairs))
+        lout, rout = np.asarray(lout), np.asarray(rout)
+        block = np.concatenate([lout[: len(lsel)], rout[: len(rsel)]], axis=0)
+        mask = np.asarray(maski).astype(bool)
+    else:
+        raise ValueError(be)
+
+    if any(r < 0 for r in lsel + rsel) and not block.flags.writeable:
+        block = block.copy()  # jit outputs are read-only
+    for j, row in enumerate(lsel):  # -1 emit rows = NULL columns
+        if row < 0:
+            block[j] = -1
+    for j, row in enumerate(rsel):
+        if row < 0:
+            block[len(lsel) + j] = -1
+    if out is not None:
+        view = out[:k, out_offset : out_offset + c]
+        view[...] = block
+        return view, mask
+    return block, mask
+
+
 # -- sorted_search ---------------------------------------------------------------
 
 

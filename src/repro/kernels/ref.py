@@ -53,6 +53,42 @@ def join_expand(
 
 
 # ---------------------------------------------------------------------------
+# gather_emit (fused join emission; DESIGN.md §2.3)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("lsel", "rsel", "pairs"))
+def gather_emit(
+    lcols: jax.Array,  # (KL, NL) int32
+    rcols: jax.Array,  # (KR, NR) int32 (callers pad empty sides to width 1)
+    li: jax.Array,  # (C,) int32 gather rows into lcols
+    ri: jax.Array,  # (C,) int32 gather rows into rcols; -1 = virtual NULL row
+    lsel: Tuple[int, ...],  # static: lcols rows to emit (-1 = NULL column)
+    rsel: Tuple[int, ...],  # static: rcols rows to emit after the left block
+    pairs: Tuple[Tuple[int, int], ...],  # static secondary key comparisons
+) -> Tuple[jax.Array, jax.Array]:
+    """Mirror of vecops.gather_emit: (K, C) emitted block + (C,) validity."""
+    c = li.shape[0]
+    rvalid = ri >= 0
+    ric = jnp.where(rvalid, ri, 0)
+    null = jnp.full((c,), -1, dtype=jnp.int32)
+    rows = []
+    for row in lsel:
+        rows.append(null if row < 0 else lcols[row][li])
+    for row in rsel:
+        rows.append(null if row < 0 else jnp.where(rvalid, rcols[row][ric], -1))
+    out = (
+        jnp.stack(rows).astype(jnp.int32)
+        if rows
+        else jnp.zeros((0, c), dtype=jnp.int32)
+    )
+    mask = jnp.ones((c,), dtype=bool)
+    for lrow, rrow in pairs:
+        mask &= ~rvalid | (lcols[lrow][li] == rcols[rrow][ric])
+    return out, mask
+
+
+# ---------------------------------------------------------------------------
 # sorted_search
 # ---------------------------------------------------------------------------
 

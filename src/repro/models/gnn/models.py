@@ -18,6 +18,8 @@ import math
 from typing import Dict, Optional
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 
 from repro.models.gnn import common as C
@@ -310,7 +312,7 @@ def dimenet_loss_partitioned(params, cfg: GNNConfig, g, mesh, axis_names):
         return C.cross_entropy_nodes(logits, gl["labels"], gl.get("label_mask"))
 
     shard = axis_names if len(axis_names) > 1 else axis_names[0]
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(

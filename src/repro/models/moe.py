@@ -17,6 +17,8 @@ import math
 from typing import Dict
 
 import jax
+
+from repro.compat import shard_map
 import jax.numpy as jnp
 
 from repro.models.layers import _dense_init
@@ -192,7 +194,7 @@ def _moe_block_ep_psum(p, cfg: MoEConfig, axes: MeshAxes, x: jax.Array) -> jax.A
 
     xt = x.reshape(b * s, d)
     dp_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
-    out = jax.shard_map(
+    out = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(dp_spec, None), P(None, None), P(axes.mp, None, None)),

@@ -1,0 +1,118 @@
+"""Deterministic fallback for the `hypothesis` API surface these tests use.
+
+The container that runs tier-1 verification does not ship hypothesis and
+nothing may be pip-installed there, so ``conftest.py`` registers this module
+as ``hypothesis`` when the real library is absent. Instead of skipping the
+property tests, it draws a fixed number of pseudo-random examples per test
+from a seed derived from the test name — deterministic across runs, so
+failures are reproducible. With real hypothesis installed (see
+requirements-dev.txt) this module is never imported and the genuine
+shrinking/replay machinery is used instead.
+
+Only the strategies the test suite uses are implemented: integers, lists,
+tuples, sampled_from, builds, data.
+"""
+
+from __future__ import annotations
+
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rng):
+        n = int(rng.randint(min_size, max_size + 1))
+        return [elements._draw(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def tuples(*elems):
+    return _Strategy(lambda rng: tuple(e._draw(rng) for e in elems))
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.randint(len(seq)))])
+
+
+def builds(fn, *args):
+    return _Strategy(lambda rng: fn(*[a._draw(rng) for a in args]))
+
+
+class _DataObject:
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy):
+        return strategy._draw(self._rng)
+
+
+def data():
+    return _Strategy(lambda rng: _DataObject(rng))
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None,
+             suppress_health_check=(), **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        def wrapper(*fixture_args, **fixture_kwargs):
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__name__}".encode())
+            for i in range(n):
+                rng = np.random.RandomState((seed + i) % (2**31 - 1))
+                drawn = [s._draw(rng) for s in strategies]
+                try:
+                    fn(*fixture_args, *drawn, **fixture_kwargs)
+                except Exception as e:  # surface the failing example
+                    raise AssertionError(
+                        f"falsifying example #{i} for {fn.__name__}: {drawn!r}"
+                    ) from e
+
+        # keep identity for pytest, but do NOT set __wrapped__ — pytest would
+        # follow it and try to inject fixtures for the drawn argument names
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+def _as_module():
+    """Materialize this file as importable `hypothesis` + `hypothesis.strategies`."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.HealthCheck = HealthCheck
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "lists", "tuples", "sampled_from", "builds", "data"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    return hyp, st

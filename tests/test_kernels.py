@@ -56,6 +56,96 @@ def test_join_expand_group_chunking():
     np.testing.assert_array_equal(got[1], want[1])
 
 
+def _ge_case(rng, kl, kr, nl, nr, c, virtual_frac):
+    lcols = rng.randint(0, 40, (kl, nl)).astype(np.int32)
+    rcols = rng.randint(0, 40, (kr, max(nr, 1))).astype(np.int32)
+    li = rng.randint(0, nl, c).astype(np.int32)
+    if nr == 0:
+        ri = np.full(c, -1, np.int32)
+    else:
+        ri = rng.randint(0, nr, c).astype(np.int32)
+        ri[rng.rand(c) < virtual_frac] = -1
+    return lcols, rcols[:, :nr] if nr else rcols[:, :0], li, ri
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("kl,kr,nl,nr,c,vf", [
+    (1, 1, 1, 1, 1, 0.0),
+    (2, 2, 50, 30, 100, 0.0),
+    (3, 4, 700, 300, 1000, 0.25),     # > one output block + virtual rows
+    (2, 2, 1500, 2000, 600, 0.1),     # > one source chunk (N_TILE=512)
+    (4, 1, 64, 64, 5000, 0.0),        # long output
+])
+def test_gather_emit_sweep(backend, kl, kr, nl, nr, c, vf):
+    rng = np.random.RandomState(kl * 31 + nl + c)
+    lcols, rcols, li, ri = _ge_case(rng, kl, kr, nl, nr, c, vf)
+    lsel = tuple(range(kl))
+    rsel = tuple(range(kr))[:1]
+    pairs = ((kl - 1, kr - 1),)
+    want = vecops.gather_emit(lcols, rcols, li, ri, lsel, rsel, pairs)
+    got = ops.gather_emit(lcols, rcols, li, ri, lsel, rsel, pairs, backend=backend)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_gather_emit_mask_only_and_null_rows(backend):
+    """semi/anti use the primitive mask-only (no emitted columns); concat
+    uses -1 lsel rows for NULL schema alignment."""
+    rng = np.random.RandomState(7)
+    lcols, rcols, li, ri = _ge_case(rng, 3, 3, 80, 60, 200, 0.2)
+    pairs = ((0, 0), (2, 1))
+    want = vecops.gather_emit(lcols, rcols, li, ri, (), (), pairs)
+    got = ops.gather_emit(lcols, rcols, li, ri, (), (), pairs, backend=backend)
+    assert got[0].shape == (0, 200)
+    np.testing.assert_array_equal(got[1], want[1])
+
+    wb, _ = vecops.gather_emit(lcols, None, li, None, (0, -1, 2), (), ())
+    gb, _ = ops.gather_emit(lcols, None, li, None, (0, -1, 2), (), (),
+                            backend=backend)
+    assert (wb[1] == -1).all()
+    np.testing.assert_array_equal(gb, wb)
+
+
+def test_gather_emit_out_offset():
+    """The pooled fast path writes into the destination at an offset."""
+    rng = np.random.RandomState(3)
+    lcols, rcols, li, ri = _ge_case(rng, 2, 2, 50, 50, 64, 0.0)
+    want, _ = vecops.gather_emit(lcols, rcols, li, ri, (0, 1), (0,), ())
+    out = np.full((3, 300), 99, np.int32)
+    vecops.gather_emit(lcols, rcols, li, ri, (0, 1), (0,), (),
+                       out=out, out_offset=100)
+    np.testing.assert_array_equal(out[:, 100:164], want)
+    assert (out[:, :100] == 99).all() and (out[:, 164:] == 99).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_gather_emit_property(data):
+    """Random shapes/selections: every backend matches the numpy oracle."""
+    rng = np.random.RandomState(data.draw(st.integers(0, 10**6)))
+    kl = data.draw(st.integers(1, 4))
+    kr = data.draw(st.integers(1, 4))
+    nl = data.draw(st.integers(1, 600))
+    nr = data.draw(st.integers(0, 600))
+    c = data.draw(st.integers(1, 700))
+    lcols, rcols, li, ri = _ge_case(rng, kl, kr, nl, nr, c, 0.15)
+    lsel = tuple(
+        data.draw(st.integers(-1, kl - 1)) for _ in range(data.draw(st.integers(0, kl)))
+    )
+    rsel = tuple(range(data.draw(st.integers(0, kr))))
+    pairs = tuple(
+        (data.draw(st.integers(0, kl - 1)), data.draw(st.integers(0, kr - 1)))
+        for _ in range(data.draw(st.integers(0, 2)))
+    )
+    want = vecops.gather_emit(lcols, rcols, li, ri, lsel, rsel, pairs)
+    for backend in BACKENDS:
+        got = ops.gather_emit(lcols, rcols, li, ri, lsel, rsel, pairs,
+                              backend=backend)
+        np.testing.assert_array_equal(got[0], want[0], err_msg=backend)
+        np.testing.assert_array_equal(got[1], want[1], err_msg=backend)
+
+
 @pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("n,m", [(0, 5), (1, 1), (100, 37), (5000, 700)])
 @pytest.mark.parametrize("side", ["left", "right"])

@@ -1,0 +1,209 @@
+"""Buffer-pool + ring-window invariants (DESIGN.md §2.3).
+
+The zero-copy pipeline must be *invisible*: pooled execution over recycled
+buffers and the amortized join windows must produce bit-identical results
+to pool-disabled execution, across engines and batch sizes. And it must
+actually pay off: steady-state buffer allocations are O(plan depth), not
+O(batches emitted)."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import Engine, EngineConfig, QuadStore
+from repro.core.batch import BatchPool, ColumnBatch, concat_batches
+
+
+# ---------------------------------------------------------------------------
+# BatchPool unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_pool_acquire_release_recycles():
+    pool = BatchPool()
+    cols, mask = pool.acquire(3, 64)
+    assert cols.shape == (3, 64) and mask.shape == (64,)
+    pool.release(cols, mask)
+    cols2, _ = pool.acquire(3, 64)
+    assert cols2 is cols  # same buffer came back
+    assert pool.allocations == 1 and pool.reuses == 1
+
+
+def test_pool_bucket_isolation_and_drain():
+    pool = BatchPool(max_per_bucket=2)
+    a = pool.acquire(2, 32)
+    pool.release(*a)
+    b, _ = pool.acquire(2, 64)  # different bucket: fresh
+    assert pool.allocations == 2 and b.shape == (2, 64)
+    pool.drain()
+    c, _ = pool.acquire(2, 32)  # drained: fresh again
+    assert pool.allocations == 3
+
+
+def test_from_columns_pooled_matches_unpooled():
+    pool = BatchPool()
+    cols = [np.arange(5, dtype=np.int32), np.arange(5, dtype=np.int32) * 7]
+    plain = ColumnBatch.from_columns((1, 2), cols, sorted_by=1)
+    # dirty a recycled buffer first so the pooled path must repair padding
+    dirty = ColumnBatch.from_columns((1, 2), [np.full(30, 9)] * 2, pool=pool)
+    dirty.release()
+    pooled = ColumnBatch.from_columns((1, 2), cols, sorted_by=1, pool=pool)
+    np.testing.assert_array_equal(pooled.columns, plain.columns)
+    np.testing.assert_array_equal(pooled.mask, plain.mask)
+    assert pool.reuses == 1
+
+
+def test_release_is_idempotent_and_ownership_moves():
+    pool = BatchPool()
+    b = ColumnBatch.from_columns((0,), [np.arange(4)], pool=pool)
+    m = np.zeros(b.capacity, dtype=bool)
+    m[:2] = True
+    b2 = b.with_mask(m)  # ownership moved to b2
+    assert b.pool is None and b2.pool is pool
+    b.release()  # no-op
+    assert pool.releases == 0
+    b2.release()
+    b2.release()
+    assert pool.releases == 1
+
+
+def test_concat_batches_pooled_matches_seed_semantics():
+    pool = BatchPool()
+    ba = ColumnBatch.from_columns((0, 1), [np.asarray([1, 2]), np.asarray([5, 6])])
+    bb = ColumnBatch.from_columns((1, 2), [np.asarray([3]), np.asarray([4])])
+    want = concat_batches([ba, bb])
+    got = concat_batches([ba, bb], pool=pool)
+    np.testing.assert_array_equal(got.to_rows_array(), want.to_rows_array())
+    assert got.var_ids == want.var_ids
+
+
+# ---------------------------------------------------------------------------
+# ring/doubling window
+# ---------------------------------------------------------------------------
+
+
+def test_window_ring_append_trim_gather():
+    from repro.core.operators.merge_join import _Window
+
+    w = _Window((0, 1), 0, None)
+    rng = np.random.RandomState(0)
+    keys = np.sort(rng.randint(0, 100, 500)).astype(np.int32)
+    payload = rng.randint(0, 1000, 500).astype(np.int32)
+    # append in uneven chunks, interleaved with trims, mirroring against a
+    # plain concatenate oracle
+    oracle = np.zeros((2, 0), dtype=np.int32)
+    pos = 0
+    for chunk in (7, 120, 1, 300, 72):
+        b = ColumnBatch.from_columns((0, 1), [keys[pos:pos + chunk],
+                                              payload[pos:pos + chunk]], 0)
+        w.append_batch(b)
+        oracle = np.concatenate([oracle, np.stack([keys[pos:pos + chunk],
+                                                   payload[pos:pos + chunk]])], axis=1)
+        pos += chunk
+        cut_key = int(oracle[0, oracle.shape[1] // 3])
+        cut = int(np.searchsorted(oracle[0], cut_key, side="left"))
+        dropped = w.trim_below(cut_key)
+        assert dropped == cut - 0 if pos == chunk else True
+        oracle = oracle[:, cut:]
+        np.testing.assert_array_equal(w.cols, oracle)
+        np.testing.assert_array_equal(w.keys, oracle[0])
+        idx = np.arange(0, oracle.shape[1], 3, dtype=np.int32)
+        np.testing.assert_array_equal(w.gather(idx), oracle[:, idx])
+
+
+def test_window_masked_batch_append():
+    from repro.core.operators.merge_join import _Window
+
+    w = _Window((0,), 0, None)
+    b = ColumnBatch.from_columns((0,), [np.arange(10, dtype=np.int32)], 0)
+    m = np.zeros(b.capacity, dtype=bool)
+    m[[1, 4, 7]] = True
+    assert w.append_batch(b.with_mask(m)) == 3
+    np.testing.assert_array_equal(w.keys, [1, 4, 7])
+
+
+# ---------------------------------------------------------------------------
+# engine-level equivalence (pooled / ring-buffer vs pool-disabled)
+# ---------------------------------------------------------------------------
+
+
+def _build_store(knows, interests, ages):
+    store = QuadStore()
+    for s, o in knows:
+        store.add(f":p{s}", ":knows", f":p{o}")
+    for s, t in interests:
+        store.add(f":p{s}", ":interest", f":tag{t}")
+    for s, a in ages.items():
+        store.add(f":p{s}", ":age", int(a))
+    return store.build()
+
+
+def _rows(store, query, engine, batch=64, **kw):
+    e = Engine(store, EngineConfig(engine=engine, initial_batch=32,
+                                   max_batch=batch, **kw))
+    r = e.execute(query)
+    return sorted(
+        tuple(int(c) for c in row) for row in r.rows
+    )
+
+
+QUERIES = (
+    "SELECT ?a ?b ?c { ?a :knows ?b . ?b :knows ?c . FILTER(?a != ?c) }",
+    "SELECT ?a ?b ?t { ?a :knows ?b . OPTIONAL { ?b :interest ?t } }",
+    "SELECT ?a ?b { ?a :knows ?b . MINUS { ?b :knows ?a } }",
+    "SELECT ?a (COUNT(?b) AS ?n) { ?a :knows ?b } GROUP BY ?a",
+    "SELECT DISTINCT ?x { { ?x :knows ?y } UNION { ?x :interest ?t } }",
+)
+
+graphs = st.builds(
+    lambda e1, e2, ages: (
+        sorted(set(e1)), sorted(set(e2)), {i: a for i, a in enumerate(ages)}
+    ),
+    st.lists(st.tuples(st.integers(0, 7), st.integers(0, 7)), max_size=60),
+    st.lists(st.tuples(st.integers(0, 7), st.integers(0, 3)), max_size=25),
+    st.lists(st.integers(10, 70), min_size=8, max_size=8),
+)
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+@given(graphs)
+def test_pooled_execution_bit_identical(g):
+    """Recycled buffers + ring windows must not change a single result id,
+    for every engine and batch size."""
+    store = _build_store(*g)
+    for q in QUERIES:
+        for engine in ("barq", "mixed"):
+            for batch in (32, 4096):
+                pooled = _rows(store, q, engine, batch, pool_buffers=True)
+                plain = _rows(store, q, engine, batch, pool_buffers=False)
+                assert pooled == plain, (q, engine, batch)
+
+
+@pytest.mark.parametrize("engine", ["barq", "mixed"])
+def test_pooled_matches_legacy(tiny_store, engine):
+    q = "SELECT ?a ?b ?t { ?a :knows ?b . ?b :interest ?t }"
+    assert _rows(tiny_store, q, engine) == _rows(tiny_store, q, "legacy")
+
+
+def test_steady_state_allocations_o_plan_depth():
+    """The acceptance bar: per-query buffer allocations track plan depth,
+    not batches emitted."""
+    store = QuadStore()
+    rng = np.random.RandomState(0)
+    for i in range(500):
+        for j in rng.choice(500, size=8, replace=False):
+            if i != int(j):
+                store.add(f":p{i}", ":knows", f":p{int(j)}")
+    store = store.build()
+    q = "SELECT ?a ?b ?c { ?a :knows ?b . ?b :knows ?c . FILTER(?a != ?c) }"
+    e = Engine(store, EngineConfig(engine="barq", initial_batch=32,
+                                   max_batch=64, adaptive_batching=False))
+    r = e.execute(q)
+    s = r.pool.stats()
+    batches = r.root.stats.batches
+    assert batches > 100, "query too small to exercise the steady state"
+    assert s["allocations"] <= 40, s  # bounded by live batches, not emitted
+    assert s["reuses"] > batches, s
+    # and the counters survive into the profile report
+    assert "pool:" in r.profile().splitlines()[0]
