@@ -123,6 +123,73 @@ def bench_filter(rng, n=2_000_000):
     return int(mask.sum()), dt
 
 
+def _path_store(rng, n_edges, branch=2):
+    """Chain-of-trees closure workload: a forest of ``branch``-ary trees
+    (the LSQB/BSBM-style transitive-hierarchy shape), >= n_edges edges."""
+    from repro.core import QuadStore
+
+    quads = np.zeros((n_edges, 4), dtype=np.int32)
+    store = QuadStore()
+    pid = store.dict.encode(":child")
+    gid = store.dict.encode(":default")
+    # nodes 1..n_edges point at parent (i-1)//branch — one big shallow tree
+    for i in range(n_edges):
+        quads[i] = (
+            store.dict.encode(f":n{i + 1}"),
+            pid,
+            store.dict.encode(f":n{i // branch}"),
+            gid,
+        )
+    store.add_encoded(quads)
+    return store.build()
+
+
+def bench_path_vectorized(rng, n_edges=10000, reps=3):
+    """The §8 frontier engine: full `:child+` closure over the tree."""
+    from repro.core.batch import BatchPool
+    from repro.core.operators.path import PathExpand
+    from repro.core.paths.expr import PClosure, PLink
+    from repro.core.algebra import V
+
+    store = _path_store(rng, n_edges)
+    metrics = {}
+
+    def make():
+        pool = BatchPool()
+        op = PathExpand(
+            store, PClosure(PLink(":child"), 1), V(0), V(1), pool=pool
+        )
+        metrics["op"] = op
+        metrics["pool"] = pool
+        return op
+
+    out, dt = _drain_timed(make, reps=reps)
+    op, pool = metrics["op"], metrics["pool"]
+    extra = dict(op.stats.extra)
+    extra.update({f"pool_{k}": v for k, v in pool.stats().items()
+                  if k in ("allocations", "reuses")})
+    return out, dt, extra
+
+
+def bench_path_row(rng, n_edges=10000, reps=1):
+    """RowTransitivePath — the per-source scalar BFS baseline."""
+    from repro.core.legacy.property_path import RowTransitivePath
+
+    store = _path_store(rng, n_edges)
+    best = float("inf")
+    out = 0
+    for rep in range(reps + 1):
+        op = RowTransitivePath(store, ":child", 0, 1)
+        t0 = time.perf_counter()
+        out = 0
+        while op.next_row() is not None:
+            out += 1
+        dt = time.perf_counter() - t0
+        if rep > 0:
+            best = min(best, dt)
+    return out, best
+
+
 def bench_streaming_group(rng, n=1_000_000, n_keys=50000):
     d = Dictionary()
     keys = np.sort(rng.randint(0, n_keys, n)).astype(np.int32)
@@ -143,30 +210,57 @@ def bench_streaming_group(rng, n=1_000_000, n_keys=50000):
     return rows, dt
 
 
-def run(seed: int = 0) -> str:
+def run(seed: int = 0, fast: bool = False) -> str:
+    """``fast`` is the CI smoke mode: tiny sizes so kernel regressions in
+    the path subsystem fail the gate quickly without benchmark-scale cost."""
     rng = np.random.RandomState(seed)
     suite = Suite("Operator microbenchmarks (Listing 1/5 profiles)")
 
-    out, dt = bench_merge_join(rng)
+    out, dt = bench_merge_join(rng, n=12000 if fast else 60000,
+                               n_keys=1200 if fast else 6000)
     suite.add("merge_join_batch", dt * 1e6, f"tuples_out={out};Mtps={out / dt / 1e6:.1f}")
-    out_r, dt_r = bench_row_merge_join(rng, n=8000, n_keys=800)
+    out_r, dt_r = bench_row_merge_join(rng, n=2000 if fast else 8000,
+                                       n_keys=200 if fast else 800)
     suite.add("merge_join_row", dt_r * 1e6,
               f"tuples_out={out_r};Mtps={out_r / dt_r / 1e6:.3f}")
 
-    out_l, dt_l = bench_lookup_join(rng)
+    out_l, dt_l = bench_lookup_join(rng, n_probe=40000 if fast else 200000,
+                                    n_build=10000 if fast else 50000,
+                                    n_keys=4000 if fast else 20000)
     suite.add("lookup_join_batch", dt_l * 1e6,
               f"tuples_out={out_l};Mtps={out_l / dt_l / 1e6:.1f}")
 
-    nsel, dtf = bench_filter(rng)
+    nsel, dtf = bench_filter(rng, n=400_000 if fast else 2_000_000)
     suite.add("filter_vectorized_2M", dtf * 1e6, f"Mtps={2.0 / dtf:.0f}")
 
-    rows, dtg = bench_streaming_group(rng)
+    rows, dtg = bench_streaming_group(rng, n=200_000 if fast else 1_000_000,
+                                      n_keys=10000 if fast else 50000)
     suite.add("streaming_groupby_1M", dtg * 1e6,
               f"groups={rows};Mtps={1.0 / dtg:.1f}")
+
+    # property-path closure: vectorized frontier engine vs row baseline
+    # (DESIGN.md §8; acceptance floor is 3x on the 10k-edge tree)
+    n_edges = 2000 if fast else 10000
+    out_p, dt_p, extra = bench_path_vectorized(rng, n_edges=n_edges)
+    suite.add(
+        "path_closure_batch", dt_p * 1e6,
+        f"pairs={out_p};Mtps={out_p / dt_p / 1e6:.1f};"
+        f"rounds={extra.get('frontier_rounds')};"
+        f"dedup_ratio={extra.get('dedup_ratio')};"
+        f"pool_alloc={extra.get('pool_allocations')};"
+        f"pool_reuse={extra.get('pool_reuses')}",
+    )
+    out_pr, dt_pr = bench_path_row(rng, n_edges=n_edges)
+    assert out_pr == out_p, (out_pr, out_p)  # row engine is the oracle
+    suite.add("path_closure_row", dt_pr * 1e6,
+              f"pairs={out_pr};Mtps={out_pr / dt_pr / 1e6:.3f};"
+              f"speedup_vs_row={dt_pr / dt_p:.1f}x")
     return suite.emit()
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--seed", type=int, default=0)
-    print(run(ap.parse_args().seed))
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print(run(args.seed, fast=args.fast))

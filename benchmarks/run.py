@@ -60,7 +60,7 @@ def main() -> None:
                                         runs=2 if f else 3),
         "adaptive": lambda: bench_adaptive.run(scale=0.1 if f else 0.2,
                                                runs=3 if f else 5),
-        "ops": lambda: bench_operators.run(),
+        "ops": lambda: bench_operators.run(fast=f),
     }
     selected = suites if args.suite == "all" else {args.suite: suites[args.suite]}
     report: Dict[str, object] = {}

@@ -52,3 +52,20 @@ SELECT ?p (COUNT(DISTINCT ?q) AS ?n) {
 } GROUP BY ?p
 """
 print("\nfriend counts:", Engine(store).execute(AGG).decoded(store.dict))
+
+# 6. property paths: the vectorized frontier engine (DESIGN.md §8).
+# `:knows+` is the transitive closure; `/` sequences into :worksAt.
+PATH = """
+SELECT ?reach ?company {
+  :Alice :knows+/:worksAt? ?reach .
+  ?reach :worksAt ?company
+}
+"""
+path_result = engine.execute(PATH)
+print("\nAlice's transitive network (with employers):")
+for row in path_result.decoded(store.dict):
+    print("  ", row)
+# the profile shows the PathExpand operator with its frontier metrics
+# (rounds, peak frontier, dedup ratio) and the seed-side choice
+print("\npath profile:")
+print(path_result.profile())

@@ -156,14 +156,34 @@ class TriplePattern:
     p: Slot
     o: Slot
     g: Optional[Slot] = None
-    # property-path modifier: "" (plain) or "+" (transitive closure, one or
-    # more hops). Paths require a constant predicate and are evaluated by
-    # the row-based engine only (paper §4).
+    # legacy property-path modifier: "" (plain) or "+". Kept for
+    # compatibility with older plans; the parser now emits PathPattern
+    # nodes for every non-trivial path (DESIGN.md §8).
     path: str = ""
 
 
     def slots(self) -> Tuple[Slot, ...]:
         return (self.s, self.p, self.o) + ((self.g,) if self.g else ())
+
+    def vars(self) -> Tuple[int, ...]:
+        return tuple(
+            dict.fromkeys(sl.id for sl in self.slots() if isinstance(sl, V))
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PathPattern:
+    """A property-path pattern ``s path o`` (SPARQL 1.1 §9): endpoints are
+    slots, the predicate position holds a compiled path expression
+    (repro.core.paths.expr). Lives alongside TriplePattern inside BGPs so
+    the planner's join ordering sees paths as ordinary joinable leaves."""
+
+    s: Slot
+    expr: object  # paths.expr.PathExpr (kept loose to avoid an import cycle)
+    o: Slot
+
+    def slots(self) -> Tuple[Slot, ...]:
+        return (self.s, self.o)
 
     def vars(self) -> Tuple[int, ...]:
         return tuple(

@@ -107,9 +107,17 @@ class Translator:
                 self.store, n.pattern, n.sort_var, sizer=self._sizer(),
                 pool=self.pool,
             )
+        if isinstance(n, PL.PPathExpand):
+            # vectorized frontier engine (DESIGN.md §8): paths run on the
+            # batch pipeline like every other leaf
+            from repro.core.operators.path import PathExpand
+
+            return PathExpand(
+                self.store, n.pattern.expr, n.pattern.s, n.pattern.o,
+                batch_size=self.cfg.max_batch, pool=self.pool,
+            )
         if isinstance(n, PL.PPathScan):
-            # property paths stay row-based under every engine (paper §4);
-            # the adapter bridges them into batch plans
+            # pre-§8 physical plans: row-based `+` bridged via adapter
             return RowToBatch(self._path_op(n), self.cfg.max_batch, pool=self.pool)
         if isinstance(n, PL.PSort):
             child = self._build(n.child)
@@ -231,6 +239,11 @@ class Translator:
         from repro.core.legacy.property_path import RowTransitivePath
 
         pat = n.pattern
+        if not isinstance(pat.p, A.K):
+            raise ValueError(
+                "property paths require a constant predicate, got a "
+                "variable in the predicate position"
+            )
         assert isinstance(pat.s, V) and isinstance(pat.o, V), (
             "bound-endpoint paths are planned as filters over the closure"
         )
@@ -241,6 +254,12 @@ class Translator:
     def _row(self, n: PL.Phys) -> LOP.RowOperator:
         if isinstance(n, PL.PScan):
             return LOP.RowScan(self.store, n.pattern, n.sort_var)
+        if isinstance(n, PL.PPathExpand):
+            from repro.core.legacy.property_path import RowPathScan
+
+            return RowPathScan(
+                self.store, n.pattern.expr, n.pattern.s, n.pattern.o
+            )
         if isinstance(n, PL.PPathScan):
             return self._path_op(n)
         if isinstance(n, PL.PSort):

@@ -26,6 +26,7 @@ class OpStats:
         "reset_calls",
         "wall_time",
         "rows_scanned",
+        "extra",
     )
 
     def __init__(self, name: str, detail: str = "") -> None:
@@ -38,6 +39,9 @@ class OpStats:
         self.reset_calls = 0
         self.wall_time = 0.0  # seconds spent inside this operator (self+children)
         self.rows_scanned = 0  # storage rows read (scans only; overfetch metric)
+        # operator-specific counters (e.g. PathExpand frontier rounds /
+        # dedup ratio); the profiler prints and aggregates them generically
+        self.extra: dict = {}
 
 
 class BatchOperator:

@@ -1,0 +1,181 @@
+"""PathExpand: the batch property-path operator (DESIGN.md §8).
+
+Evaluates one path pattern through the vectorized frontier engine and
+streams the materialized pair relation out as pooled, subject-sorted
+column batches — a pipeline breaker like Sort (the closure must complete
+before sorted emission), honoring the release()/drain() buffer-ownership
+protocol.
+
+Seed-side choice: a bound subject seeds forward BFS from that single node;
+a bound object seeds BFS over the flipped relation (bound-object
+expansion) and swaps the pairs back; with both endpoints free the engine
+enumerates every source. Frontier metrics (rounds, peak frontier size,
+dedup ratio) land in OpStats.extra for the profiler.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.algebra import K, Slot, V
+from repro.core.batch import BatchPool, ColumnBatch
+from repro.core.operators.base import BatchOperator
+from repro.core.paths.engine import PathEngine, PathResult
+from repro.core.paths.expr import PathExpr, path_repr
+from repro.core.storage import QuadStore
+
+
+class PathExpand(BatchOperator):
+    def __init__(
+        self,
+        store: QuadStore,
+        expr: PathExpr,
+        s_slot: Slot,
+        o_slot: Slot,
+        batch_size: int = 4096,
+        pool: Optional[BatchPool] = None,
+        backend: Optional[str] = None,
+    ) -> None:
+        self.store = store
+        self.expr = expr
+        self.s_slot, self.o_slot = s_slot, o_slot
+        self.batch_size = batch_size
+        self.pool = pool
+        self.engine = PathEngine(store, pool, backend)
+        self._result: Optional[PathResult] = None
+        self._offset = 0
+
+        self._var_ids: Tuple[int, ...]
+        if isinstance(s_slot, V) and isinstance(o_slot, V):
+            self._var_ids = (
+                (s_slot.id,) if s_slot.id == o_slot.id else (s_slot.id, o_slot.id)
+            )
+            self._sorted_var: Optional[int] = s_slot.id
+            self.seed_side = "subject"
+        elif isinstance(s_slot, K) and isinstance(o_slot, V):
+            self._var_ids = (o_slot.id,)
+            self._sorted_var = o_slot.id
+            self.seed_side = "subject"  # forward BFS from the bound subject
+        elif isinstance(s_slot, V) and isinstance(o_slot, K):
+            self._var_ids = (s_slot.id,)
+            self._sorted_var = s_slot.id
+            self.seed_side = "object"  # reverse BFS from the bound object
+        else:
+            self._var_ids = ()
+            self._sorted_var = None
+            self.seed_side = "subject"  # both bound: forward from subject
+        super().__init__("PathExpand", self._describe())
+
+    def _describe(self) -> str:
+        def slot(sl: Slot) -> str:
+            return f"?v{sl.id}" if isinstance(sl, V) else str(sl.term)
+
+        return (
+            f"({slot(self.s_slot)}, {path_repr(self.expr)}, "
+            f"{slot(self.o_slot)}) [seed={self.seed_side}]"
+        )
+
+    # -- operator API -------------------------------------------------------
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self._var_ids
+
+    def sorted_by(self) -> Optional[int]:
+        return self._sorted_var
+
+    def children(self) -> List[BatchOperator]:
+        return []
+
+    # -- evaluation ---------------------------------------------------------
+
+    def _seed(self, sl: Slot) -> Optional[np.ndarray]:
+        tid = self.store.dict.lookup(sl.term)
+        if tid is None:
+            return None  # unknown constant: empty result
+        return np.asarray([tid], dtype=np.int32)
+
+    def _evaluate(self) -> PathResult:
+        empty = PathResult(
+            np.zeros(0, dtype=np.int32), np.zeros(0, dtype=np.int32)
+        )
+        s_bound = isinstance(self.s_slot, K)
+        o_bound = isinstance(self.o_slot, K)
+        if s_bound:
+            seeds = self._seed(self.s_slot)
+            if seeds is None:
+                return empty
+            res = self.engine.evaluate(self.expr, seeds=seeds)
+        elif o_bound:
+            seeds = self._seed(self.o_slot)
+            if seeds is None:
+                return empty
+            res = self.engine.evaluate(self.expr, seeds=seeds, reverse=True)
+        else:
+            res = self.engine.evaluate(self.expr)
+        if s_bound and o_bound:  # both-bound: existence check
+            oid = self.store.dict.lookup(self.o_slot.term)
+            if oid is None:
+                return empty
+            keep = res.dst == int(oid)
+            res = PathResult(res.src[keep], res.dst[keep])
+        if len(self._var_ids) == 1 and not (s_bound or o_bound):
+            # ?x path ?x — keep only cyclic pairs
+            keep = res.src == res.dst
+            res = PathResult(res.src[keep], res.dst[keep])
+        self.stats.rows_scanned += len(res)
+        self.stats.extra.update(self.engine.counters.as_dict())
+        self.stats.extra["dedup_ratio"] = round(
+            self.engine.counters.dedup_ratio, 3
+        )
+        return res
+
+    def _primary(self) -> np.ndarray:
+        """The column the emitted batches are sorted by."""
+        assert self._result is not None
+        if isinstance(self.s_slot, V):
+            return self._result.src
+        return self._result.dst
+
+    def _next(self) -> Optional[ColumnBatch]:
+        if self._result is None:
+            self._result = self._evaluate()
+        res = self._result
+        if not self._var_ids:  # both endpoints bound: 0/1 row existence
+            if self._offset or not len(res):
+                return None
+            self._offset = len(res) or 1
+            b = ColumnBatch.alloc((), 32, self.pool)
+            b.mask[0] = True
+            b.n_rows = 1
+            return b
+        if self._offset >= len(res):
+            return None
+        n = min(self.batch_size, len(res) - self._offset)
+        sl = slice(self._offset, self._offset + n)
+        self._offset += n
+        if len(self._var_ids) == 2:
+            cols = [res.src[sl], res.dst[sl]]
+        elif isinstance(self.s_slot, V) and isinstance(self.o_slot, V):
+            cols = [res.src[sl]]  # ?x path ?x (src == dst)
+        elif isinstance(self.s_slot, V):
+            cols = [res.src[sl]]
+        else:
+            cols = [res.dst[sl]]
+        return ColumnBatch.from_columns(
+            self._var_ids, cols, self._sorted_var, pool=self.pool
+        )
+
+    def _skip(self, var: int, target: int) -> None:
+        if var != self._sorted_var:
+            raise ValueError("skip on unsorted variable")
+        if self._result is None:
+            self._result = self._evaluate()
+        primary = self._primary()
+        pos = int(np.searchsorted(primary, target, side="left"))
+        if pos > self._offset:
+            self._offset = pos
+
+    def _reset(self) -> None:
+        self._offset = 0

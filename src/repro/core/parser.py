@@ -1,19 +1,22 @@
 """Recursive-descent parser for the SPARQL subset scoped in DESIGN.md §7.
 
 Supports: SELECT (DISTINCT) with projection / aggregates / expressions-as,
-WHERE groups with triple patterns (',' ';' '.' shorthand), FILTER, OPTIONAL,
-MINUS, UNION, BIND, GROUP BY, ORDER BY (ASC/DESC), LIMIT/OFFSET, and the
-'a' keyword for rdf:type. Terms: prefixed names (:p, rdf:type), <iri>,
-numeric literals, "string" literals. Produces the algebra of
-repro.core.algebra.
+WHERE groups with triple patterns (',' ';' '.' shorthand), property paths
+(`+` `*` `?` `^` `/` `|` with parentheses, SPARQL 1.1 §9), FILTER,
+OPTIONAL, MINUS, UNION, BIND, GROUP BY, ORDER BY (ASC/DESC), LIMIT/OFFSET,
+and the 'a' keyword for rdf:type. Terms: prefixed names (:p, rdf:type),
+<iri>, numeric literals, "string" literals. Produces the algebra of
+repro.core.algebra; non-trivial paths become A.PathPattern nodes carrying
+a repro.core.paths.expr AST.
 """
 
 from __future__ import annotations
 
 import re
-from typing import List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 from repro.core import algebra as A
+from repro.core.paths.expr import PAlt, PathExpr, PClosure, PInv, PLink, PSeq
 
 _TOKEN_RE = re.compile(
     r"""
@@ -24,7 +27,7 @@ _TOKEN_RE = re.compile(
   | (?P<VAR>[?$][A-Za-z_][A-Za-z0-9_]*)
   | (?P<PNAME>[A-Za-z_][A-Za-z0-9_\-]*)?:(?:[A-Za-z0-9_\-.]*[A-Za-z0-9_\-])?
   | (?P<KW>[A-Za-z][A-Za-z0-9_]*)
-  | (?P<OP>\|\||&&|!=|<=|>=|[{}().,;*/+\-=<>!])
+  | (?P<OP>\|\||&&|!=|<=|>=|[{}().,;*/+\-=<>!^?|])
     """,
     re.VERBOSE,
 )
@@ -278,17 +281,17 @@ class Parser:
             node = A.Filter(f, node)
         return node
 
-    def _triples_same_subject(self) -> List[A.TriplePattern]:
+    def _triples_same_subject(self) -> List[Union[A.TriplePattern, A.PathPattern]]:
         s = self._slot()
-        out = []
+        out: List[Union[A.TriplePattern, A.PathPattern]] = []
         while True:
-            p = self._slot(predicate=True)
-            path = ""
-            if isinstance(p, A.K) and self.accept_op("+"):
-                path = "+"
+            p_slot, p_expr = self._predicate()
             while True:
                 o = self._slot()
-                out.append(A.TriplePattern(s, p, o, path=path))
+                if p_expr is not None:
+                    out.append(A.PathPattern(s, p_expr, o))
+                else:
+                    out.append(A.TriplePattern(s, p_slot, o))
                 if not self.accept_op(","):
                     break
             if not self.accept_op(";"):
@@ -296,6 +299,76 @@ class Parser:
             if self.peek().kind == "OP" and self.peek().value in (".", "}"):
                 break
         return out
+
+    # -- property paths (SPARQL 1.1 §9) ------------------------------------------
+
+    _PATH_OPS = ("+", "*", "?", "/", "|", "^")
+
+    def _predicate(self) -> Tuple[Optional[A.Slot], Optional[PathExpr]]:
+        """Parse the predicate position: (slot, None) for a plain predicate
+        or variable, (None, expr) for a non-trivial property path."""
+        t = self.peek()
+        if t.kind == "VAR":
+            self.next()
+            nxt = self.peek()
+            if nxt.kind == "OP" and nxt.value in self._PATH_OPS:
+                raise SyntaxError(
+                    "property paths require a constant predicate; found "
+                    f"path operator {nxt.value!r} after variable {t.value!r}"
+                )
+            return A.V(self.vt.var(t.value)), None
+        if t.kind in ("NUM", "STRING"):  # odd but previously accepted
+            return self._slot(predicate=True), None
+        expr = self._path_alt()
+        if isinstance(expr, PLink):
+            return A.K(expr.pred), None
+        return None, expr
+
+    def _path_alt(self) -> PathExpr:
+        parts = [self._path_seq()]
+        while self.accept_op("|"):
+            parts.append(self._path_seq())
+        return parts[0] if len(parts) == 1 else PAlt(tuple(parts))
+
+    def _path_seq(self) -> PathExpr:
+        parts = [self._path_step()]
+        while self.accept_op("/"):
+            parts.append(self._path_step())
+        return parts[0] if len(parts) == 1 else PSeq(tuple(parts))
+
+    def _path_step(self) -> PathExpr:
+        if self.accept_op("^"):
+            return PInv(self._path_elt())
+        return self._path_elt()
+
+    def _path_elt(self) -> PathExpr:
+        prim = self._path_primary()
+        if self.accept_op("+"):
+            return PClosure(prim, min_hops=1)
+        if self.accept_op("*"):
+            return PClosure(prim, min_hops=0)
+        if self.accept_op("?"):
+            return PClosure(prim, min_hops=0, max_hops=1)
+        return prim
+
+    def _path_primary(self) -> PathExpr:
+        t = self.peek()
+        if t.kind == "OP" and t.value == "(":
+            self.next()
+            e = self._path_alt()
+            self.expect_op(")")
+            return e
+        if t.kind == "KW" and t.value == "a":
+            self.next()
+            return PLink("rdf:type")
+        if t.kind in ("PNAME", "IRI"):
+            return PLink(self.next().value)
+        if t.kind == "VAR":
+            raise SyntaxError(
+                "property paths require a constant predicate; found "
+                f"variable {t.value!r} inside a path"
+            )
+        raise SyntaxError(f"expected a predicate or path at {t.value!r}")
 
     def _slot(self, predicate: bool = False) -> A.Slot:
         t = self.next()

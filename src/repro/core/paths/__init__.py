@@ -1,0 +1,32 @@
+"""Vectorized property-path subsystem (SPARQL 1.1 paths, DESIGN.md §8).
+
+BARQ (§4) leaves recursive operators on the row engine; this package lifts
+them onto the batch pipeline: path expressions compile to edge *relations*
+(sorted (src, dst) pair arrays) and closures run as semi-naive
+delta-frontier BFS where every round expands the whole frontier with the
+same kernels the join operators use (sorted_search + gather-style
+expansion) plus a dedicated frontier_dedup kernel.
+"""
+
+from repro.core.paths.expr import (
+    PAlt,
+    PathExpr,
+    PClosure,
+    PInv,
+    PLink,
+    PSeq,
+    path_repr,
+)
+from repro.core.paths.engine import PathEngine, PathResult
+
+__all__ = [
+    "PAlt",
+    "PClosure",
+    "PInv",
+    "PLink",
+    "PSeq",
+    "PathExpr",
+    "PathEngine",
+    "PathResult",
+    "path_repr",
+]

@@ -1,0 +1,392 @@
+"""Batched property-path evaluation: semi-naive delta-frontier BFS.
+
+A path expression compiles to an *edge relation* — two int32 arrays
+(src, dst), lexicographically sorted and deduplicated:
+
+  * PLink  — a psoc index slice (already (s, o)-sorted per predicate);
+  * PInv   — the sub-relation with columns swapped and re-sorted;
+  * PSeq   — relational composition (successor lookup + expansion, the
+             same sorted_search/join_expand/gather_emit kernels the merge
+             join uses);
+  * PAlt   — union + relation dedup;
+  * PClosure — the frontier engine below (``+``/``*``), or a single
+             union with the identity relation (``?``).
+
+Closure runs as multi-source BFS where one *round* expands the whole
+frontier as one batch: successor ranges via ``sorted_search``, candidate
+(source, node) pairs via ``join_expand`` + ``gather_emit`` windows written
+straight into pooled buffers, then one ``frontier_dedup`` kernel call
+(adjacent-unique + visited-set mask over the sorted candidates) yields the
+delta frontier — semi-naive evaluation: only last round's discoveries are
+ever expanded. Steady-state rounds perform O(1) BatchPool fetches
+(candidate / sorted / frontier buffers recycle through the arena).
+
+The visited set doubles as the result: it is exactly the closure pairs,
+kept sorted by (source, node) throughout, so the operator can emit
+subject-sorted batches without a final sort.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import vecops
+from repro.core.batch import BatchPool
+from repro.core.paths.expr import (
+    PAlt,
+    PathExpr,
+    PClosure,
+    PInv,
+    PLink,
+    PSeq,
+    matches_zero_length,
+)
+from repro.core.storage import QuadStore
+from repro.kernels import ops
+
+# expansion window: candidates are materialized into the round buffer in
+# chunks of this many output slots (bounds the join_expand working set)
+EXPAND_WINDOW = 4096
+_EMPTY = np.zeros(0, dtype=np.int32)
+
+
+def _pow2_cap(n: int) -> int:
+    """Power-of-two buffer capacity >= max(n, 32) — pow2 capacities make
+    pooled buffers reusable across rounds with different frontier sizes."""
+    return 1 << max(int(n) - 1, 31).bit_length()
+
+
+@dataclasses.dataclass
+class PathCounters:
+    """Per-evaluation frontier metrics (surfaced by the profiler)."""
+
+    rounds: int = 0
+    frontier_total: int = 0  # sum of frontier sizes over rounds
+    frontier_peak: int = 0
+    candidates: int = 0  # expansion outputs before dedup
+    discovered: int = 0  # delta-frontier pairs after dedup
+
+    @property
+    def dedup_ratio(self) -> float:
+        """discovered / candidates — 1.0 means no wasted expansion."""
+        return self.discovered / self.candidates if self.candidates else 1.0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "frontier_rounds": self.rounds,
+            "frontier_peak": self.frontier_peak,
+            "dedup_in": self.candidates,
+            "dedup_out": self.discovered,
+        }
+
+
+@dataclasses.dataclass
+class PathResult:
+    """Sorted, deduplicated (src, dst) pair relation."""
+
+    src: np.ndarray
+    dst: np.ndarray
+
+    def __len__(self) -> int:
+        return int(len(self.src))
+
+    def swapped(self) -> "PathResult":
+        order = np.lexsort((self.src, self.dst))
+        return PathResult(
+            np.ascontiguousarray(self.dst[order]),
+            np.ascontiguousarray(self.src[order]),
+        )
+
+
+class _Arena:
+    """Thin (2, cap) int32 buffer pool view over BatchPool: the frontier
+    engine's working sets ride the same arena as the operators' batches,
+    so its alloc/reuse traffic shows up in the pool counters."""
+
+    def __init__(self, pool: Optional[BatchPool]):
+        self.pool = pool
+        self._masks: Dict[int, np.ndarray] = {}
+
+    def acquire(self, n: int) -> np.ndarray:
+        cap = _pow2_cap(n)
+        if self.pool is None:
+            return np.empty((2, cap), dtype=np.int32)
+        cols, mask = self.pool.acquire(2, cap)
+        self._masks[id(cols)] = mask
+        return cols
+
+    def release(self, cols: Optional[np.ndarray]) -> None:
+        if cols is None or self.pool is None:
+            return
+        mask = self._masks.pop(id(cols), None)
+        if mask is None:
+            mask = np.empty(cols.shape[1], dtype=bool)
+        self.pool.release(cols, mask)
+
+
+class PathEngine:
+    """Compiles path expressions against one store and runs closures."""
+
+    def __init__(
+        self,
+        store: QuadStore,
+        pool: Optional[BatchPool] = None,
+        backend: Optional[str] = None,
+    ):
+        self.store = store
+        self.arena = _Arena(pool)
+        self.backend = backend
+        self.counters = PathCounters()
+        self._domain: Optional[np.ndarray] = None
+
+    # -- public -------------------------------------------------------------
+
+    def evaluate(
+        self,
+        expr: PathExpr,
+        seeds: Optional[np.ndarray] = None,
+        reverse: bool = False,
+    ) -> PathResult:
+        """Pairs of ``expr``. With ``seeds`` (sorted unique int32 codes) the
+        result is restricted to pairs whose subject (or object, when
+        ``reverse`` — bound-object expansion over flipped edges) is a seed;
+        a top-level unbounded closure then runs BFS from the seeds only
+        instead of materializing the whole closure."""
+        if (
+            seeds is not None
+            and isinstance(expr, PClosure)
+            and expr.max_hops == -1
+        ):
+            base = self.relation(expr.sub)
+            if reverse:
+                base = base.swapped()
+            res = self._closure(base, seeds)
+            if expr.min_hops == 0:
+                res = _union(res, PathResult(seeds, seeds))
+            return res.swapped() if reverse else res
+        rel = self.relation(expr)
+        if seeds is None:
+            return rel
+        if reverse:
+            rel = rel.swapped()
+        keep = np.isin(rel.src, seeds)
+        res = PathResult(rel.src[keep], rel.dst[keep])
+        if matches_zero_length(expr):
+            # bound endpoints reach themselves via the empty walk even when
+            # off-graph (the relation's identity only spans graph nodes)
+            res = _union(res, PathResult(seeds, seeds))
+        return res.swapped() if reverse else res
+
+    # -- relation compilation ----------------------------------------------
+
+    def relation(self, expr: PathExpr) -> PathResult:
+        if isinstance(expr, PLink):
+            return self._link(expr.pred)
+        if isinstance(expr, PInv):
+            return self.relation(expr.sub).swapped()
+        if isinstance(expr, PSeq):
+            rel = self.relation(expr.parts[0])
+            for part in expr.parts[1:]:
+                rel = self._compose(rel, self.relation(part))
+            return rel
+        if isinstance(expr, PAlt):
+            parts = [self.relation(p) for p in expr.parts]
+            return _dedup_rel(
+                np.concatenate([p.src for p in parts]),
+                np.concatenate([p.dst for p in parts]),
+                self.backend,
+            )
+        if isinstance(expr, PClosure):
+            sub = self.relation(expr.sub)
+            if expr.max_hops == 1:  # 'p?': one hop or zero
+                res = sub
+            else:
+                seeds = np.unique(sub.src).astype(np.int32)
+                res = self._closure(sub, seeds)
+            if expr.min_hops == 0:
+                dom = self._graph_domain()
+                res = _union(res, PathResult(dom, dom))
+            return res
+        raise TypeError(type(expr))
+
+    def _link(self, pred) -> PathResult:
+        pid = self.store.dict.lookup(pred)
+        if pid is None:
+            return PathResult(_EMPTY, _EMPTY)
+        arr = self.store.index_array("psoc")  # (p, s, o, c) lex-sorted
+        lo = int(np.searchsorted(arr[:, 0], pid, side="left"))
+        hi = int(np.searchsorted(arr[:, 0], pid, side="right"))
+        src = np.ascontiguousarray(arr[lo:hi, 1])
+        dst = np.ascontiguousarray(arr[lo:hi, 2])
+        # the slice is (s, o)-sorted; the same triple in several named
+        # graphs duplicates pairs, so run the adjacent-unique mask
+        mask = ops.frontier_dedup(src, dst, _EMPTY, _EMPTY, backend=self.backend)
+        if not mask.all():
+            src, dst = src[mask], dst[mask]
+        return PathResult(src, dst)
+
+    def _graph_domain(self) -> np.ndarray:
+        """All terms used as subject or object (the zero-length path
+        domain; DESIGN.md §8)."""
+        if self._domain is None:
+            spoc = self.store.index_array("spoc")
+            self._domain = np.unique(
+                np.concatenate([spoc[:, 0], spoc[:, 2]])
+            ).astype(np.int32)
+        return self._domain
+
+    # -- composition ---------------------------------------------------------
+
+    def _compose(self, a: PathResult, b: PathResult) -> PathResult:
+        """a ∘ b: pairs (x, z) with (x, y) ∈ a, (y, z) ∈ b."""
+        if not len(a) or not len(b):
+            return PathResult(_EMPTY, _EMPTY)
+        srcs, dsts = self._expand(a.dst, b.src, b.dst, a.src)
+        return _dedup_rel(srcs, dsts, self.backend)
+
+    def _expand(
+        self,
+        probe_nodes: np.ndarray,
+        rel_src: np.ndarray,
+        rel_dst: np.ndarray,
+        carry: np.ndarray,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """One batched successor expansion: for row i, every rel edge whose
+        src equals probe_nodes[i] emits (carry[i], rel_dst[edge]). Returns
+        the raw (pre-dedup) pair arrays."""
+        be = self.backend
+        lo = ops.sorted_search(rel_src, probe_nodes, "left", backend=be)
+        hi = ops.sorted_search(rel_src, probe_nodes, "right", backend=be)
+        lens = (hi - lo).astype(np.int32)
+        n = len(probe_nodes)
+        ones = np.ones(n, dtype=np.int32)
+        idx = np.arange(n, dtype=np.int32)
+        cum = vecops.group_output_offsets(ones, lens)
+        total = int(cum[-1])
+        if total == 0:
+            return _EMPTY, _EMPTY
+        out = self.arena.acquire(total)
+        lcols = np.ascontiguousarray(carry[None, :])
+        rcols = np.ascontiguousarray(rel_dst[None, :])
+        base = 0
+        while base < total:
+            count = min(EXPAND_WINDOW, total - base)
+            li, ri = ops.join_expand(idx, ones, lo, lens, cum, base, count, backend=be)
+            ops.gather_emit(
+                lcols, rcols, li, ri, (0,), (0,), (),
+                backend=be, out=out, out_offset=base,
+            )
+            base += count
+        src = out[0, :total].copy()
+        dst = out[1, :total].copy()
+        self.arena.release(out)
+        return src, dst
+
+    # -- the frontier engine -------------------------------------------------
+
+    def _closure(self, rel: PathResult, seeds: np.ndarray) -> PathResult:
+        """Transitive closure restricted to ``seeds`` (sorted unique), via
+        semi-naive delta-frontier iteration. Result pairs are (seed, node),
+        node reached in >= 1 hops, sorted by (seed, node)."""
+        c = self.counters
+        n_seed = len(seeds)
+        vis_hi, vis_lo = _EMPTY, _EMPTY  # (seed_idx, node), lex-sorted
+        if n_seed == 0 or not len(rel):
+            return PathResult(_EMPTY, _EMPTY)
+        # round-0 frontier: the seeds themselves (not part of the result —
+        # min_hops >= 1; a cycle back to the seed re-discovers it normally)
+        f_buf = self.arena.acquire(n_seed)
+        f_buf[0, :n_seed] = np.arange(n_seed, dtype=np.int32)
+        f_buf[1, :n_seed] = seeds
+        n_f = n_seed
+        while n_f:
+            c.rounds += 1
+            c.frontier_total += n_f
+            c.frontier_peak = max(c.frontier_peak, n_f)
+            cand_src, cand_dst, cand_buf, total = self._expand_frontier(
+                f_buf, n_f, rel
+            )
+            self.arena.release(f_buf)
+            f_buf = None
+            if total == 0:
+                self.arena.release(cand_buf)
+                break
+            c.candidates += total
+            # host sort (lexicographic), then one dedup kernel call
+            order = np.lexsort((cand_dst, cand_src))
+            sort_buf = self.arena.acquire(total)
+            np.take(cand_src, order, out=sort_buf[0, :total])
+            np.take(cand_dst, order, out=sort_buf[1, :total])
+            self.arena.release(cand_buf)
+            keep = ops.frontier_dedup(
+                sort_buf[0, :total], sort_buf[1, :total], vis_hi, vis_lo,
+                backend=self.backend,
+            )
+            new_idx = np.nonzero(keep)[0]
+            n_f = len(new_idx)
+            c.discovered += n_f
+            if n_f:
+                f_buf = self.arena.acquire(n_f)
+                np.take(sort_buf[0, :total], new_idx, out=f_buf[0, :n_f])
+                np.take(sort_buf[1, :total], new_idx, out=f_buf[1, :n_f])
+                vis_hi, vis_lo = vecops.merge_sorted_pairs(
+                    vis_hi, vis_lo, f_buf[0, :n_f], f_buf[1, :n_f]
+                )
+            self.arena.release(sort_buf)
+        self.arena.release(f_buf)
+        # visited == closure pairs; map seed indices back to codes (sorted
+        # seeds keep the (src, dst) order lexicographic)
+        return PathResult(seeds[vis_hi].astype(np.int32), vis_lo)
+
+    def _expand_frontier(self, f_buf: np.ndarray, n_f: int, rel: PathResult):
+        """Expand a whole frontier batch; returns (src, dst, buffer, total)
+        where src/dst are views into the pooled buffer."""
+        be = self.backend
+        nodes = f_buf[1, :n_f]
+        lo = ops.sorted_search(rel.src, nodes, "left", backend=be)
+        hi = ops.sorted_search(rel.src, nodes, "right", backend=be)
+        lens = (hi - lo).astype(np.int32)
+        ones = np.ones(n_f, dtype=np.int32)
+        idx = np.arange(n_f, dtype=np.int32)
+        cum = vecops.group_output_offsets(ones, lens)
+        total = int(cum[-1])
+        out = self.arena.acquire(total)
+        if total:
+            lcols = np.ascontiguousarray(f_buf[0:1, :n_f])
+            rcols = np.ascontiguousarray(rel.dst[None, :])
+            base = 0
+            while base < total:
+                count = min(EXPAND_WINDOW, total - base)
+                li, ri = ops.join_expand(
+                    idx, ones, lo, lens, cum, base, count, backend=be
+                )
+                ops.gather_emit(
+                    lcols, rcols, li, ri, (0,), (0,), (),
+                    backend=be, out=out, out_offset=base,
+                )
+                base += count
+        return out[0, :total], out[1, :total], out, total
+
+
+# -- relation helpers ---------------------------------------------------------
+
+
+def _dedup_rel(src: np.ndarray, dst: np.ndarray, backend=None) -> PathResult:
+    if not len(src):
+        return PathResult(_EMPTY, _EMPTY)
+    order = np.lexsort((dst, src))
+    src = np.ascontiguousarray(src[order], dtype=np.int32)
+    dst = np.ascontiguousarray(dst[order], dtype=np.int32)
+    mask = ops.frontier_dedup(src, dst, _EMPTY, _EMPTY, backend=backend)
+    if not mask.all():
+        src, dst = src[mask], dst[mask]
+    return PathResult(src, dst)
+
+
+def _union(a: PathResult, b: PathResult) -> PathResult:
+    return _dedup_rel(
+        np.concatenate([a.src, b.src]), np.concatenate([a.dst, b.dst])
+    )

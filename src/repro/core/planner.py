@@ -41,9 +41,22 @@ class PScan(PhysNode):
 
 @dataclasses.dataclass
 class PPathScan(PhysNode):
-    """Transitive property path ?s :p+ ?o — row-based only (paper §4)."""
+    """Transitive property path ?s :p+ ?o — row-based only (paper §4).
+    Kept for programmatically built plans; the planner now emits
+    PPathExpand for every path (DESIGN.md §8)."""
 
     pattern: A.TriplePattern  # path == '+', constant predicate
+
+
+@dataclasses.dataclass
+class PPathExpand(PhysNode):
+    """Vectorized property path: semi-naive delta-frontier BFS over the
+    batch pipeline (DESIGN.md §8). ``seed_side`` records the planner's
+    bound-endpoint choice: 'subject' seeds forward BFS (bound or
+    enumerated subjects), 'object' seeds reverse BFS over flipped edges."""
+
+    pattern: A.PathPattern
+    seed_side: str = "subject"
 
 
 @dataclasses.dataclass
@@ -129,13 +142,13 @@ class PUnion(PhysNode):
 
 
 Phys = TUnion[
-    PScan, PSort, PMergeJoin, PLookupJoin, PCross, PFilter, PExtend,
-    PProject, PDistinct, PGroup, POrderBy, PSlice, PUnion,
+    PScan, PPathScan, PPathExpand, PSort, PMergeJoin, PLookupJoin, PCross,
+    PFilter, PExtend, PProject, PDistinct, PGroup, POrderBy, PSlice, PUnion,
 ]
 
 
 def phys_vars(n: Phys) -> Tuple[int, ...]:
-    if isinstance(n, (PScan, PPathScan)):
+    if isinstance(n, (PScan, PPathScan, PPathExpand)):
         return n.pattern.vars()
     if isinstance(n, (PSort, PFilter, PSlice)):
         return phys_vars(n.child)
@@ -169,6 +182,10 @@ def phys_sorted_by(n: Phys) -> Optional[int]:
         return n.sort_var
     if isinstance(n, PPathScan):
         return n.pattern.s.id if isinstance(n.pattern.s, A.V) else None
+    if isinstance(n, PPathExpand):
+        if isinstance(n.pattern.s, A.V):
+            return n.pattern.s.id
+        return n.pattern.o.id if isinstance(n.pattern.o, A.V) else None
     if isinstance(n, PSort):
         return n.var
     if isinstance(n, PMergeJoin):
@@ -279,15 +296,38 @@ class Planner:
 
     # -- BGP join ordering (greedy System-R style) ---------------------------------------
 
+    @staticmethod
+    def _normalize_pattern(p):
+        """Fold the legacy TriplePattern path='+' shorthand into a
+        PathPattern so one code path prices and plans every path."""
+        if isinstance(p, A.TriplePattern) and p.path == "+":
+            if not isinstance(p.p, A.K):
+                raise ValueError(
+                    "property paths require a constant predicate, got "
+                    f"variable predicate in {p}"
+                )
+            from repro.core.paths.expr import PClosure, PLink
+
+            return A.PathPattern(p.s, PClosure(PLink(p.p.term), min_hops=1), p.o)
+        return p
+
+    def _pattern_card(self, p) -> float:
+        """Cardinality for a BGP leaf: triple patterns from the index
+        ranges, paths from the stats-based closure estimate (replacing the
+        old hard-coded 3-hop multiplier)."""
+        if isinstance(p, A.PathPattern):
+            return max(self.stats.path_cardinality(p), 0)
+        return max(self.stats.pattern_cardinality(p), 0)
+
+    def _pattern_distinct(self, p, var: int) -> int:
+        if isinstance(p, A.PathPattern):
+            return self.stats.path_distinct_values(p, var)
+        return self.stats.distinct_values(p, var)
+
     def _plan_bgp(self, patterns: Sequence[A.TriplePattern], filters: List[A.Expr]) -> Phys:
         assert patterns
-        remaining = list(patterns)
-        # closure multiplier for transitive paths (heuristic: ~3 hops deep)
-        cards = {
-            id(p): max(self.stats.pattern_cardinality(p), 0)
-            * (3 if p.path == "+" else 1)
-            for p in remaining
-        }
+        remaining = [self._normalize_pattern(p) for p in patterns]
+        cards = {id(p): self._pattern_card(p) for p in remaining}
         # start from the most selective pattern
         first = min(remaining, key=lambda p: cards[id(p)])
         remaining.remove(first)
@@ -305,7 +345,7 @@ class Planner:
                     continue
                 jv = self._choose_join_var(current, p, shared)
                 d_a = self._distinct_estimate(current, jv)
-                d_b = self.stats.distinct_values(p, jv)
+                d_b = self._pattern_distinct(p, jv)
                 est = self.stats.join_cardinality(
                     max(int(current.est_rows), 1), cards[id(p)], d_a, d_b
                 )
@@ -357,15 +397,23 @@ class Planner:
             return self.stats.distinct_values(n.pattern, var)
         return max(int(n.est_rows ** 0.5), 1)
 
-    def _leaf(self, p: A.TriplePattern, sort_var: Optional[int] = None) -> Phys:
-        if p.path == "+":
-            assert isinstance(p.p, A.K), "property paths need a constant predicate"
-            return PPathScan(p)
+    def _leaf(self, p, sort_var: Optional[int] = None) -> Phys:
+        p = self._normalize_pattern(p)
+        if isinstance(p, A.PathPattern):
+            # seed-side choice: a bound object flips the edges and runs
+            # BFS backwards from it; otherwise seed forward from the
+            # (bound or enumerated) subjects
+            seed = (
+                "object"
+                if isinstance(p.o, A.K) and isinstance(p.s, A.V)
+                else "subject"
+            )
+            return PPathExpand(p, seed_side=seed)
         return PScan(p, sort_var)
 
     def _make_join(self, left: Phys, p: A.TriplePattern, jv: int, est: float) -> Phys:
         right: Phys = self._leaf(p, jv)
-        right.est_rows = self.stats.pattern_cardinality(p) * (3 if p.path == "+" else 1)
+        right.est_rows = self._pattern_card(p)
         if phys_sorted_by(right) != jv:
             s = PSort(right, jv)
             s.est_rows = right.est_rows
@@ -441,6 +489,15 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
         for sl in (n.pattern.s, n.pattern.p, n.pattern.o):
             t.append(vname(sl.id) if isinstance(sl, A.V) else str(sl.term))
         return f"{pad}Scan({', '.join(t)}) est={n.est_rows:.0f}"
+    if isinstance(n, PPathExpand):
+        from repro.core.paths.expr import path_repr
+
+        s = vname(n.pattern.s.id) if isinstance(n.pattern.s, A.V) else str(n.pattern.s.term)
+        o = vname(n.pattern.o.id) if isinstance(n.pattern.o, A.V) else str(n.pattern.o.term)
+        return (
+            f"{pad}PathExpand({s}, {path_repr(n.pattern.expr)}, {o}) "
+            f"[seed={n.seed_side}] est={n.est_rows:.0f}"
+        )
     if isinstance(n, PSort):
         return f"{pad}Sort({vname(n.var)})\n" + explain(n.child, var_table, indent + 1)
     if isinstance(n, PMergeJoin):

@@ -64,6 +64,10 @@ def profile_tree(root, var_table: VarTable = None, pool=None) -> str:
             parts.append(f"skip: {_fmt_count(s.skip_calls)}")
         if s.rows_scanned:
             parts.append(f"scanned: {_fmt_count(s.rows_scanned)}")
+        for k, v in getattr(s, "extra", {}).items():
+            parts.append(
+                f"{k}: {v}" if isinstance(v, float) else f"{k}: {_fmt_count(v)}"
+            )
         parts.append(f"wall: {100.0 * s.wall_time / total:.1f}%")
         lines.append(prefix + head + ", ".join(parts))
         kids = op.children()
@@ -93,8 +97,18 @@ def collect_stats(root, pool=None) -> dict:
         agg["rows_scanned"] += op.stats.rows_scanned
         agg["next_calls"] += op.stats.next_calls
         agg["skip_calls"] += op.stats.skip_calls
+        for k, v in getattr(op.stats, "extra", {}).items():
+            # per-operator counters (frontier rounds, dedup ratio, ...):
+            # peaks aggregate by max, ratios are recomputed below, the
+            # rest are additive counts
+            if k.endswith("_peak"):
+                agg[k] = max(agg.get(k, 0), v)
+            elif not k.endswith("_ratio"):
+                agg[k] = agg.get(k, 0) + v
         for c in op.children():
             walk(c)
 
     walk(root)
+    if agg.get("dedup_in"):
+        agg["dedup_ratio"] = round(agg["dedup_out"] / agg["dedup_in"], 3)
     return agg

@@ -18,13 +18,19 @@ Join estimates use the System-R containment rule
 
 from __future__ import annotations
 
+import math
 from collections import Counter
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.algebra import K, TriplePattern, V
+from repro.core.algebra import K, PathPattern, TriplePattern, V
+from repro.core.paths.expr import PAlt, PClosure, PInv, PLink, PSeq
 from repro.core.storage import INDEX_ORDERS, QuadStore
+
+# depth cap for closure estimation: BFS deeper than this contributes little
+# to the *estimate* (real evaluation is exact; this only prices plans)
+CLOSURE_DEPTH_CAP = 16
 
 
 class CountMinSketch:
@@ -111,6 +117,89 @@ class GraphStats:
         else:  # predicate or graph var
             d = max(len(self.pred_count), 1)
         return max(1, min(d, card))
+
+    # -- property-path estimates (DESIGN.md §8) ------------------------------------
+
+    @staticmethod
+    def closure_multiplier(card: int, d_subj: int, d_obj: int) -> float:
+        """Estimated |transitive closure| / |edge relation|.
+
+        Replaces the old hard-coded 3-hop multiplier: with average
+        out-degree k = card / d_subj, the per-source reachable set is the
+        geometric series sum_{d=1..D} k^d capped at d_obj (every reachable
+        node is some edge's object), with D = log_k(d_obj) capped at
+        CLOSURE_DEPTH_CAP. For thin graphs (k <= 1, chains/trees) the
+        series degenerates and the estimate is the capped average depth.
+        """
+        if card <= 0:
+            return 1.0
+        d_subj = max(d_subj, 1)
+        d_obj = max(d_obj, 1)
+        k = card / d_subj
+        if k <= 1.0:
+            reach = float(min(d_obj, CLOSURE_DEPTH_CAP))
+        else:
+            depth = min(math.log(d_obj, k), float(CLOSURE_DEPTH_CAP))
+            reach = min(float(d_obj), k * (k ** depth - 1.0) / (k - 1.0))
+        return max(reach / k, 1.0)
+
+    def _path_expr_stats(self, expr) -> Tuple[float, int, int]:
+        """(cardinality, distinct subjects, distinct objects) of a path
+        expression's pair relation."""
+        if isinstance(expr, PLink):
+            pid = self.store.dict.lookup(expr.pred)
+            if pid is None or pid not in self.pred_count:
+                return 0.0, 1, 1
+            return (
+                float(self.pred_count[pid]),
+                self.distinct_subj.get(pid, 1),
+                self.distinct_obj.get(pid, 1),
+            )
+        if isinstance(expr, PInv):
+            c, ds, do = self._path_expr_stats(expr.sub)
+            return c, do, ds
+        if isinstance(expr, PSeq):
+            c, ds, do = self._path_expr_stats(expr.parts[0])
+            for part in expr.parts[1:]:
+                c2, ds2, do2 = self._path_expr_stats(part)
+                c = self.join_cardinality(max(int(c), 1), max(int(c2), 1), do, ds2)
+                do = do2
+            return c, min(ds, int(max(c, 1))), min(do, int(max(c, 1)))
+        if isinstance(expr, PAlt):
+            c = ds = do = 0
+            for part in expr.parts:
+                c2, ds2, do2 = self._path_expr_stats(part)
+                c, ds, do = c + c2, ds + ds2, do + do2
+            return c, max(ds, 1), max(do, 1)
+        if isinstance(expr, PClosure):
+            c, ds, do = self._path_expr_stats(expr.sub)
+            n_nodes = max(self.total_distinct_subj, self.total_distinct_obj)
+            if expr.max_hops == 1:  # 'p?': sub ∪ identity
+                return c + n_nodes, ds, do
+            c = c * self.closure_multiplier(int(c), ds, do)
+            if expr.min_hops == 0:  # 'p*': closure ∪ identity
+                c += n_nodes
+            return c, ds, do
+        raise TypeError(type(expr))
+
+    def path_cardinality(self, pattern: PathPattern) -> int:
+        """Result-size estimate for a PathPattern, bound endpoints applied
+        with the same containment logic as triple patterns."""
+        card, ds, do = self._path_expr_stats(pattern.expr)
+        if isinstance(pattern.s, K):
+            card /= max(ds, 1)
+        if isinstance(pattern.o, K):
+            card /= max(do, 1)
+        return max(int(card), 0)
+
+    def path_distinct_values(self, pattern: PathPattern, var: int) -> int:
+        card, ds, do = self._path_expr_stats(pattern.expr)
+        d = 1
+        if isinstance(pattern.s, V) and pattern.s.id == var:
+            d = ds
+        if isinstance(pattern.o, V) and pattern.o.id == var:
+            d = max(d, do)
+        return max(1, min(d, int(max(card, 1))))
 
     def star_cardinality(self, pred_ids: frozenset) -> int:
         """Characteristic-set estimate: subjects having all given predicates."""

@@ -215,6 +215,66 @@ def gather_emit(
 
 
 # ---------------------------------------------------------------------------
+# frontier dedup (property-path BFS rounds, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+def _pair_key(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    """Composite int64 sort key for non-negative int32 (hi, lo) pairs."""
+    return (hi.astype(np.int64) << 32) | lo.astype(np.int64)
+
+
+def frontier_dedup(
+    cand_hi: np.ndarray,
+    cand_lo: np.ndarray,
+    vis_hi: np.ndarray,
+    vis_lo: np.ndarray,
+) -> np.ndarray:
+    """Validity mask over a lexicographically sorted candidate frontier.
+
+    Inputs are (source, node) pairs as two int32 columns, both the
+    candidate batch and the visited set sorted lexicographically by
+    (hi, lo). mask[j] is True iff candidate j is the first occurrence of
+    its pair within the batch (adjacent-unique) AND the pair is absent
+    from the visited set — the semi-naive delta of a BFS round. With an
+    empty visited set this is plain sort-unique (relation dedup).
+    """
+    c = int(len(cand_hi))
+    mask = np.ones(c, dtype=bool)
+    if c == 0:
+        return mask
+    np.logical_or(
+        cand_hi[1:] != cand_hi[:-1], cand_lo[1:] != cand_lo[:-1], out=mask[1:]
+    )
+    if len(vis_hi):
+        key_c = _pair_key(cand_hi, cand_lo)
+        key_v = _pair_key(vis_hi, vis_lo)
+        pos = np.searchsorted(key_v, key_c, side="left")
+        inb = pos < len(key_v)
+        member = np.zeros(c, dtype=bool)
+        member[inb] = key_v[np.minimum(pos[inb], len(key_v) - 1)] == key_c[inb]
+        mask &= ~member
+    return mask
+
+
+def merge_sorted_pairs(
+    a_hi: np.ndarray, a_lo: np.ndarray, b_hi: np.ndarray, b_lo: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Merge two lexicographically sorted, mutually disjoint pair sets into
+    one sorted pair set (the visited-set growth step; O(|a| + |b|)). The
+    result never aliases ``b`` — callers pass views into recycled buffers."""
+    if not len(b_hi):
+        return a_hi, a_lo
+    if not len(a_hi):
+        return b_hi.copy(), b_lo.copy()
+    pos = np.searchsorted(_pair_key(a_hi, a_lo), _pair_key(b_hi, b_lo))
+    return (
+        np.insert(a_hi, pos, b_hi),
+        np.insert(a_lo, pos, b_lo),
+    )
+
+
+# ---------------------------------------------------------------------------
 # sorted search (vectorized skip()/seek, paper §3.2 Skip phase)
 # ---------------------------------------------------------------------------
 

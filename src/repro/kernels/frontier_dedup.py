@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: frontier dedup for the property-path BFS engine.
+
+One semi-naive BFS round produces a lexicographically sorted candidate
+frontier of (source, node) int32 pairs; the delta frontier keeps a pair iff
+it is (a) the first occurrence inside the batch and (b) not already in the
+(sorted) visited set. (a) is a shifted-neighbor comparison; (b) is computed
+gather-free as an equality-matrix reduction over visited tiles — the same
+output-revisiting accumulation pattern as the sorted_search kernel (TPU
+grids run sequentially, so the (cand_block, vis_tile) grid accumulates
+match counts in-place in VMEM). Pairs stay as two int32 columns: no int64
+composite key is ever formed, so the kernel runs with x64 disabled.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+C_BLOCK = 512
+V_TILE = 2048
+_PAD = jnp.iinfo(jnp.int32).min  # visited padding: matches no candidate
+
+
+def _kernel(vh_ref, vl_ref, ch_ref, cl_ref, ph_ref, pl_ref, out_ref):
+    v_idx = pl.program_id(1)
+    vh, vl = vh_ref[...], vl_ref[...]  # (V_TILE,)
+    ch, cl = ch_ref[...], cl_ref[...]  # (C_BLOCK,)
+    hits = jnp.sum(
+        ((vh[:, None] == ch[None, :]) & (vl[:, None] == cl[None, :])).astype(
+            jnp.int32
+        ),
+        axis=0,
+    )
+
+    @pl.when(v_idx == 0)
+    def _init():
+        # fold the adjacent-unique test in on the first visited tile:
+        # ph/pl carry each candidate's left neighbor (host-shifted, so the
+        # test stays local to the block even at block boundaries)
+        dup_prev = (ph_ref[...] == ch) & (pl_ref[...] == cl)
+        out_ref[...] = hits + dup_prev.astype(jnp.int32)
+
+    @pl.when(v_idx != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + hits
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def frontier_dedup_pallas(
+    cand_hi: jax.Array,
+    cand_lo: jax.Array,
+    vis_hi: jax.Array,
+    vis_lo: jax.Array,
+    interpret: bool = True,
+) -> jax.Array:
+    """(C,) bool mask — see vecops.frontier_dedup for the contract."""
+    c, v = cand_hi.shape[0], vis_hi.shape[0]
+    c_pad = pl.cdiv(max(c, 1), C_BLOCK) * C_BLOCK
+    v_pad = pl.cdiv(max(v, 1), V_TILE) * V_TILE
+
+    def pad_c(a, fill):
+        return jnp.full((c_pad,), fill, jnp.int32).at[:c].set(a.astype(jnp.int32))
+
+    ch = pad_c(cand_hi, _PAD)
+    cl = pad_c(cand_lo, _PAD)
+    # left-neighbor columns; the first candidate gets a sentinel neighbor
+    ph = jnp.full((c_pad,), _PAD, jnp.int32).at[1:c].set(cand_hi[: c - 1].astype(jnp.int32))
+    pl_ = jnp.full((c_pad,), _PAD, jnp.int32).at[1:c].set(cand_lo[: c - 1].astype(jnp.int32))
+    vh = jnp.full((v_pad,), _PAD, jnp.int32).at[:v].set(vis_hi.astype(jnp.int32))
+    vl = jnp.full((v_pad,), _PAD, jnp.int32).at[:v].set(vis_lo.astype(jnp.int32))
+
+    grid = (c_pad // C_BLOCK, v_pad // V_TILE)
+    counts = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((V_TILE,), lambda i, j: (j,)),
+            pl.BlockSpec((V_TILE,), lambda i, j: (j,)),
+            pl.BlockSpec((C_BLOCK,), lambda i, j: (i,)),
+            pl.BlockSpec((C_BLOCK,), lambda i, j: (i,)),
+            pl.BlockSpec((C_BLOCK,), lambda i, j: (i,)),
+            pl.BlockSpec((C_BLOCK,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((C_BLOCK,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c_pad,), jnp.int32),
+        interpret=interpret,
+    )(vh, vl, ch, cl, ph, pl_)
+    return counts[:c] == 0

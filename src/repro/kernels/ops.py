@@ -166,6 +166,34 @@ def sorted_search(keys, queries, side: str = "left", backend: Optional[str] = No
     raise ValueError(be)
 
 
+# -- frontier_dedup ---------------------------------------------------------------
+
+
+def frontier_dedup(
+    cand_hi, cand_lo, vis_hi, vis_lo, backend: Optional[str] = None
+) -> np.ndarray:
+    """Delta-frontier mask for one property-path BFS round: keep each
+    lexicographically sorted (source, node) candidate pair iff it is the
+    first occurrence in the batch and absent from the sorted visited set
+    (see vecops.frontier_dedup)."""
+    be = _backend(backend)
+    if be == "numpy":
+        return vecops.frontier_dedup(cand_hi, cand_lo, vis_hi, vis_lo)
+    cand_hi = np.asarray(cand_hi, dtype=np.int32)
+    cand_lo = np.asarray(cand_lo, dtype=np.int32)
+    vis_hi = np.asarray(vis_hi, dtype=np.int32)
+    vis_lo = np.asarray(vis_lo, dtype=np.int32)
+    if be == "jax":
+        from repro.kernels import ref
+
+        return np.asarray(ref.frontier_dedup(cand_hi, cand_lo, vis_hi, vis_lo))
+    if be == "pallas":
+        from repro.kernels.frontier_dedup import frontier_dedup_pallas
+
+        return np.asarray(frontier_dedup_pallas(cand_hi, cand_lo, vis_hi, vis_lo))
+    raise ValueError(be)
+
+
 # -- segment aggregation ---------------------------------------------------------------
 
 

@@ -139,6 +139,60 @@ def segment_totals(keys: jax.Array, values: jax.Array, op: str = "sum") -> Tuple
 
 
 # ---------------------------------------------------------------------------
+# frontier_dedup (property-path BFS rounds, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+_DEDUP_V_TILE = 2048
+
+
+@jax.jit
+def _frontier_dedup_tile(
+    vh: jax.Array, vl: jax.Array, ch: jax.Array, cl: jax.Array
+) -> jax.Array:
+    """Per-tile membership counts: equality-matrix reduction over one
+    (V_TILE,) visited tile — the same tiled idiom as the Pallas kernel."""
+    return jnp.sum(
+        ((vh[:, None] == ch[None, :]) & (vl[:, None] == cl[None, :])).astype(
+            jnp.int32
+        ),
+        axis=0,
+    )
+
+
+def frontier_dedup(
+    cand_hi: jax.Array,  # (C,) int32, lexicographically sorted with cand_lo
+    cand_lo: jax.Array,  # (C,) int32
+    vis_hi: jax.Array,  # (V,) int32, lexicographically sorted with vis_lo
+    vis_lo: jax.Array,  # (V,) int32
+) -> jax.Array:
+    """Mirror of vecops.frontier_dedup: adjacent-unique within the sorted
+    candidate batch, minus visited-set members. Pairs stay as two int32
+    columns (no int64 composite — x64 stays off); membership streams the
+    visited set through fixed-size tiles so peak memory is O(V_TILE * C),
+    not O(V * C)."""
+    c = int(cand_hi.shape[0])
+    v = int(vis_hi.shape[0])
+    first = jnp.ones((c,), dtype=bool)
+    if c > 1:
+        adj = (cand_hi[1:] != cand_hi[:-1]) | (cand_lo[1:] != cand_lo[:-1])
+        first = first.at[1:].set(adj)
+    if v and c:
+        counts = jnp.zeros((c,), dtype=jnp.int32)
+        pad = (-v) % _DEDUP_V_TILE
+        # candidates are non-negative codes; -1 padding never matches
+        vh = jnp.pad(vis_hi, (0, pad), constant_values=-1)
+        vl = jnp.pad(vis_lo, (0, pad), constant_values=-1)
+        for t in range(0, v, _DEDUP_V_TILE):
+            counts = counts + _frontier_dedup_tile(
+                vh[t : t + _DEDUP_V_TILE], vl[t : t + _DEDUP_V_TILE],
+                cand_hi, cand_lo,
+            )
+        first &= counts == 0
+    return first
+
+
+# ---------------------------------------------------------------------------
 # filter_eval
 # ---------------------------------------------------------------------------
 

@@ -1,5 +1,7 @@
-"""Roofline report generator: experiments/dryrun/*.json -> markdown tables
-for EXPERIMENTS.md §Dry-run / §Roofline."""
+"""Report generators: experiments/dryrun/*.json -> roofline markdown
+tables for EXPERIMENTS.md, and BENCH_PR*.json -> engine tables including
+the property-path frontier metrics (rounds, dedup ratio, pool traffic)
+emitted by the §8 subsystem (``--bench BENCH_PR2.json``)."""
 
 from __future__ import annotations
 
@@ -75,11 +77,58 @@ def summary(recs: List[Dict]) -> str:
     return "\n".join(lines)
 
 
+def _derived_dict(derived: str) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def path_metrics_table(bench_json: str) -> str:
+    """Markdown table of the property-path rows in a BENCH_PR*.json:
+    per-operator frontier rounds, dedup ratio and pool alloc/reuse traffic
+    next to the row-baseline speedup (DESIGN.md §8)."""
+    with open(bench_json) as f:
+        report = json.load(f)
+    rows = [
+        "| bench | ms/call | pairs | rounds | dedup ratio | pool alloc/reuse | speedup |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for suite in report.values():
+        for rec in suite:
+            if not str(rec.get("name", "")).startswith("path_"):
+                continue
+            d = _derived_dict(str(rec.get("derived", "")))
+            rows.append(
+                "| {name} | {ms:.1f} | {pairs} | {rounds} | {dedup} | {pool} | {sp} |".format(
+                    name=rec["name"],
+                    ms=float(rec["us_per_call"]) / 1e3,
+                    pairs=d.get("pairs", "—"),
+                    rounds=d.get("rounds", "—"),
+                    dedup=d.get("dedup_ratio", "—"),
+                    pool=(
+                        f"{d['pool_alloc']}/{d['pool_reuse']}"
+                        if "pool_alloc" in d
+                        else "—"
+                    ),
+                    sp=d.get("speedup_vs_row", "—"),
+                )
+            )
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--mesh", default="single")
+    ap.add_argument("--bench", default=None, metavar="BENCH_JSON",
+                    help="print the property-path metrics table instead")
     args = ap.parse_args()
+    if args.bench:
+        print(path_metrics_table(args.bench))
+        return
     recs = [r for r in load(args.out) if "__" not in (r.get("tag") or "")]
     print(summary(recs))
     print()

@@ -198,6 +198,58 @@ def test_radix_partition_sweep(backend, n_parts, n):
     np.testing.assert_array_equal(got_h, want_h)
 
 
+def _sorted_pairs(rng, n, hi_range, lo_range):
+    hi = rng.randint(0, hi_range, n).astype(np.int32)
+    lo = rng.randint(0, lo_range, n).astype(np.int32)
+    order = np.lexsort((lo, hi))
+    return hi[order], lo[order]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("c,v", [
+    (0, 0),
+    (1, 0),
+    (1, 1),
+    (100, 40),       # heavy duplication + visited overlap
+    (700, 2500),     # > one cand block and > one visited tile
+    (5000, 0),       # pure sort-unique (relation dedup path)
+])
+def test_frontier_dedup_sweep(backend, c, v):
+    rng = np.random.RandomState(c * 13 + v + 1)
+    ch, cl = _sorted_pairs(rng, c, 20, 20)
+    vh, vl = _sorted_pairs(rng, v, 20, 20)
+    if v:  # visited sets hold unique pairs
+        keep = vecops.frontier_dedup(vh, vl, vh[:0], vl[:0])
+        vh, vl = vh[keep], vl[keep]
+    want = vecops.frontier_dedup(ch, cl, vh, vl)
+    got = ops.frontier_dedup(ch, cl, vh, vl, backend=backend)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_frontier_dedup_property(data):
+    """Masked candidates == set difference of unique pairs vs visited, on
+    every backend."""
+    rng = np.random.RandomState(data.draw(st.integers(0, 10**6)))
+    c = data.draw(st.integers(0, 300))
+    v = data.draw(st.integers(0, 300))
+    ch, cl = _sorted_pairs(rng, c, 12, 12)
+    vh, vl = _sorted_pairs(rng, v, 12, 12)
+    if v:
+        keep = vecops.frontier_dedup(vh, vl, vh[:0], vl[:0])
+        vh, vl = vh[keep], vl[keep]
+    want_set = set(zip(ch.tolist(), cl.tolist())) - set(
+        zip(vh.tolist(), vl.tolist())
+    )
+    for backend in ("numpy",) + BACKENDS:
+        mask = ops.frontier_dedup(ch, cl, vh, vl, backend=backend)
+        got = set(zip(ch[mask].tolist(), cl[mask].tolist()))
+        assert got == want_set, backend
+        # first-occurrence semantics: masked rows are unique
+        assert len(got) == int(mask.sum()), backend
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.lists(st.integers(0, 30), min_size=1, max_size=300),
        st.sampled_from(["sum", "min", "max"]))

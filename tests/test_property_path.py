@@ -1,5 +1,5 @@
-"""Property paths (?x :p+ ?y): row-based operator bridged into batch plans
-via adapters — the paper's §4 unsupported-operator integration story."""
+"""Property paths (?x :p+ ?y): vectorized frontier engine under barq/mixed
+(DESIGN.md §8), row/set evaluation under the legacy engine."""
 
 import numpy as np
 import pytest
@@ -64,11 +64,19 @@ def test_path_joins_with_triple_pattern(chain_store, engine):
     assert got == _closure_oracle(EDGES), engine
 
 
-def test_path_appears_rowbased_in_profile(chain_store):
+def test_path_vectorized_in_barq_profile(chain_store):
     e = Engine(chain_store, EngineConfig(engine="barq"))
     r = e.execute("SELECT ?x ?y { ?x :next+ ?y }")
+    prof = r.profile()
+    assert "PathExpand" in prof  # vectorized subsystem, no row bridge
+    assert "RowToBatch" not in prof
+    assert "frontier_rounds" in prof and "dedup_ratio" in prof
+
+
+def test_path_rowbased_in_legacy_profile(chain_store):
+    e = Engine(chain_store, EngineConfig(engine="legacy"))
+    r = e.execute("SELECT ?x ?y { ?x :next+ ?y }")
     assert "PathScan" in r.profile()
-    assert "RowToBatch" in r.profile()  # the §4.2 adapter is in the plan
 
 
 def test_cycle_terminates(chain_store):
