@@ -12,14 +12,14 @@ import time
 import numpy as np
 
 from benchmarks.common import Suite
-from repro.core.algebra import And, Cmp, VarRef
+from repro.core.algebra import AggSpec, And, Arith, Cmp, Func, Lit, VarRef
 from repro.core.expressions import eval_expr_mask
+from repro.core.exprs import compile_expr, eval_program_mask
 from repro.core.legacy.operators import RowMergeJoin, RowSort
 from repro.core.operators.aggregate import StreamingGroupBy
 from repro.core.operators.merge_join import MergeJoin
 from repro.core.operators.sort import MaterializedSource
 from repro.core.dictionary import Dictionary
-from repro.core.algebra import AggSpec
 
 
 def _sorted_rel(rng, n, n_keys, extra_cols=1):
@@ -108,19 +108,58 @@ def bench_lookup_join(rng, n_probe=200000, n_build=50000, n_keys=20000, batch=40
     return _drain_timed(make)
 
 
-def bench_filter(rng, n=2_000_000):
+def _expr_workload(rng, n):
+    """The acceptance workload (ISSUE 3): conjunctive FILTER + arithmetic
+    + one string predicate over >= 100k rows. Codes 0..999 decode to their
+    own integer value; the string column draws from a small term set so
+    the dictionary-domain trick has real distinct-term reuse."""
     from repro.core.batch import ColumnBatch
 
     d = Dictionary()
     for v in range(1000):  # numeric terms so '>' hits the value side-array
         d.encode(int(v))
-    cols = [rng.randint(0, 1000, n).astype(np.int32) for _ in range(2)]
-    b = ColumnBatch.from_columns((0, 1), cols, capacity=n)
-    expr = And((Cmp("!=", VarRef(0), VarRef(1)), Cmp(">", VarRef(0), VarRef(1))))
-    t0 = time.perf_counter()
-    mask = eval_expr_mask(expr, b, d)
-    dt = time.perf_counter() - t0
-    return int(mask.sum()), dt
+    strs = ['"apple"', '"applesauce"', '"apricot"', '"banana"', '"cherry"',
+            '"grape"', '"peach"', '"pear"']
+    scodes = np.asarray([d.encode(s) for s in strs], np.int32)
+    a = rng.randint(0, 1000, n).astype(np.int32)
+    b = rng.randint(0, 1000, n).astype(np.int32)
+    s = scodes[rng.randint(0, len(scodes), n)]
+    batch = ColumnBatch.from_columns((0, 1, 2), [a, b, s], capacity=n)
+    expr = And((
+        Cmp(">", Arith("+", VarRef(0), VarRef(1)), Lit(900)),
+        Cmp("!=", VarRef(0), VarRef(1)),
+        Func("strstarts", (VarRef(2), Lit('"ap"'))),
+    ))
+    return d, batch, expr
+
+
+def bench_expression(rng, n=200_000, reps=3):
+    """Interpreted tree walk vs expression VM (numpy oracle / jnp ref /
+    fused Pallas kernel). Returns per-backend (n_selected, best_seconds);
+    all four masks are asserted identical row-for-row."""
+    d, batch, expr = _expr_workload(rng, n)
+    prog = compile_expr(expr, d, "mask")
+
+    def timed(fn, r):
+        out, best = None, float("inf")
+        for rep in range(r + 1):  # rep 0 = warmup (jit compile etc.)
+            t0 = time.perf_counter()
+            out = fn()
+            best = min(best, time.perf_counter() - t0) if rep else best
+        return out, best
+
+    results = {}
+    masks = {}
+    masks["tree_walk"], t = timed(lambda: eval_expr_mask(expr, batch, d), 1)
+    results["tree_walk"] = t
+    for be in ("numpy", "jax", "pallas"):
+        masks[be], t = timed(
+            lambda be=be: eval_program_mask(prog, batch, d, backend=be), reps
+        )
+        results[be] = t
+    for k, m in masks.items():  # exact row parity across every regime
+        np.testing.assert_array_equal(m, masks["numpy"], err_msg=k)
+    return int(masks["numpy"].sum()), results, len(prog.instrs)
 
 
 def _path_store(rng, n_edges, branch=2):
@@ -230,8 +269,20 @@ def run(seed: int = 0, fast: bool = False) -> str:
     suite.add("lookup_join_batch", dt_l * 1e6,
               f"tuples_out={out_l};Mtps={out_l / dt_l / 1e6:.1f}")
 
-    nsel, dtf = bench_filter(rng, n=400_000 if fast else 2_000_000)
-    suite.add("filter_vectorized_2M", dtf * 1e6, f"Mtps={2.0 / dtf:.0f}")
+    # expression VM suite (DESIGN.md §9): interpreted tree walk vs VM
+    # backends on the FILTER acceptance workload (arith + conjunction +
+    # dictionary-domain string predicate; exact parity asserted inside)
+    n_expr = 40_000 if fast else 200_000
+    nsel, expr_t, n_ops = bench_expression(rng, n=n_expr)
+    mrows = n_expr / 1e6
+    suite.add("expr_filter_tree_walk", expr_t["tree_walk"] * 1e6,
+              f"selected={nsel};Mtps={mrows / expr_t['tree_walk']:.2f}")
+    for be in ("numpy", "jax", "pallas"):
+        suite.add(
+            f"expr_filter_vm_{be}", expr_t[be] * 1e6,
+            f"selected={nsel};ops={n_ops};Mtps={mrows / expr_t[be]:.1f};"
+            f"speedup_vs_tree={expr_t['tree_walk'] / expr_t[be]:.1f}x",
+        )
 
     rows, dtg = bench_streaming_group(rng, n=200_000 if fast else 1_000_000,
                                       n_keys=10000 if fast else 50000)

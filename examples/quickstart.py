@@ -16,6 +16,10 @@ store.add(":Carol", ":worksAt", ":ACME")
 store.add(":Dave", ":worksAt", ":Initech")
 store.add(":Alice", ":age", 31)
 store.add(":Bob", ":age", 42)
+store.add(":Alice", ":name", '"Alice Liddell"')
+store.add(":Bob", ":name", '"Bob Cratchit"')
+store.add(":Carol", ":name", '"Carol Danvers"')
+store.add(":Dave", ":name", '"Dave Bowman"')
 store.build()
 
 # 2. the motivating-example query shape (Figure 1 of the paper)
@@ -69,3 +73,24 @@ for row in path_result.decoded(store.dict):
 # (rounds, peak frontier, dedup ratio) and the seed-side choice
 print("\npath profile:")
 print(path_result.profile())
+
+# 7. the expression VM (DESIGN.md §9): FILTER/BIND compile to bytecode
+# programs at plan time — string predicates evaluate once per distinct
+# dictionary term, three-valued logic is exact (COALESCE recovers the
+# rows where ?age is unbound instead of erroring them away).
+EXPR = """
+SELECT ?p ?name ?grp {
+  ?p :name ?name .
+  OPTIONAL { ?p :age ?age }
+  FILTER(REGEX(?name, "^[A-C]") && !CONTAINS(?name, "z"))
+  BIND(IF(COALESCE(?age, 0) >= 40, 1, 0) AS ?grp)
+}
+"""
+expr_result = engine.execute(EXPR)
+print("\nexpression VM (FILTER(REGEX) + BIND(IF/COALESCE)):")
+for row in expr_result.decoded(store.dict):
+    print("  ", row)
+# the profile's Filter[vm] line carries the program size and fused
+# dispatch count/time: expr_ops / expr_dispatches / expr_eval_ms
+print("\nexpression profile:")
+print(expr_result.profile())

@@ -95,7 +95,35 @@ class Bound:
     var: int
 
 
-Expr = Union[VarRef, Lit, Cmp, Arith, And, Or, Not, Bound]
+# SPARQL 1.1 builtin calls (FILTER/BIND function grammar). ``name`` is the
+# lower-cased function name; the supported surface is FUNC_ARITIES below.
+# String/term-classification predicates are evaluated in the *dictionary
+# domain* by the expression VM (once per distinct term, broadcast per row;
+# DESIGN.md §9) — Func keeps them first-class in the algebra so the planner
+# can compile them like any other expression node.
+@dataclasses.dataclass(frozen=True)
+class Func:
+    name: str  # 'if', 'coalesce', 'in', 'sameterm', 'isnumeric', ...
+    args: Tuple["Expr", ...]
+
+
+# name -> (min_args, max_args or None for variadic)
+FUNC_ARITIES = {
+    "if": (3, 3),
+    "coalesce": (1, None),
+    "in": (2, None),  # args[0] IN args[1:]
+    "sameterm": (2, 2),
+    "isnumeric": (1, 1),
+    "isiri": (1, 1),
+    "isliteral": (1, 1),
+    "strstarts": (2, 2),
+    "strends": (2, 2),
+    "contains": (2, 2),
+    "regex": (2, 3),
+}
+
+
+Expr = Union[VarRef, Lit, Cmp, Arith, And, Or, Not, Bound, Func]
 
 
 def expr_vars(e: Expr) -> Tuple[int, ...]:
@@ -112,13 +140,27 @@ def expr_vars(e: Expr) -> Tuple[int, ...]:
         return tuple(dict.fromkeys(out))
     if isinstance(e, Not):
         return expr_vars(e.term)
+    if isinstance(e, Func):
+        out = ()
+        for a in e.args:
+            out = out + expr_vars(a)
+        return tuple(dict.fromkeys(out))
     return ()
+
+
+# Func names whose evaluation never leaves the dictionary-code domain:
+# term tests run over the per-term table, IN/sameTerm compare codes.
+_CODE_FUNCS = frozenset(
+    ("in", "sameterm", "isnumeric", "isiri", "isliteral",
+     "strstarts", "strends", "contains", "regex")
+)
 
 
 def is_code_only(e: Expr) -> bool:
     """True if the expression can be evaluated purely over dictionary codes
-    (equality/inequality between vars or var-vs-constant) — the fast path the
-    paper highlights (§2.2.1: joins/hashing/sorting run over numbers)."""
+    (equality/inequality between vars or var-vs-constant, term tests and
+    dictionary-domain string predicates) — the fast path the paper
+    highlights (§2.2.1: joins/hashing/sorting run over numbers)."""
     if isinstance(e, Cmp) and e.op in ("=", "!="):
         ok_l = isinstance(e.lhs, (VarRef, Lit))
         ok_r = isinstance(e.rhs, (VarRef, Lit))
@@ -129,6 +171,8 @@ def is_code_only(e: Expr) -> bool:
         return is_code_only(e.term)
     if isinstance(e, Bound):
         return True
+    if isinstance(e, Func) and e.name in _CODE_FUNCS:
+        return all(isinstance(a, (VarRef, Lit)) for a in e.args)
     return False
 
 

@@ -39,13 +39,30 @@ from repro.core.operators.cross import CrossJoin
 from repro.core.operators.lookup_join import LookupJoin
 from repro.core.operators.merge_join import MergeJoin
 from repro.core.operators.scan import IndexScan
-from repro.core.operators.simple import ExtendOp, FilterOp, ProjectOp, SliceOp, UnionOp
+from repro.core.operators.simple import (
+    _UNSET as _UNSET_PROG,
+    ExtendOp,
+    FilterOp,
+    ProjectOp,
+    SliceOp,
+    UnionOp,
+)
 from repro.core.operators.sort import OrderByOp, SortByVarOp
 from repro.core.profiler import profile_tree
 from repro.core.stats import GraphStats
 from repro.core.storage import QuadStore
 
 AnyOp = Union[BatchOperator, LOP.RowOperator]
+
+
+def _planner_program(p):
+    """Planner program marker -> operator argument: None means the plan
+    never went through a dictionary-aware planner (operators try one lazy
+    compile); False means the planner already found the expression
+    uncompilable (operators use the tree walk, no retry)."""
+    if p is None:
+        return _UNSET_PROG
+    return p or None
 
 
 @dataclasses.dataclass
@@ -146,6 +163,7 @@ class Translator:
                 spill_dir=self.cfg.spill_dir,
                 allow_child_skip=self.cfg.allow_child_skip,
                 pool=self.pool,
+                post_program=n.post_program,
             )
         if isinstance(n, PL.PLookupJoin):
             probe = self._to_batch(self._build(n.probe))
@@ -159,12 +177,14 @@ class Translator:
             )
         if isinstance(n, PL.PFilter):
             return FilterOp(
-                self._to_batch(self._build(n.child)), n.expr, self.store.dict
+                self._to_batch(self._build(n.child)), n.expr, self.store.dict,
+                program=_planner_program(n.program),
             )
         if isinstance(n, PL.PExtend):
             return ExtendOp(
                 self._to_batch(self._build(n.child)), n.var, n.expr,
                 self.store.dict, pool=self.pool,
+                program=_planner_program(n.program),
             )
         if isinstance(n, PL.PProject):
             child = self._build(n.child)
@@ -422,7 +442,11 @@ class Engine:
         self.store = store
         self.cfg = cfg or EngineConfig()
         self.stats = GraphStats(store)
-        self.planner = PL.Planner(self.stats, barq_enabled=self.cfg.engine != "legacy")
+        self.planner = PL.Planner(
+            self.stats,
+            barq_enabled=self.cfg.engine != "legacy",
+            dictionary=store.dict,
+        )
 
     def parse(self, text: str) -> Tuple[A.PlanNode, A.VarTable]:
         from repro.core.parser import parse_query

@@ -1,11 +1,21 @@
-"""Vectorized SPARQL expression evaluation over columnar batches.
+"""Interpreted per-node expression evaluation over columnar batches.
 
-Two evaluation regimes (paper §2.2.1): code-only expressions (equality /
-inequality between variables or against constants) run directly on the
-int32 dictionary codes; value expressions (<, <=, arithmetic) decode
-operands through the dictionary's float64 numeric side-array with one
-vectorized take. Rows whose operands are non-numeric or NULL evaluate to
-an 'error' (SPARQL semantics) and are excluded by FILTER.
+This is the legacy tree walk: each algebra node evaluates recursively with
+numpy per node (strings per *row*) — the baseline the vectorized
+expression VM (core/exprs/, DESIGN.md §9) is measured against, and the
+expression engine of the row-based executor. Two evaluation regimes
+(paper §2.2.1): code-only expressions (equality / inequality between
+variables or against constants) run directly on the int32 dictionary
+codes; value expressions (<, <=, arithmetic) decode operands through the
+dictionary's float64 numeric side-array with one vectorized take.
+
+Three-valued SPARQL semantics are exact and must match the VM bit for bit
+(tests/test_exprs.py pins parity): every boolean node evaluates to
+(value, error) pairs. Historical bugs fixed with the error channel:
+``NOT(error)`` previously complemented (it must stay error) and
+``true || error`` previously produced error (a definite true dominates).
+Builtin calls (algebra.Func) share their per-term semantics with the VM
+through core/exprs/terms.
 """
 
 from __future__ import annotations
@@ -14,9 +24,12 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.algebra import And, Arith, Bound, Cmp, Expr, Lit, Not, Or, VarRef
+from repro.core.algebra import (
+    And, Arith, Bound, Cmp, Expr, Func, Lit, Not, Or, VarRef,
+)
 from repro.core.batch import NULL_ID, ColumnBatch
 from repro.core.dictionary import Dictionary, _numeric_value
+from repro.core.exprs import terms as T
 
 _CMP = {
     "=": np.equal,
@@ -28,6 +41,8 @@ _CMP = {
 }
 _ARITH = {"+": np.add, "-": np.subtract, "*": np.multiply, "/": np.divide}
 
+BoolErr = Tuple[np.ndarray, np.ndarray]  # (value bool, error bool) per row
+
 
 def _codes(e: Expr, batch: ColumnBatch, d: Optional[Dictionary]) -> Optional[np.ndarray]:
     """int32 codes for a leaf, or None if not a code-addressable leaf."""
@@ -38,12 +53,15 @@ def _codes(e: Expr, batch: ColumnBatch, d: Optional[Dictionary]) -> Optional[np.
             raise ValueError("dictionary required for constant in expression")
         tid = d.lookup(e.value)
         n = batch.n_rows
-        return np.full(n, NULL_ID if tid is None else tid, dtype=np.int32)
+        # a term absent from the dictionary is a real term that matches no
+        # row: use a fresh sentinel code (== len(d)), NOT the NULL id —
+        # 'bound but unequal' is false, never an error
+        return np.full(n, len(d) if tid is None else tid, dtype=np.int32)
     return None
 
 
 def _numeric(e: Expr, batch: ColumnBatch, d: Optional[Dictionary]) -> Tuple[np.ndarray, np.ndarray]:
-    """(values float64, valid bool) for an arithmetic/value expression."""
+    """(values float64, valid bool) for a value-context expression."""
     n = batch.n_rows
     if isinstance(e, VarRef):
         codes = batch.column(e.var)
@@ -52,7 +70,7 @@ def _numeric(e: Expr, batch: ColumnBatch, d: Optional[Dictionary]) -> Tuple[np.n
         return vals, ~np.isnan(vals)
     if isinstance(e, Lit):
         v = _numeric_value(e.value)
-        return np.full(n, v), np.full(n, not np.isnan(v), dtype=bool)
+        return np.full(n, v), np.full(n, np.isfinite(v), dtype=bool)
     if isinstance(e, Arith):
         lv, lok = _numeric(e.lhs, batch, d)
         rv, rok = _numeric(e.rhs, batch, d)
@@ -60,54 +78,162 @@ def _numeric(e: Expr, batch: ColumnBatch, d: Optional[Dictionary]) -> Tuple[np.n
             out = _ARITH[e.op](lv, rv)
         ok = lok & rok & np.isfinite(out)
         return out, ok
-    raise TypeError(f"not a value expression: {type(e)}")
+    if isinstance(e, Func) and e.name == "if":
+        cv, cerr = _eval(e.args[0], batch, d)
+        tv, tok = _numeric(e.args[1], batch, d)
+        fv, fok = _numeric(e.args[2], batch, d)
+        vals = np.where(cv, tv, fv)
+        ok = ~cerr & np.where(cv, tok, fok)
+        return vals, ok
+    if isinstance(e, Func) and e.name == "coalesce":
+        vals, ok = _numeric(e.args[0], batch, d)
+        for arg in e.args[1:]:
+            av, aok = _numeric(arg, batch, d)
+            vals = np.where(ok, vals, av)
+            ok = ok | aok
+        return vals, ok
+    # boolean-shaped node in value context (BIND(?a > ?b AS ?x)): 0/1
+    v, err = _eval(e, batch, d)
+    return v.astype(np.float64), ~err
 
 
 def eval_expr_mask(
     e: Expr, batch: ColumnBatch, d: Optional[Dictionary] = None
 ) -> np.ndarray:
     """Boolean mask over the batch capacity: True where the expression is
-    true (SPARQL 'error' rows are False). ANDed with the batch mask by the
-    caller (selection-vector update, paper §3.1)."""
+    (three-valued) true — 'error' rows are excluded. ANDed with the batch
+    mask by the caller (selection-vector update, paper §3.1)."""
     n = batch.n_rows
     m = np.zeros(batch.capacity, dtype=bool)
-    m[:n] = _eval(e, batch, d)
+    v, err = _eval(e, batch, d)
+    m[:n] = v & ~err
     return m
 
 
-def _eval(e: Expr, batch: ColumnBatch, d: Optional[Dictionary]) -> np.ndarray:
+def _tri_rows(
+    name: str, args: Tuple, e: Expr, batch: ColumnBatch, d: Optional[Dictionary]
+) -> BoolErr:
+    """Per-row trinary term test — the interpreted (per-row decode)
+    counterpart of the VM's dictionary-domain tables."""
+    assert d is not None, "dictionary required for term predicates"
+    fn = T.term_predicate(name, args)
+    if isinstance(e, Lit):  # constant subject: one term, not a column
+        tri = fn(e.value)
+        full = np.full(batch.n_rows, True)
+        return full & (tri == T.TRUE), full & (tri == T.ERROR)
+    codes = _codes(e, batch, d)
+    if codes is None:
+        raise TypeError(f"{name} subject must be a term (variable/constant)")
+    n_terms = len(d)
+    tri = np.fromiter(
+        (
+            T.ERROR if c < 0 else (T.FALSE if c >= n_terms else fn(d.decode(int(c))))
+            for c in codes
+        ),
+        dtype=np.int32,
+        count=len(codes),
+    )
+    return tri == T.TRUE, tri == T.ERROR
+
+
+def _eval(e: Expr, batch: ColumnBatch, d: Optional[Dictionary]) -> BoolErr:
+    """Boolean-context evaluation: (value, error) row pairs."""
     n = batch.n_rows
     if isinstance(e, And):
-        out = np.ones(n, dtype=bool)
+        # Kleene: a row errs iff some term errs and no term is definitely
+        # false (false && error == false)
+        v = np.ones(n, dtype=bool)
+        any_err = np.zeros(n, dtype=bool)
+        any_false = np.zeros(n, dtype=bool)
         for t in e.terms:
-            out &= _eval(t, batch, d)
-        return out
+            tv, terr = _eval(t, batch, d)
+            any_err |= terr
+            any_false |= ~tv & ~terr
+            v &= tv & ~terr
+        return v, any_err & ~any_false
     if isinstance(e, Or):
-        out = np.zeros(n, dtype=bool)
+        any_true = np.zeros(n, dtype=bool)
+        any_err = np.zeros(n, dtype=bool)
         for t in e.terms:
-            out |= _eval(t, batch, d)
-        return out
+            tv, terr = _eval(t, batch, d)
+            any_true |= tv & ~terr
+            any_err |= terr
+        # a definite true dominates error (true || error == true)
+        return any_true, any_err & ~any_true
     if isinstance(e, Not):
-        # NOT(error) is error -> False either way for filtering purposes of
-        # pure boolean terms; we approximate by complementing
-        return ~_eval(e.term, batch, d)
+        v, err = _eval(e.term, batch, d)
+        # NOT(error) stays error
+        return ~v & ~err, err
     if isinstance(e, Bound):
-        return batch.column(e.var) != NULL_ID
+        return batch.column(e.var) != NULL_ID, np.zeros(n, dtype=bool)
     if isinstance(e, Cmp):
         if e.op in ("=", "!="):
+            if isinstance(e.lhs, Lit) and isinstance(e.rhs, Lit):
+                # term identity folds directly — dictionary-absent terms
+                # must not collide through the shared sentinel code
+                v = (e.lhs.value == e.rhs.value) == (e.op == "=")
+                return np.full(n, v), np.zeros(n, dtype=bool)
             lc = _codes(e.lhs, batch, d)
             rc = _codes(e.rhs, batch, d)
             if lc is not None and rc is not None:
-                ok = (lc != NULL_ID) & (rc != NULL_ID)
-                return _CMP[e.op](lc, rc) & ok
+                err = (lc == NULL_ID) | (rc == NULL_ID)
+                return _CMP[e.op](lc, rc) & ~err, err
         lv, lok = _numeric(e.lhs, batch, d)
         rv, rok = _numeric(e.rhs, batch, d)
-        return _CMP[e.op](lv, rv) & lok & rok
+        ok = lok & rok
+        return _CMP[e.op](lv, rv) & ok, ~ok
+    if isinstance(e, Func):
+        return _eval_func(e, batch, d)
     if isinstance(e, (VarRef, Lit)):
-        # effective boolean value of a term: non-null / non-zero
-        c = _codes(e, batch, d)
-        return c != NULL_ID
+        # effective boolean value of a term (SPARQL 17.2.2): numbers by
+        # value, strings by emptiness, IRIs / unbound are type errors
+        return _tri_rows("ebv", (), e, batch, d)
+    if isinstance(e, Arith):
+        v, ok = _numeric(e, batch, d)
+        return (v != 0) & ok, ~ok
     raise TypeError(f"unsupported expression node {type(e)}")
+
+
+def _eval_func(e: Func, batch: ColumnBatch, d: Optional[Dictionary]) -> BoolErr:
+    n = batch.n_rows
+    name = e.name
+    if name == "if":
+        cv, cerr = _eval(e.args[0], batch, d)
+        tv, terr = _eval(e.args[1], batch, d)
+        fv, ferr = _eval(e.args[2], batch, d)
+        v = np.where(cv, tv, fv)
+        err = cerr | np.where(cv, terr, ferr)
+        return v & ~err, err
+    if name == "coalesce":
+        v, err = _eval(e.args[0], batch, d)
+        for arg in e.args[1:]:
+            av, aerr = _eval(arg, batch, d)
+            v = np.where(err, av, v)
+            err = err & aerr
+        return v & ~err, err
+    if name == "in":
+        # expr IN (list) == chained || of equalities (Kleene error rules)
+        any_true = np.zeros(n, dtype=bool)
+        any_err = np.zeros(n, dtype=bool)
+        for item in e.args[1:]:
+            iv, ierr = _eval(Cmp("=", e.args[0], item), batch, d)
+            any_true |= iv & ~ierr
+            any_err |= ierr
+        return any_true, any_err & ~any_true
+    if name == "sameterm":
+        if isinstance(e.args[0], Lit) and isinstance(e.args[1], Lit):
+            v = e.args[0].value == e.args[1].value
+            return np.full(n, v), np.zeros(n, dtype=bool)
+        lc = _codes(e.args[0], batch, d)
+        rc = _codes(e.args[1], batch, d)
+        if lc is None or rc is None:
+            raise TypeError("sameTerm arguments must be terms")
+        err = (lc == NULL_ID) | (rc == NULL_ID)
+        return (lc == rc) & ~err, err
+    for a in e.args[1:]:
+        if not isinstance(a, Lit):
+            raise TypeError(f"{name} pattern arguments must be constants")
+    return _tri_rows(name, tuple(a.value for a in e.args[1:]), e.args[0], batch, d)
 
 
 def eval_expr_values(

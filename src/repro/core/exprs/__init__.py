@@ -1,0 +1,31 @@
+"""Vectorized expression subsystem (DESIGN.md §9).
+
+``compile_expr`` lowers an algebra.Expr tree to a flat register-based
+bytecode program (constant folding, CSE, code/value operand split);
+``eval_program_mask`` / ``eval_program_values`` execute it over a
+ColumnBatch with exact three-valued SPARQL semantics on the numpy oracle,
+the jit'd jnp reference, or the fused ``expr_eval`` Pallas kernel.
+"""
+
+from repro.core.exprs.bytecode import ExprProgram, TableSpec, disassemble
+from repro.core.exprs.compiler import ExprCompileError, compile_expr
+from repro.core.exprs.vm import (
+    ProgramTimer,
+    eval_program_mask,
+    eval_program_values,
+    prepare_inputs,
+    run_program,
+)
+
+__all__ = [
+    "ExprProgram",
+    "TableSpec",
+    "ExprCompileError",
+    "ProgramTimer",
+    "compile_expr",
+    "disassemble",
+    "eval_program_mask",
+    "eval_program_values",
+    "prepare_inputs",
+    "run_program",
+]

@@ -1,0 +1,255 @@
+"""Expression VM executor (DESIGN.md §9.3).
+
+``_interp`` is the single semantic definition of the bytecode — a
+straight-line pass over the instruction tuple, parameterized on the array
+namespace. All three backends run it:
+
+  * numpy  — the float64 oracle (this module), the engine's default;
+  * jax    — repro.kernels.ref.expr_eval, the jit'd float32 reference;
+  * pallas — repro.kernels.expr_eval, the fused TPU kernel: the *whole
+    program* unrolls at trace time into one kernel body, so a batch costs
+    one dispatch regardless of expression size (the paper's 'compile hot
+    expressions' future-work note, realized as kernel specialization).
+
+Host-side preparation stays O(columns + distinct terms): code columns are
+raw int32 views, value columns decode through the numeric side-array with
+one take, and term predicates (string tests, EBV, classification) evaluate
+once per *dictionary entry* into a cached trinary table that is broadcast
+per batch with another take — the hot loop never touches a string.
+
+Backend note (DESIGN.md §2): the jnp/Pallas value plane is float32 (x64
+stays off on TPU). Parity with the float64 oracle is exact whenever row
+values are exactly representable in float32 — dictionary codes always are;
+benchmarks and parity sweeps generate such values.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.batch import ColumnBatch
+from repro.core.dictionary import Dictionary
+from repro.core.exprs import bytecode as B
+from repro.core.exprs import terms as T
+
+# ---------------------------------------------------------------------------
+# dictionary-domain predicate tables
+# ---------------------------------------------------------------------------
+
+# tables live ON the dictionary (spec -> trinary int32 array), so their
+# lifetime tracks the dictionary's and append-only growth extends a
+# cached table incrementally as new terms are encoded
+def predicate_table(d: Dictionary, spec: B.TableSpec) -> np.ndarray:
+    cache: Dict[B.TableSpec, np.ndarray] = d.__dict__.setdefault(
+        "_pred_tables", {}
+    )
+    table = cache.get(spec)
+    n = len(d)
+    if table is None or len(table) < n:
+        fn = T.term_predicate(spec.func, spec.args)
+        lo = 0 if table is None else len(table)
+        ext = np.fromiter(
+            (fn(d.decode(i)) for i in range(lo, n)), dtype=np.int32, count=n - lo
+        )
+        table = ext if table is None else np.concatenate([table, ext])
+        cache[spec] = table
+    return table
+
+
+# ---------------------------------------------------------------------------
+# input preparation (one take per referenced column; paper §2.2.1)
+# ---------------------------------------------------------------------------
+
+
+def prepare_inputs(
+    prog: B.ExprProgram, batch: ColumnBatch, d: Optional[Dictionary]
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(icols int32 (KI, n), fcols float64 (KF, n)) for a batch. Rows are
+    the *physically filled* prefix (inactive rows produce garbage that the
+    caller's mask-AND discards, same as every vectorized operator)."""
+    n = batch.n_rows
+    ki = max(prog.n_icols, 1)
+    kf = max(prog.n_fcols, 1)
+    icols = np.zeros((ki, n), dtype=np.int32)
+    for i, var in enumerate(prog.code_vars):
+        icols[i] = batch.column(var)
+    for j, spec in enumerate(prog.tables):
+        assert d is not None, "dictionary required for term predicates"
+        table = predicate_table(d, spec)
+        codes = batch.column(spec.var)
+        # NULL codes take slot 0; TEST reads the code column for the error
+        row = table[np.where(codes >= 0, codes, 0)] if len(table) else codes * 0
+        icols[len(prog.code_vars) + j] = row
+    fcols = np.full((kf, n), np.nan)
+    for i, var in enumerate(prog.num_vars):
+        assert d is not None, "dictionary required for value expressions"
+        fcols[i] = d.numeric_of(batch.column(var))
+    return icols, fcols
+
+
+# ---------------------------------------------------------------------------
+# the interpreter (shared by all three backends)
+# ---------------------------------------------------------------------------
+
+
+def _interp(xp, prog: B.ExprProgram, icols, fcols, dtype):
+    """Evaluate ``prog`` over an input block. ``xp`` is numpy or
+    jax.numpy; under jit / Pallas the python loop unrolls at trace time —
+    the program IS the kernel. Returns (value, err) for the output
+    register."""
+    vals = [None] * prog.n_regs
+    errs = [None] * prog.n_regs
+    n = icols.shape[1]
+    no_err = xp.zeros((n,), dtype=bool)
+    null = icols == -1 if prog.n_icols else None
+
+    def truthy(r):
+        return vals[r] != 0
+
+    for op, dst, a, b, c in prog.instrs:
+        if op == B.LOAD_NUM:
+            v = fcols[a].astype(dtype)
+            vals[dst], errs[dst] = v, xp.isnan(fcols[a])
+        elif op == B.LOAD_CONST:
+            k = prog.consts[a]
+            vals[dst] = xp.full((n,), k, dtype=dtype)
+            vals[dst] = xp.where(xp.isfinite(vals[dst]), vals[dst], 0)
+            errs[dst] = xp.full((n,), not np.isfinite(k), dtype=bool)
+        elif op == B.BOUND:
+            vals[dst] = (~null[a]).astype(dtype)
+            errs[dst] = no_err
+        elif op in (B.EQ_CODE, B.NE_CODE):
+            eq = icols[a] == icols[b]
+            vals[dst] = (eq if op == B.EQ_CODE else ~eq).astype(dtype)
+            errs[dst] = null[a] | null[b]
+        elif op in (B.EQ_CONST, B.NE_CONST):
+            eq = icols[a] == b
+            vals[dst] = (eq if op == B.EQ_CONST else ~eq).astype(dtype)
+            errs[dst] = null[a]
+        elif op == B.TEST:
+            tri = icols[a]
+            vals[dst] = (tri == T.TRUE).astype(dtype)
+            errs[dst] = (tri == T.ERROR) | null[b]
+        elif op in B.ARITH_OPS:
+            x, y = vals[a], vals[b]
+            if xp is np:
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    v = _ARITH_FN[op](xp, x, y)
+            else:
+                v = _ARITH_FN[op](xp, x, y)
+            fin = xp.isfinite(v)
+            vals[dst] = xp.where(fin, v, 0)
+            errs[dst] = errs[a] | errs[b] | ~fin
+        elif op in B.CMP_OPS:
+            vals[dst] = _CMP_FN[op](vals[a], vals[b]).astype(dtype)
+            errs[dst] = errs[a] | errs[b]
+        elif op == B.NOT:
+            vals[dst] = (~truthy(a)).astype(dtype)
+            errs[dst] = errs[a]
+        elif op == B.AND:
+            # Kleene: a definite false dominates the other side's error
+            fa = ~truthy(a) & ~errs[a]
+            fb = ~truthy(b) & ~errs[b]
+            vals[dst] = (truthy(a) & truthy(b) & ~errs[a] & ~errs[b]).astype(dtype)
+            errs[dst] = (errs[a] | errs[b]) & ~fa & ~fb
+        elif op == B.OR:
+            # Kleene: a definite true dominates the other side's error
+            ta = truthy(a) & ~errs[a]
+            tb = truthy(b) & ~errs[b]
+            vals[dst] = (ta | tb).astype(dtype)
+            errs[dst] = (errs[a] | errs[b]) & ~ta & ~tb
+        elif op == B.IF:
+            take_t = truthy(a)
+            vals[dst] = xp.where(take_t, vals[b], vals[c])
+            errs[dst] = errs[a] | xp.where(take_t, errs[b], errs[c])
+        elif op == B.COALESCE:
+            vals[dst] = xp.where(errs[a], vals[b], vals[a])
+            errs[dst] = errs[a] & errs[b]
+        else:  # pragma: no cover - opcode set is closed
+            raise ValueError(f"bad opcode {op}")
+    return vals[prog.out_reg], errs[prog.out_reg]
+
+
+_ARITH_FN = {
+    B.ADD: lambda xp, x, y: x + y,
+    B.SUB: lambda xp, x, y: x - y,
+    B.MUL: lambda xp, x, y: x * y,
+    B.DIV: lambda xp, x, y: x / y,
+}
+_CMP_FN = {
+    B.LT: lambda x, y: x < y,
+    B.LE: lambda x, y: x <= y,
+    B.GT: lambda x, y: x > y,
+    B.GE: lambda x, y: x >= y,
+    B.EQ_NUM: lambda x, y: x == y,
+    B.NE_NUM: lambda x, y: x != y,
+}
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def run_program(
+    prog: B.ExprProgram,
+    icols: np.ndarray,
+    fcols: np.ndarray,
+    backend: Optional[str] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(value, err) over an input block, dispatched like every other
+    kernel (numpy / jax / pallas via kernels.ops)."""
+    from repro.kernels import ops as KOPS
+
+    return KOPS.expr_eval(prog, icols, fcols, backend=backend)
+
+
+def eval_program_mask(
+    prog: B.ExprProgram,
+    batch: ColumnBatch,
+    d: Optional[Dictionary] = None,
+    backend: Optional[str] = None,
+) -> np.ndarray:
+    """FILTER semantics: capacity-sized bool mask, True where the program
+    evaluates to (three-valued) true — error rows are excluded. Drop-in
+    for expressions.eval_expr_mask."""
+    icols, fcols = prepare_inputs(prog, batch, d)
+    val, err = run_program(prog, icols, fcols, backend)
+    m = np.zeros(batch.capacity, dtype=bool)
+    m[: batch.n_rows] = (np.asarray(val) != 0) & ~np.asarray(err)
+    return m
+
+
+def eval_program_values(
+    prog: B.ExprProgram,
+    batch: ColumnBatch,
+    d: Dictionary,
+    backend: Optional[str] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """BIND semantics: (float64 values, valid) over the filled prefix —
+    drop-in for expressions.eval_expr_values (valid == not error)."""
+    icols, fcols = prepare_inputs(prog, batch, d)
+    val, err = run_program(prog, icols, fcols, backend)
+    return np.asarray(val, dtype=np.float64), ~np.asarray(err)
+
+
+class ProgramTimer:
+    """Tiny accumulator the operators feed the profiler from: per-program
+    fused-dispatch count and cumulative evaluation wall time."""
+
+    __slots__ = ("dispatches", "wall_s", "_t0")
+
+    def __init__(self) -> None:
+        self.dispatches = 0
+        self.wall_s = 0.0
+
+    def __enter__(self) -> "ProgramTimer":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.dispatches += 1
+        self.wall_s += time.perf_counter() - self._t0

@@ -40,6 +40,7 @@ from repro.core import vecops
 from repro.core.adaptive import AdaptiveBatchSizer
 from repro.core.batch import NULL_ID, BatchPool, ColumnBatch, bucket_for
 from repro.core.expressions import eval_expr_mask
+from repro.core.exprs import eval_program_mask
 from repro.core.operators.base import BatchOperator
 from repro.kernels import ops as KOPS
 
@@ -211,6 +212,7 @@ class MergeJoin(BatchOperator):
         spill_dir: Optional[str] = None,
         allow_child_skip: bool = True,
         pool: Optional[BatchPool] = None,
+        post_program=None,  # compiled ExprProgram for post_filter (planner)
     ) -> None:
         assert mode in ("inner", "left_outer", "semi", "anti")
         assert left.sorted_by() == join_var, "left child must be sorted by join var"
@@ -221,6 +223,13 @@ class MergeJoin(BatchOperator):
         self.mode = mode
         self.post_filter = post_filter
         self.dictionary = dictionary
+        if post_program is False:  # planner: known uncompilable, no retry
+            post_program = None
+        elif post_program is None and post_filter is not None and dictionary is not None:
+            from repro.core.operators.simple import _resolve_program
+
+            post_program = _resolve_program(post_filter, dictionary, None, "mask")
+        self.post_program = post_program
         self.sizer = sizer or AdaptiveBatchSizer(initial=256)
         self.allow_child_skip = allow_child_skip
         self.pool = pool
@@ -477,7 +486,14 @@ class MergeJoin(BatchOperator):
         if self.pool is not None:
             self.pool.bytes_copied += len(self._out_vars) * count * 4
         if self.post_filter is not None:
-            b = b.with_mask(eval_expr_mask(self.post_filter, b, self.dictionary))
+            # OPTIONAL {...} FILTER condition: fused VM program when the
+            # planner compiled one, interpreted walk otherwise
+            if self.post_program is not None:
+                b = b.with_mask(
+                    eval_program_mask(self.post_program, b, self.dictionary)
+                )
+            else:
+                b = b.with_mask(eval_expr_mask(self.post_filter, b, self.dictionary))
 
         if self._needs_expansion_for_match:
             surv = b.mask[:count]

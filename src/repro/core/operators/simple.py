@@ -16,15 +16,56 @@ from repro.core.algebra import Expr
 from repro.core.batch import NULL_ID, BatchPool, ColumnBatch, concat_batches
 from repro.core.dictionary import Dictionary
 from repro.core.expressions import eval_expr_mask, eval_expr_values
+from repro.core.exprs import (
+    ExprCompileError,
+    ProgramTimer,
+    compile_expr,
+    eval_program_mask,
+    eval_program_values,
+)
 from repro.core.operators.base import BatchOperator
+
+_UNSET = object()
+
+
+def _resolve_program(expr: Expr, dictionary: Optional[Dictionary],
+                     program, mode: str):
+    """Program handed down by the planner, or a lazy compile for
+    hand-built operator trees; None -> interpreted tree-walk fallback."""
+    if program is not None:
+        return program
+    if dictionary is None:
+        return None
+    try:
+        return compile_expr(expr, dictionary, mode)
+    except ExprCompileError:
+        return None
 
 
 class FilterOp(BatchOperator):
-    def __init__(self, child: BatchOperator, expr: Expr, dictionary: Optional[Dictionary]):
+    """FILTER through the expression VM: one fused program evaluation per
+    batch updates the mask in place. Per-program op counts and dispatch
+    timings surface through OpStats.extra (profiler / collect_stats)."""
+
+    def __init__(
+        self,
+        child: BatchOperator,
+        expr: Expr,
+        dictionary: Optional[Dictionary],
+        program=_UNSET,
+    ):
         self.child = child
         self.expr = expr
         self.dictionary = dictionary
-        super().__init__("Filter", "")
+        self.program = (
+            _resolve_program(expr, dictionary, None, "mask")
+            if program is _UNSET
+            else program
+        )
+        self._timer = ProgramTimer()
+        super().__init__("Filter", "" if self.program is None else "[vm]")
+        if self.program is not None:
+            self.stats.extra["expr_ops"] = len(self.program.instrs)
 
     def var_ids(self) -> Tuple[int, ...]:
         return self.child.var_ids()
@@ -35,12 +76,21 @@ class FilterOp(BatchOperator):
     def children(self) -> List[BatchOperator]:
         return [self.child]
 
+    def _mask(self, b: ColumnBatch) -> np.ndarray:
+        if self.program is None:
+            return eval_expr_mask(self.expr, b, self.dictionary)
+        with self._timer:
+            m = eval_program_mask(self.program, b, self.dictionary)
+        self.stats.extra["expr_dispatches"] = self._timer.dispatches
+        self.stats.extra["expr_eval_ms"] = round(self._timer.wall_s * 1e3, 3)
+        return m
+
     def _next(self) -> Optional[ColumnBatch]:
         while True:
             b = self.child.next_batch()
             if b is None:
                 return None
-            b = b.with_mask(eval_expr_mask(self.expr, b, self.dictionary))
+            b = b.with_mask(self._mask(b))
             if b.n_active:
                 return b
             b.release()  # all rows inactive: recycle batch, keep pulling
@@ -110,13 +160,22 @@ class ExtendOp(BatchOperator):
         expr: Expr,
         dictionary: Dictionary,
         pool: Optional[BatchPool] = None,
+        program=_UNSET,
     ):
         self.child = child
         self.var = var
         self.expr = expr
         self.dictionary = dictionary
         self.pool = pool
-        super().__init__("Bind", f"?v{var}")
+        self.program = (
+            _resolve_program(expr, dictionary, None, "value")
+            if program is _UNSET
+            else program
+        )
+        self._timer = ProgramTimer()
+        super().__init__("Bind", f"?v{var}" + ("" if self.program is None else " [vm]"))
+        if self.program is not None:
+            self.stats.extra["expr_ops"] = len(self.program.instrs)
 
     def var_ids(self) -> Tuple[int, ...]:
         return self.child.var_ids() + (self.var,)
@@ -131,7 +190,13 @@ class ExtendOp(BatchOperator):
         b = self.child.next_batch()
         if b is None:
             return None
-        vals, ok = eval_expr_values(self.expr, b, self.dictionary)
+        if self.program is None:
+            vals, ok = eval_expr_values(self.expr, b, self.dictionary)
+        else:
+            with self._timer:
+                vals, ok = eval_program_values(self.program, b, self.dictionary)
+            self.stats.extra["expr_dispatches"] = self._timer.dispatches
+            self.stats.extra["expr_eval_ms"] = round(self._timer.wall_s * 1e3, 3)
         codes = np.full(b.capacity, NULL_ID, dtype=np.int32)
         n = b.n_rows
         # encode the few distinct computed values, map back vectorized

@@ -36,6 +36,9 @@ _KEYWORDS = {
     "select", "distinct", "where", "filter", "optional", "minus", "union",
     "bind", "as", "group", "by", "order", "asc", "desc", "limit", "offset",
     "count", "sum", "min", "max", "avg", "a", "bound", "having", "not", "exists",
+    # builtin calls (algebra.Func; evaluated by the expression VM, §9)
+    "if", "coalesce", "in", "sameterm", "isnumeric", "isiri", "isliteral",
+    "strstarts", "strends", "contains", "regex",
 }
 
 
@@ -144,25 +147,40 @@ class Parser:
         body = self._group_graph_pattern()
 
         group_vars: List[int] = []
+        group_binds: List[Tuple[int, A.Expr]] = []
         if self.accept_kw("group"):
             self.expect_kw("by")
-            while self.peek().kind == "VAR":
-                group_vars.append(self.vt.var(self.next().value))
+            while True:
+                if self.peek().kind == "VAR":
+                    group_vars.append(self.vt.var(self.next().value))
+                elif self.peek().kind == "OP" and self.peek().value == "(":
+                    # GROUP BY (expr AS ?v): desugars to BIND + var key, so
+                    # the grouping key runs through the expression VM
+                    self.next()
+                    e = self._expr()
+                    self.expect_kw("as")
+                    v = self.vt.var(self.next().value)
+                    self.expect_op(")")
+                    group_binds.append((v, e))
+                    group_vars.append(v)
+                else:
+                    break
 
-        order_keys: List[A.SortKey] = []
+        # ORDER BY keys are full expressions (ASC/DESC(expr) or a bare
+        # var); expression keys desugar to a BIND below
+        order_specs: List[Tuple[A.Expr, bool]] = []
         if self.accept_kw("order"):
             self.expect_kw("by")
             while True:
-                if self.accept_kw("asc"):
+                if self.accept_kw("asc") or self.accept_kw("desc"):
+                    asc = self.toks[self.i - 1].value.lower() == "asc"
                     self.expect_op("(")
-                    order_keys.append(A.SortKey(self.vt.var(self.next().value), True))
-                    self.expect_op(")")
-                elif self.accept_kw("desc"):
-                    self.expect_op("(")
-                    order_keys.append(A.SortKey(self.vt.var(self.next().value), False))
+                    order_specs.append((self._expr(), asc))
                     self.expect_op(")")
                 elif self.peek().kind == "VAR":
-                    order_keys.append(A.SortKey(self.vt.var(self.next().value), True))
+                    order_specs.append(
+                        (A.VarRef(self.vt.var(self.next().value)), True)
+                    )
                 else:
                     break
 
@@ -177,17 +195,59 @@ class Parser:
         node: A.PlanNode = body
         for out, e in binds:
             node = A.Extend(out, e, node)
+        for v, e in group_binds:
+            node = A.Extend(v, e, node)
         if aggs or group_vars:
             node = A.GroupAgg(group_vars, aggs, node)
             if not proj_vars:
                 proj_vars = group_vars + [a.out for a in aggs]
         if select_all or not proj_vars:
             proj_vars = list(A.plan_vars(node))
-        node = A.Project(proj_vars, node)
-        if distinct:
-            node = A.Distinct(node)
-        if order_keys:
+        order_keys: List[A.SortKey] = []
+        order_binds: List[Tuple[int, A.Expr]] = []
+        for e, asc in order_specs:
+            if isinstance(e, A.VarRef):
+                order_keys.append(A.SortKey(e.var, asc))
+            else:
+                v = self.vt.fresh("_ord")
+                order_binds.append((v, e))
+                order_keys.append(A.SortKey(v, asc))
+        if order_binds and not distinct:
+            # expression keys may reference non-projected vars: BIND the
+            # key below the projection, carry it (and any non-projected
+            # bare key vars) through, strip with a final re-projection
+            for v, e in order_binds:
+                node = A.Extend(v, e, node)
+            carry = list(proj_vars)
+            for k in order_keys:
+                if k.var not in carry:
+                    carry.append(k.var)
+            node = A.Project(carry, node)
             node = A.OrderBy(order_keys, node)
+            node = A.Project(proj_vars, node)
+        else:
+            if order_binds:
+                # SPARQL: with DISTINCT, ORDER BY may only use projected
+                # expressions — the keys are computed after dedup
+                avail = set(proj_vars)
+                for _, e in order_binds:
+                    missing = [x for x in A.expr_vars(e) if x not in avail]
+                    if missing:
+                        raise SyntaxError(
+                            "ORDER BY expressions under DISTINCT may only "
+                            "use projected variables; "
+                            f"?{self.vt.name(missing[0])} is not projected"
+                        )
+            node = A.Project(proj_vars, node)
+            if distinct:
+                node = A.Distinct(node)
+            if order_binds:
+                for v, e in order_binds:
+                    node = A.Extend(v, e, node)
+                node = A.OrderBy(order_keys, node)
+                node = A.Project(proj_vars, node)
+            elif order_keys:
+                node = A.OrderBy(order_keys, node)
         if limit is not None or offset is not None:
             node = A.Slice(node, limit, offset or 0)
         if self.peek().kind != "EOF":
@@ -409,7 +469,24 @@ class Parser:
             op = self.next().value
             rhs = self._add()
             return A.Cmp(op, lhs, rhs)
+        if self.accept_kw("in"):
+            return A.Func("in", (lhs,) + self._in_list())
+        if (
+            t.kind == "KW" and t.value.lower() == "not"
+            and self.peek(1).kind == "KW" and self.peek(1).value.lower() == "in"
+        ):
+            self.next()
+            self.next()
+            return A.Not(A.Func("in", (lhs,) + self._in_list()))
         return lhs
+
+    def _in_list(self) -> Tuple[A.Expr, ...]:
+        self.expect_op("(")
+        args = [self._expr()]
+        while self.accept_op(","):
+            args.append(self._expr())
+        self.expect_op(")")
+        return tuple(args)
 
     def _add(self) -> A.Expr:
         lhs = self._mul()
@@ -449,6 +526,21 @@ class Parser:
             v = self.vt.var(self.next().value)
             self.expect_op(")")
             return A.Bound(v)
+        if t.kind == "KW" and t.value.lower() in A.FUNC_ARITIES and t.value.lower() != "in":
+            name = self.next().value.lower()
+            self.expect_op("(")
+            args = [self._expr()]
+            while self.accept_op(","):
+                args.append(self._expr())
+            self.expect_op(")")
+            lo, hi = A.FUNC_ARITIES[name]
+            if len(args) < lo or (hi is not None and len(args) > hi):
+                raise SyntaxError(
+                    f"{name.upper()} expects {lo}"
+                    + ("" if hi == lo else f"..{hi or 'n'}")
+                    + f" arguments, got {len(args)}"
+                )
+            return A.Func(name, tuple(args))
         if t.kind == "VAR":
             return A.VarRef(self.vt.var(self.next().value))
         if t.kind == "NUM":

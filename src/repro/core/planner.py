@@ -73,6 +73,8 @@ class PMergeJoin(PhysNode):
     mode: str = "inner"
     post_filter: Optional[A.Expr] = None
     amplifying: bool = False  # output >> inputs: the BARQ sweet spot
+    # left-join condition compiled by the expression VM (planner-cached)
+    post_program: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -93,6 +95,9 @@ class PCross(PhysNode):
 class PFilter(PhysNode):
     expr: A.Expr
     child: "Phys"
+    # ExprProgram compiled at plan time and cached on the node, so a plan
+    # reused through the server's plan cache never re-lowers (DESIGN.md §9)
+    program: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -100,6 +105,7 @@ class PExtend(PhysNode):
     var: int
     expr: A.Expr
     child: "Phys"
+    program: Optional[object] = None  # value-mode ExprProgram
 
 
 @dataclasses.dataclass
@@ -214,16 +220,50 @@ def phys_sorted_by(n: Phys) -> Optional[int]:
 
 
 class Planner:
-    def __init__(self, stats: GraphStats, barq_enabled: bool = True):
+    def __init__(
+        self,
+        stats: GraphStats,
+        barq_enabled: bool = True,
+        dictionary=None,
+    ):
         self.stats = stats
         # §4.2: the one cost-model tweak — amplifying merge joins get cheaper
         # when BARQ executes them
         self.barq_enabled = barq_enabled
+        # expression VM: FILTER / BIND / left-join conditions compile once
+        # at plan time; programs are cached per (expr, mode) across the
+        # whole plan (and across plans, for a long-lived planner)
+        self.dictionary = dictionary if dictionary is not None else getattr(
+            getattr(stats, "store", None), "dict", None
+        )
+        self._prog_cache: dict = {}
 
     # -- public -------------------------------------------------------------------
 
     def plan(self, node: A.PlanNode) -> Phys:
         return self._plan(node)
+
+    def compile_expr(self, expr: A.Expr, mode: str):
+        """ExprProgram for ``expr``; ``False`` (cached) when the expression
+        is outside the VM surface — operators then use the interpreted
+        tree walk without re-attempting compilation; None when no
+        dictionary is attached."""
+        if self.dictionary is None or expr is None:
+            return None
+        key = (expr, mode)
+        if key not in self._prog_cache:
+            from repro.core.exprs import ExprCompileError, compile_expr
+
+            try:
+                self._prog_cache[key] = compile_expr(expr, self.dictionary, mode)
+            except ExprCompileError:
+                self._prog_cache[key] = False  # known uncompilable
+        return self._prog_cache[key]
+
+    def _pfilter(self, expr: A.Expr, child: Phys, sel: float = 0.5) -> Phys:
+        out = PFilter(expr, child, program=self.compile_expr(expr, "mask"))
+        out.est_rows = child.est_rows * sel
+        return out
 
     # -- logical dispatch -------------------------------------------------------------
 
@@ -235,9 +275,7 @@ class Planner:
             if isinstance(node.child, A.BGP):
                 return self._plan_bgp(node.child.patterns, [node.expr])
             child = self._plan(node.child)
-            out = PFilter(node.expr, child)
-            out.est_rows = child.est_rows * 0.5
-            return out
+            return self._pfilter(node.expr, child)
         if isinstance(node, A.Join):
             return self._plan_binary_join(node.left, node.right, "inner", None)
         if isinstance(node, A.LeftJoin):
@@ -251,7 +289,10 @@ class Planner:
             return out
         if isinstance(node, A.Extend):
             child = self._plan(node.child)
-            out = PExtend(node.var, node.expr, child)
+            out = PExtend(
+                node.var, node.expr, child,
+                program=self.compile_expr(node.expr, "value"),
+            )
             out.est_rows = child.est_rows
             return out
         if isinstance(node, A.Project):
@@ -372,17 +413,14 @@ class Planner:
             )
 
         for f in pending_filters:
-            current = PFilter(f, current)
-            current.est_rows = current.child.est_rows * 0.5
+            current = self._pfilter(f, current)
         return current
 
     def _apply_ready_filters(self, current: Phys, cvars: set, filters: List[A.Expr]):
         ready = [f for f in filters if set(A.expr_vars(f)) <= cvars]
         rest = [f for f in filters if f not in ready]
         for f in ready:
-            nxt = PFilter(f, current)
-            nxt.est_rows = current.est_rows * 0.5
-            current = nxt
+            current = self._pfilter(f, current)
         return current, rest
 
     def _choose_join_var(self, current: Phys, p: A.TriplePattern, shared: List[int]) -> int:
@@ -468,7 +506,10 @@ class Planner:
             s = PSort(right, jv)
             s.est_rows = right.est_rows
             right = s
-        out = PMergeJoin(left, right, jv, mode=mode, post_filter=expr)
+        out = PMergeJoin(
+            left, right, jv, mode=mode, post_filter=expr,
+            post_program=self.compile_expr(expr, "mask"),
+        )
         d = max(int(max(left.est_rows, 1) ** 0.5), 1)
         out.est_rows = self.stats.join_cardinality(
             max(int(left.est_rows), 1), max(int(right.est_rows), 1), d, d

@@ -3,7 +3,9 @@
     join_expand      — merge-join Build-phase cross-product materialization
     sorted_search    — vectorized binary search (batched skip()/seek)
     segment_reduce   — segmented scan for streaming aggregation
-    filter_eval      — fused conjunction predicate masks
+    expr_eval        — fused expression-VM program evaluation (§9)
+    frontier_dedup   — property-path BFS delta-frontier masks
+    gather_emit      — fused join emission (gather + NULL-extend + keys)
     radix_partition  — distributed-exchange partitioning
 
 ``repro.kernels.ops`` dispatches numpy / jnp-ref / pallas-interpret

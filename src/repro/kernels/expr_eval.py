@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused expression-VM evaluation (DESIGN.md §9.3).
+
+One kernel dispatch per batch evaluates an *entire* compiled expression
+program — arithmetic, comparisons, three-valued logic, IF/COALESCE and the
+pre-broadcast dictionary-domain predicate columns — over a block of the
+referenced columns only. The program is a static argument: the shared
+interpreter (core/exprs/vm._interp) unrolls instruction-by-instruction at
+trace time, so each hot expression compiles to its own fused kernel whose
+register file lives entirely in VMEM. This generalizes and replaces the
+old conjunction-only filter_eval kernel: any FILTER/BIND/left-join
+condition the compiler can lower now runs in one dispatch.
+
+Inputs: icols (KI, N) int32 — dictionary-code columns then trinary
+predicate columns; fcols (KF, N) float32 — numeric side-array decodes
+(NaN = non-numeric/NULL). Outputs: (value float32, error bool) for the
+program's output register; the FILTER mask is value != 0 & ~error.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.exprs.bytecode import ExprProgram
+from repro.core.exprs.vm import _interp
+
+# wide blocks: the register file is a handful of (BLOCK,) vectors, so VMEM
+# stays small even at 8k lanes, and fewer grid steps amortize dispatch
+# (and, on CPU, interpret-mode) overhead across more rows
+BLOCK = 8192
+
+
+def _kernel(icols_ref, fcols_ref, val_ref, err_ref, *, prog: ExprProgram):
+    val, err = _interp(jnp, prog, icols_ref[...], fcols_ref[...], jnp.float32)
+    val_ref[...] = val
+    err_ref[...] = err
+
+
+@functools.partial(jax.jit, static_argnames=("prog", "interpret"))
+def expr_eval_pallas(
+    icols: jax.Array,
+    fcols: jax.Array,
+    prog: ExprProgram,
+    interpret: bool = True,
+):
+    ki, n = icols.shape
+    kf = fcols.shape[0]
+    n_pad = pl.cdiv(max(n, 1), BLOCK) * BLOCK
+    # padding rows: NULL codes / NaN values — they evaluate to errors that
+    # the final slice drops
+    icols_p = jnp.full((ki, n_pad), -1, jnp.int32).at[:, :n].set(
+        icols.astype(jnp.int32)
+    )
+    fcols_p = jnp.full((kf, n_pad), jnp.nan, jnp.float32).at[:, :n].set(
+        fcols.astype(jnp.float32)
+    )
+    val, err = pl.pallas_call(
+        functools.partial(_kernel, prog=prog),
+        grid=(n_pad // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((ki, BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((kf, BLOCK), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(icols_p, fcols_p)
+    return val[:n], err[:n]

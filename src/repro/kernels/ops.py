@@ -229,27 +229,33 @@ def segment_reduce(keys, values, func: str, backend: Optional[str] = None):
     return keys[run_end].astype(np.int32), scan[run_end].astype(np.float64)
 
 
-# -- filter ---------------------------------------------------------------
+# -- expression VM (DESIGN.md §9) -------------------------------------------
 
 
-def filter_eval(cols, spec, backend: Optional[str] = None):
+def expr_eval(prog, icols, fcols, backend: Optional[str] = None):
+    """Evaluate a compiled ExprProgram over an input block: (value, error)
+    numpy arrays for the output register. The numpy path is the float64
+    oracle; jax runs the jit'd float32 reference; pallas runs the fused
+    kernel (whole program, one dispatch per batch)."""
     be = _backend(backend)
+    icols = np.ascontiguousarray(icols, dtype=np.int32)
     if be == "numpy":
-        mask = np.ones(cols.shape[1], dtype=bool)
-        for col, op, rhs_col, const in spec:
-            a = cols[col]
-            b = cols[rhs_col] if rhs_col >= 0 else np.int32(const)
-            m = [a == b, a != b, a < b, a <= b, a > b, a >= b][op]
-            mask &= m
-        return mask
+        from repro.core.exprs.vm import _interp
+
+        val, err = _interp(np, prog, icols, np.asarray(fcols, np.float64),
+                           np.float64)
+        return np.asarray(val), np.asarray(err)
+    fcols = np.ascontiguousarray(fcols, dtype=np.float32)
     if be == "jax":
         from repro.kernels import ref
 
-        return np.asarray(ref.filter_eval(cols, tuple(spec)))
+        val, err = ref.expr_eval(icols, fcols, prog)
+        return np.asarray(val), np.asarray(err)
     if be == "pallas":
-        from repro.kernels.filter_eval import filter_eval_pallas
+        from repro.kernels.expr_eval import expr_eval_pallas
 
-        return np.asarray(filter_eval_pallas(cols, tuple(spec)))
+        val, err = expr_eval_pallas(icols, fcols, prog)
+        return np.asarray(val), np.asarray(err)
     raise ValueError(be)
 
 

@@ -8,7 +8,7 @@ static-shape contracts the TPU kernels need:
   * sorted_search  — vectorized binary search (the batched skip()/seek);
   * segment_scan   — segmented inclusive scan over sorted keys (the
                      building block of streaming aggregation);
-  * filter_eval    — conjunction of per-column comparisons → mask;
+  * expr_eval      — whole expression-VM programs → (value, error);
   * radix_partition— multiplicative-hash partition ids + histogram
                      (the distributed exchange planner).
 
@@ -193,27 +193,19 @@ def frontier_dedup(
 
 
 # ---------------------------------------------------------------------------
-# filter_eval
+# expr_eval (expression VM programs; DESIGN.md §9)
 # ---------------------------------------------------------------------------
 
-# predicate spec: tuple of (col_idx, op_code, rhs_col_idx_or_-1, const)
-# op codes: 0 '=', 1 '!=', 2 '<', 3 '<=', 4 '>', 5 '>='
-OPS = ("=", "!=", "<", "<=", ">", ">=")
 
+@functools.partial(jax.jit, static_argnames=("prog",))
+def expr_eval(icols: jax.Array, fcols: jax.Array, prog) -> Tuple[jax.Array, jax.Array]:
+    """(value float32, error bool) for a compiled ExprProgram over an input
+    block — the shared VM interpreter, unrolled under jit (the program is
+    the static argument). This is what XLA-TPU would run without the fused
+    Pallas kernel."""
+    from repro.core.exprs.vm import _interp
 
-@functools.partial(jax.jit, static_argnames=("spec",))
-def filter_eval(cols: jax.Array, spec: Tuple[Tuple[int, int, int, int], ...]) -> jax.Array:
-    """cols: (K, C) int32. Conjunction of comparisons; rhs is another column
-    (rhs_col >= 0) or an int32 constant."""
-    mask = jnp.ones(cols.shape[1], dtype=bool)
-    for col, op, rhs_col, const in spec:
-        a = cols[col]
-        b = cols[rhs_col] if rhs_col >= 0 else jnp.int32(const)
-        m = [
-            a == b, a != b, a < b, a <= b, a > b, a >= b,
-        ][op]
-        mask &= m
-    return mask
+    return _interp(jnp, prog, icols, fcols, jnp.float32)
 
 
 # ---------------------------------------------------------------------------

@@ -11,6 +11,7 @@ workload mix, and percentile reporting the evaluation section uses.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -34,7 +35,11 @@ class QueryServer:
         self.engine = Engine(store, cfg or EngineConfig())
         self._plan_cache: Dict[str, Tuple[PL.Phys, A.VarTable]] = {}
 
-    def _plan_for(self, key: str, text: str) -> Tuple[PL.Phys, A.VarTable]:
+    def _plan_for(self, text: str) -> Tuple[PL.Phys, A.VarTable]:
+        # cache key is a hash of the query text itself — the caller's
+        # query_id is a reporting label only, so two different queries
+        # sharing an id can never silently reuse the wrong cached plan
+        key = hashlib.sha256(text.encode()).hexdigest()
         hit = self._plan_cache.get(key)
         if hit is None:
             node, vt = self.engine.parse(text)
@@ -44,7 +49,7 @@ class QueryServer:
 
     def execute(self, key: str, text: str) -> RequestResult:
         t0 = time.perf_counter()
-        phys, vt = self._plan_for(key, text)
+        phys, vt = self._plan_for(text)
         res = self.engine.execute_plan(phys, vt)
         return RequestResult(key, res.n_rows, time.perf_counter() - t0)
 

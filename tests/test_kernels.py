@@ -172,17 +172,43 @@ def test_segment_reduce_sweep(backend, func, n, k):
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_filter_eval_sweep(backend):
+def test_filter_conjunction_compiles_to_vm(backend):
+    """The old conjunction-kernel spec format — (col, op, rhs_col|-1,
+    const) conjunctions over int columns — is now a *compile target* of
+    the expression VM: the equivalent And-of-Cmp tree must produce the
+    plain numpy conjunction mask through every backend (the fused
+    expr_eval kernel replaced kernels/filter_eval.py)."""
+    from repro.core import algebra as A
+    from repro.core.batch import ColumnBatch
+    from repro.core.dictionary import Dictionary
+    from repro.core.exprs import compile_expr, eval_program_mask
+
+    ops_names = ("=", "!=", "<", "<=", ">", ">=")
     rng = np.random.RandomState(0)
+    d = Dictionary()
+    for v in range(20):  # term i == int i -> code i: codes ARE the values
+        d.encode(int(v))
     for k, n in [(1, 1), (3, 100), (6, 5000)]:
-        cols = rng.randint(-20, 20, (k, n)).astype(np.int32)
+        cols = rng.randint(0, 20, (k, n)).astype(np.int32)
         spec = tuple(
             (rng.randint(k), rng.randint(6),
-             rng.randint(k) if rng.rand() < 0.5 else -1, int(rng.randint(-20, 20)))
+             rng.randint(k) if rng.rand() < 0.5 else -1, int(rng.randint(0, 20)))
             for _ in range(min(k, 3))
         )
-        want = ops.filter_eval(cols, spec, backend="numpy")
-        got = ops.filter_eval(cols, spec, backend=backend)
+        want = np.ones(n, dtype=bool)
+        terms = []
+        for col, op, rhs_col, const in spec:
+            a = cols[col]
+            b = cols[rhs_col] if rhs_col >= 0 else np.int32(const)
+            want &= [a == b, a != b, a < b, a <= b, a > b, a >= b][op]
+            rhs = A.VarRef(rhs_col) if rhs_col >= 0 else A.Lit(const)
+            terms.append(A.Cmp(ops_names[op], A.VarRef(col), rhs))
+        expr = terms[0] if len(terms) == 1 else A.And(tuple(terms))
+        batch = ColumnBatch.from_columns(
+            tuple(range(k)), list(cols), capacity=max(n, 1)
+        )
+        prog = compile_expr(expr, d, "mask")
+        got = eval_program_mask(prog, batch, d, backend=backend)[:n]
         np.testing.assert_array_equal(got, want)
 
 
