@@ -13,10 +13,12 @@ import numpy as np
 
 from benchmarks.common import Suite
 from repro.core.algebra import AggSpec, And, Arith, Cmp, Func, Lit, VarRef
+from repro.core.batch import BatchPool
 from repro.core.expressions import eval_expr_mask
 from repro.core.exprs import compile_expr, eval_program_mask
-from repro.core.legacy.operators import RowMergeJoin, RowSort
-from repro.core.operators.aggregate import StreamingGroupBy
+from repro.core.legacy.operators import RowGroupBy, RowMergeJoin, RowSort
+from repro.core.operators.adapters import BatchToRow
+from repro.core.operators.aggregate import SortGroupBy, StreamingGroupBy
 from repro.core.operators.merge_join import MergeJoin
 from repro.core.operators.sort import MaterializedSource
 from repro.core.dictionary import Dictionary
@@ -249,6 +251,112 @@ def bench_streaming_group(rng, n=1_000_000, n_keys=50000):
     return rows, dt
 
 
+# the ISSUE-4 acceptance workload: many-groups aggregation with the full
+# function repertoire, including a DISTINCT aggregate (the pre-PR scalar
+# carry looped Python-level over every group run here)
+_AGG_SPECS = [
+    AggSpec("count", None, False, 9),
+    AggSpec("sum", 1, False, 10),
+    AggSpec("avg", 1, False, 11),
+    AggSpec("sum", 1, True, 12),
+]
+
+
+def _agg_workload(rng, n, n_keys):
+    d = Dictionary()
+    for v in range(100):
+        d.encode(int(v))
+    keys = np.sort(rng.randint(0, n_keys, n)).astype(np.int32)
+    k2 = rng.randint(0, 4, n).astype(np.int32)
+    vals = rng.randint(0, 100, n).astype(np.int32)
+    return d, keys, k2, vals
+
+
+def bench_aggregation(rng, n=200_000, n_keys=20_000, reps=3, oracle_n=None):
+    """Streaming (sorted single key) vs sort-based (two keys, unsorted)
+    vs the legacy row hash aggregation; the streaming and row results are
+    asserted equal row-for-row (the row engine is the oracle).
+
+    ``oracle_n`` caps how many rows the per-row oracle chews through —
+    fast/CI mode shrinks it so the smoke gate stays fast while the parity
+    assertion still runs on real data (a sorted prefix of the workload)."""
+    d, keys, k2, vals = _agg_workload(rng, n, n_keys)
+    oracle_n = n if oracle_n is None else min(oracle_n, n)
+    okeys, ovals = keys[:oracle_n], vals[:oracle_n]  # prefix stays sorted
+    pool = BatchPool()
+
+    def make_streaming(k=keys, v=vals):
+        src = MaterializedSource((0, 1), np.stack([k, v]), 0, 4096)
+        return StreamingGroupBy(src, 0, _AGG_SPECS, d, pool=pool)
+
+    def make_sorted():
+        src = MaterializedSource((0, 2, 1), np.stack([keys, k2, vals]), None, 4096)
+        return SortGroupBy(src, (0, 2), _AGG_SPECS, d, pool=pool)
+
+    def make_row():
+        src = MaterializedSource((0, 1), np.stack([okeys, ovals]), 0, 4096)
+        return RowGroupBy(BatchToRow(src), (0,), _AGG_SPECS, d)
+
+    out_s, dt_s = _drain_timed(make_streaming, reps)
+    out_m, dt_m = _drain_timed(make_sorted, reps)
+
+    # row baseline (the §5 oracle) — one rep, it is orders slower
+    t0 = time.perf_counter()
+    row_rows = {}
+    op = make_row()
+    while True:
+        r = op.next_row()
+        if r is None:
+            break
+        row_rows[r[0]] = tuple(r.get(a.out) for a in _AGG_SPECS)
+    dt_r = time.perf_counter() - t0
+
+    # exact parity: streaming output == row-engine output (same slice)
+    chk = make_streaming(okeys, ovals)
+    n_chk = 0
+    while True:
+        b = chk.next_batch()
+        if b is None:
+            break
+        for row in b.to_rows_array():
+            want = row_rows[int(row[0])]
+            got = tuple(None if c == -1 else int(c) for c in row[1:])
+            assert got == want, (int(row[0]), got, want)
+            n_chk += 1
+        b.release()
+    assert n_chk == len(row_rows), (n_chk, len(row_rows))
+
+    # multi-key parity: the packed-key SortGroupBy path == row hash on the
+    # same slice (covers pack_group_keys + the gid -> key back-translation)
+    ok2 = k2[:oracle_n]
+
+    def multi_src():
+        return MaterializedSource(
+            (0, 2, 1), np.stack([okeys, ok2, ovals]), None, 4096)
+
+    row_multi = {}
+    op = RowGroupBy(BatchToRow(multi_src()), (0, 2), _AGG_SPECS, d)
+    while True:
+        r = op.next_row()
+        if r is None:
+            break
+        row_multi[(r[0], r[2])] = tuple(r.get(a.out) for a in _AGG_SPECS)
+    chk = SortGroupBy(multi_src(), (0, 2), _AGG_SPECS, d, pool=pool)
+    n_chk = 0
+    while True:
+        b = chk.next_batch()
+        if b is None:
+            break
+        for row in b.to_rows_array():
+            want = row_multi[(int(row[0]), int(row[1]))]
+            got = tuple(None if c == -1 else int(c) for c in row[2:])
+            assert got == want, ((int(row[0]), int(row[1])), got, want)
+            n_chk += 1
+        b.release()
+    assert n_chk == len(row_multi), (n_chk, len(row_multi))
+    return (out_s, dt_s), (out_m, dt_m), (len(row_rows), dt_r, oracle_n)
+
+
 def run(seed: int = 0, fast: bool = False) -> str:
     """``fast`` is the CI smoke mode: tiny sizes so kernel regressions in
     the path subsystem fail the gate quickly without benchmark-scale cost."""
@@ -288,6 +396,28 @@ def run(seed: int = 0, fast: bool = False) -> str:
                                       n_keys=10000 if fast else 50000)
     suite.add("streaming_groupby_1M", dtg * 1e6,
               f"groups={rows};Mtps={1.0 / dtg:.1f}")
+
+    # grouping-engine suite (DESIGN.md §10): segmented-reduction streaming
+    # vs packed-key sort-based vs legacy row hash; exact parity of BOTH
+    # batch paths against the row oracle is asserted inside. The reported
+    # speedup_vs_row is per-tuple vs the legacy ROW engine; the ISSUE-4
+    # acceptance comparison (>= 5x over the pre-PR scalar-carry BATCH
+    # operator) is recorded as before/after in BENCH_PR4.json
+    n_agg = 40_000 if fast else 200_000
+    k_agg = 4_000 if fast else 20_000
+    (o_s, t_s), (o_m, t_m), (o_r, t_r, n_r) = bench_aggregation(
+        rng, n=n_agg, n_keys=k_agg, oracle_n=5_000 if fast else None)
+    mrows = n_agg / 1e6
+    # the row oracle may run a smaller slice in fast mode: compare
+    # per-tuple costs so the reported speedup stays meaningful
+    speedup = (t_r / n_r) / (t_s / n_agg)
+    suite.add("agg_streaming_batch", t_s * 1e6,
+              f"groups={o_s};Mtps={mrows / t_s:.1f};"
+              f"speedup_vs_row={speedup:.1f}x")
+    suite.add("agg_sort_multikey_batch", t_m * 1e6,
+              f"groups={o_m};Mtps={mrows / t_m:.1f}")
+    suite.add("agg_row_hash", t_r * 1e6,
+              f"groups={o_r};rows={n_r};Mtps={n_r / 1e6 / t_r:.3f}")
 
     # property-path closure: vectorized frontier engine vs row baseline
     # (DESIGN.md §8; acceptance floor is 3x on the 10k-edge tree)

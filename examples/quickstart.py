@@ -57,6 +57,26 @@ SELECT ?p (COUNT(DISTINCT ?q) AS ?n) {
 """
 print("\nfriend counts:", Engine(store).execute(AGG).decoded(store.dict))
 
+# 5b. the vectorized grouping engine (DESIGN.md §10): multi-key GROUP BY
+# runs through packed composite keys + segmented-reduction kernels, and
+# HAVING filters the aggregate output through the expression VM. Aggregate
+# calls are legal inside HAVING — COUNT(?p) here desugars to a hidden
+# aggregate the projection strips.
+HAVING_Q = """
+SELECT ?company (AVG(?age) AS ?avgage) {
+  ?p :worksAt ?company .
+  OPTIONAL { ?p :age ?age }
+} GROUP BY ?company HAVING (COUNT(?p) >= 2)
+"""
+having_result = Engine(store).execute(HAVING_Q)
+print("\ncompanies with >= 2 people (avg age; unbound if none known):")
+for row in having_result.decoded(store.dict):
+    print("  ", row)
+# the profile shows the Group operator's kernel counters
+# (group_runs / segment_reduce / segment_reduce_ms) and the Having stage
+print("\ngrouping profile:")
+print(having_result.profile())
+
 # 6. property paths: the vectorized frontier engine (DESIGN.md §8).
 # `:knows+` is the transitive closure; `/` sequences into :worksAt.
 PATH = """

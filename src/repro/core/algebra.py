@@ -304,9 +304,15 @@ class AggSpec:
 
 @dataclasses.dataclass
 class GroupAgg(PlanNode):
+    """GROUP BY + aggregates. ``having`` is the (optional) HAVING
+    constraint, evaluated over the aggregate output; aggregate calls inside
+    it are desugared by the parser to hidden AggSpecs in ``aggs`` whose out
+    vars the condition references (DESIGN.md §10)."""
+
     group_vars: List[int]
     aggs: List[AggSpec]
     child: PlanNode
+    having: Optional[Expr] = None
 
 
 @dataclasses.dataclass(frozen=True)

@@ -210,10 +210,21 @@ class Translator:
                 gv = n.group_vars[0] if n.group_vars else None
                 if gv is None or bchild.sorted_by() == gv:
                     return StreamingGroupBy(
-                        bchild, gv, n.aggs, self.store.dict, self.cfg.max_batch
+                        bchild, gv, n.aggs, self.store.dict,
+                        self.cfg.max_batch, pool=self.pool,
                     )
             return SortGroupBy(
-                bchild, n.group_vars, n.aggs, self.store.dict, self.cfg.max_batch
+                bchild, n.group_vars, n.aggs, self.store.dict,
+                self.cfg.max_batch, pool=self.pool,
+            )
+        if isinstance(n, PL.PHaving):
+            # HAVING: expression-VM filter over the aggregate output
+            child = self._build(n.child)
+            if isinstance(child, LOP.RowOperator):  # mixed: row grouping
+                return LOP.RowFilter(child, n.expr, self.store.dict)
+            return FilterOp(
+                self._to_batch(child), n.expr, self.store.dict,
+                program=_planner_program(n.program), name="Having",
             )
         if isinstance(n, PL.POrderBy):
             child = self._build(n.child)
@@ -317,6 +328,8 @@ class Translator:
             return LOP.RowGroupBy(
                 self._row(n.child), n.group_vars, n.aggs, self.store.dict
             )
+        if isinstance(n, PL.PHaving):
+            return LOP.RowFilter(self._row(n.child), n.expr, self.store.dict)
         if isinstance(n, PL.POrderBy):
             return LOP.RowSort(
                 self._row(n.child), keys=n.keys, dictionary=self.store.dict

@@ -415,6 +415,10 @@ class RowGroupBy(RowOperator):
     def children(self) -> List[RowOperator]:
         return [self.child]
 
+    def _fresh_state(self) -> List[dict]:
+        return [dict(count=0.0, bound=0.0, sum=0.0, min=np.inf, max=-np.inf,
+                     nn=0.0, distinct=set()) for _ in self.aggs]
+
     def _build(self) -> Iterator[Row]:
         groups: Dict[Tuple, List] = {}
         while True:
@@ -424,8 +428,7 @@ class RowGroupBy(RowOperator):
             key = tuple(r.get(v, int(NULL_ID)) for v in self.group_vars)
             st = groups.get(key)
             if st is None:
-                st = [dict(count=0.0, sum=0.0, min=np.inf, max=-np.inf,
-                           nn=0.0, distinct=set()) for _ in self.aggs]
+                st = self._fresh_state()
                 groups[key] = st
             for ai, a in enumerate(self.aggs):
                 s = st[ai]
@@ -434,8 +437,11 @@ class RowGroupBy(RowOperator):
                     continue
                 code = r.get(a.var)
                 if code is None:
-                    continue
+                    continue  # unbound rows never feed an aggregate
+                s["bound"] += 1
                 if a.distinct:
+                    # dedup by bound code; the aggregate function applies
+                    # over the distinct set at finalization
                     s["distinct"].add(code)
                     continue
                 v = self.dictionary.numeric_of(np.asarray([code]))[0]
@@ -445,28 +451,44 @@ class RowGroupBy(RowOperator):
                     s["min"] = min(s["min"], v)
                     s["max"] = max(s["max"], v)
         if not groups and not self.group_vars:
-            groups[()] = [dict(count=0.0, sum=0.0, min=np.inf, max=-np.inf,
-                               nn=0.0, distinct=set()) for _ in self.aggs]
+            groups[()] = self._fresh_state()
         for key, st in groups.items():
             row = {v: key[i] for i, v in enumerate(self.group_vars)}
             for ai, a in enumerate(self.aggs):
                 s = st[ai]
-                if a.func == "count" and a.var is None:
+                if a.distinct and a.var is not None:
+                    codes = np.asarray(sorted(s["distinct"]), dtype=np.int64)
+                    vals = self.dictionary.numeric_of(codes)
+                    ok = ~np.isnan(vals)
+                    nums = vals[ok]
+                    if a.func == "count":
+                        val = float(len(codes))  # distinct bound terms
+                    elif a.func == "sum":
+                        val = float(nums.sum()) if len(nums) else 0.0
+                    elif a.func == "min":
+                        val = float(nums.min()) if len(nums) else None
+                    elif a.func == "max":
+                        val = float(nums.max()) if len(nums) else None
+                    elif a.func == "avg":
+                        val = float(nums.mean()) if len(nums) else None
+                    else:
+                        raise ValueError(a.func)
+                elif a.func == "count" and a.var is None:
                     val = s["count"]
-                elif a.distinct:
-                    val = float(len(s["distinct"]))
                 elif a.func == "count":
-                    val = s["nn"]
+                    val = s["bound"]  # SPARQL: COUNT counts bound terms
                 elif a.func == "sum":
                     val = s["sum"]
                 elif a.func == "min":
-                    val = s["min"]
+                    val = s["min"] if s["nn"] else None
                 elif a.func == "max":
-                    val = s["max"]
+                    val = s["max"] if s["nn"] else None
                 elif a.func == "avg":
-                    val = s["sum"] / s["nn"] if s["nn"] else np.nan
+                    val = s["sum"] / s["nn"] if s["nn"] else None
                 else:
                     raise ValueError(a.func)
+                if val is None:
+                    continue  # empty / non-numeric group: leave unbound
                 enc = int(val) if float(val).is_integer() else float(val)
                 row[a.out] = self.dictionary.encode(enc)
             yield row

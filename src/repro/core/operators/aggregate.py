@@ -1,47 +1,105 @@
-"""Vectorized aggregation (paper §3.3).
+"""Vectorized grouping engine (paper §3.3, DESIGN.md §10).
 
 StreamingGroupBy handles the paper's optimized case: a single group variable
 with input sorted by it. Standard aggregates (count/sum/min/max/avg) are
-associative: each batch reduces to per-run partials (vecops.segment_reduce /
-kernels segment_reduce) which merge across batches through a carry for the
-run that spans the batch boundary. No hash table is needed — exactly why the
-paper ships streaming aggregation first (§3.3: no row-based memory-manager
-hash tables involved).
+associative, so every batch reduces to per-run partials with ONE
+``kernels.ops.segment_reduce`` dispatch per required statistic (numpy
+oracle / jnp ref / Pallas segmented scan) and a single scalar carry for the
+run spanning the batch boundary — no Python-level per-run loops. DISTINCT
+aggregates sort each batch by (group, code) and dedup through the
+``frontier_dedup`` kernel (adjacent-unique over sorted pairs); only the
+boundary run keeps an explicit code set, merged by sorted union.
 
-SortGroupBy is the general fallback: materialize, sort by group keys
-(sort-based grouping — the TPU-idiomatic replacement for vectorized hash
-grouping, DESIGN.md §2), then stream. StreamingDistinct implements
-DISTINCT-via-skip() for sorted inputs: after seeing key k it *skips* the
-child to k+1, scrolling over duplicates in storage (paper: 'highly
-efficient for queries with many duplicates').
+Semantics (shared with the legacy row engine and pinned by
+tests/test_aggregate.py):
+
+  * COUNT counts *bound* terms (numeric or not); every other aggregate
+    restricts to numeric terms via the dictionary side-array;
+  * DISTINCT dedups bound codes before the aggregate function is applied —
+    ``SUM(DISTINCT ?x)`` sums the distinct values, it is not a count;
+  * MIN/MAX/AVG over an empty (or all-unbound / all-non-numeric) group
+    leave the output variable unbound instead of encoding NaN.
+
+Backend note: numpy is the default backend and the float64 oracle; the
+jnp/Pallas segmented scans accumulate in float32, so their SUM/AVG partials
+are exact only for f32-representable magnitudes (integer sums below 2^24 —
+the same caveat as the expression VM, DESIGN.md §9.5). COUNT(DISTINCT *)
+is rejected at parse time rather than silently approximated (it would need
+whole-solution dedup, not a per-column code set).
+
+SortGroupBy is the general fallback (multi-var or unsorted input): it
+drains only the needed columns from pooled batches, sorts ONCE by a packed
+int64 composite key, assigns dense group ids, and streams the sorted runs
+through StreamingGroupBy — sort-based grouping, the TPU-idiomatic
+replacement for vectorized hash grouping (DESIGN.md §2).
+
+StreamingDistinct implements DISTINCT-via-skip() for sorted inputs: after
+seeing key k it *skips* the child to k+1, scrolling over duplicates in
+storage (paper: 'highly efficient for queries with many duplicates').
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import vecops
 from repro.core.algebra import AggSpec
-from repro.core.batch import MAX_BATCH, ColumnBatch
+from repro.core.batch import MAX_BATCH, NULL_ID, BatchPool, ColumnBatch
 from repro.core.dictionary import Dictionary
 from repro.core.operators.base import BatchOperator
 from repro.core.operators.sort import MaterializedSource, materialize
+from repro.kernels import ops
+
+_EMPTY_I32 = np.zeros(0, dtype=np.int32)
+
+# per-run statistics each (func, distinct) aggregate consumes; 'cnt' is the
+# run length, 'bnd'/'nn' count bound / numeric rows, 'sum'/'min'/'max' fold
+# numeric values, and the d-prefixed stats fold over the per-run distinct
+# bound codes (DESIGN.md §10)
+_NEEDS: Dict[Tuple[str, bool], Tuple[str, ...]] = {
+    ("count*", False): ("cnt",),
+    ("count*", True): ("cnt",),  # hand-built plans only: parser rejects it
+    ("count", False): ("bnd",),
+    ("count", True): ("dbnd",),
+    ("sum", False): ("sum",),
+    ("sum", True): ("dsum",),
+    ("min", False): ("min", "nn"),
+    ("min", True): ("min", "nn"),  # distinct never changes an extremum
+    ("max", False): ("max", "nn"),
+    ("max", True): ("max", "nn"),
+    ("avg", False): ("sum", "nn"),
+    ("avg", True): ("dsum", "dnn"),
+}
+
+_DISTINCT_STATS = ("dbnd", "dnn", "dsum")
+_SCALAR_INIT = {
+    "cnt": 0.0, "bnd": 0.0, "nn": 0.0, "sum": 0.0,
+    "min": np.inf, "max": -np.inf,
+}
+
+
+def _agg_needs(a: AggSpec) -> Tuple[str, ...]:
+    func = "count*" if a.var is None else a.func
+    return _NEEDS[(func, a.distinct)]
 
 
 @dataclasses.dataclass
-class _AggState:
-    """Carry for the group run spanning the current batch boundary."""
+class _Carry:
+    """Scalar partials for the group run spanning the batch boundary.
+
+    Associative stats merge as scalars; the DISTINCT stats cannot (codes in
+    the next batch may repeat earlier ones), so for DISTINCT count/sum/avg
+    the carry collects each batch's sorted-unique bound-code slice and
+    dedups ONCE when the run provably closes — appending chunks keeps a
+    group spanning B batches O(total codes), not O(B * total)."""
 
     key: Optional[int] = None
-    count: float = 0.0
-    sums: Optional[Dict[int, float]] = None  # per-agg partial
-    mins: Optional[Dict[int, float]] = None
-    maxs: Optional[Dict[int, float]] = None
-    counts: Optional[Dict[int, float]] = None  # per-agg non-null counts
-    distinct: Optional[Dict[int, set]] = None  # per-agg distinct codes
+    stats: Optional[List[Dict[str, float]]] = None  # per-agg scalar partials
+    dcodes: Optional[Dict[int, List[np.ndarray]]] = None  # per-agg code chunks
 
 
 class StreamingGroupBy(BatchOperator):
@@ -55,6 +113,8 @@ class StreamingGroupBy(BatchOperator):
         aggs: Sequence[AggSpec],
         dictionary: Dictionary,
         batch_size: int = MAX_BATCH,
+        pool: Optional[BatchPool] = None,
+        backend: Optional[str] = None,
     ):
         if group_var is not None:
             assert child.sorted_by() == group_var, "input must be sorted by group var"
@@ -63,11 +123,25 @@ class StreamingGroupBy(BatchOperator):
         self.aggs = list(aggs)
         self.dictionary = dictionary
         self.batch_size = batch_size
-        self._out_keys: List[int] = []
-        self._out_vals: List[List[float]] = [[] for _ in self.aggs]
-        self._carry = _AggState()
+        self.pool = pool
+        self.backend = backend
+        self._needs = [_agg_needs(a) for a in self.aggs]
+        self._dset_aggs = tuple(
+            ai for ai, need in enumerate(self._needs)
+            if any(s in _DISTINCT_STATS for s in need)
+        )
+        self._out_keys: List[np.ndarray] = []
+        self._out_vals: List[List[np.ndarray]] = [[] for _ in self.aggs]
+        self._carry = _Carry()
+        self._enc_keys: Optional[np.ndarray] = None
+        self._enc_cols: List[np.ndarray] = []
         self._emitted = 0
         self._drained = False
+        self._sr_calls = 0
+        self._sr_ms = 0.0
+        self._dd_calls = 0
+        self._dd_ms = 0.0
+        self._runs = 0
         super().__init__(
             "Group",
             f"by=?v{group_var} " + ",".join(f"{a.func}->?v{a.out}" for a in aggs),
@@ -83,7 +157,19 @@ class StreamingGroupBy(BatchOperator):
     def children(self) -> List[BatchOperator]:
         return [self.child]
 
-    # -- aggregation ------------------------------------------------------------
+    # -- kernel dispatch ---------------------------------------------------------
+
+    def _reduce(self, keys: np.ndarray, values: Optional[np.ndarray],
+                func: str, seg=None) -> np.ndarray:
+        t0 = time.perf_counter()
+        _, out = ops.segment_reduce(
+            keys, values, func, backend=self.backend, seg=seg
+        )
+        self._sr_ms += time.perf_counter() - t0
+        self._sr_calls += 1
+        return np.asarray(out, dtype=np.float64)
+
+    # -- aggregation -------------------------------------------------------------
 
     def _consume_all(self) -> None:
         while True:
@@ -100,125 +186,299 @@ class StreamingGroupBy(BatchOperator):
                 else np.zeros(cb.n_rows, dtype=np.int32)
             )
             self._consume_batch(keys, cb)
-            cb.release()  # aggregates copied into the carry state
+            cb.release()  # per-run partials copied into outputs / carry
         self._close_carry()
+        if self.g is None and not self._out_keys:
+            # global aggregate over empty input still yields one row
+            # (COUNT = 0, SUM = 0; MIN/MAX/AVG stay unbound)
+            self._carry = self._open_carry(0)
+            self._close_carry()
+        self.stats.extra["group_runs"] = self._runs
+        self.stats.extra["segment_reduce"] = self._sr_calls
+        self.stats.extra["segment_reduce_ms"] = round(self._sr_ms * 1e3, 3)
+        if self._dd_calls:
+            self.stats.extra["distinct_dedup"] = self._dd_calls
+            self.stats.extra["distinct_dedup_ms"] = round(self._dd_ms * 1e3, 3)
         self._drained = True
+
+    def _batch_stats(self, keys: np.ndarray, cb: ColumnBatch, n_runs: int,
+                     seg=None):
+        """Per-run partial arrays for every aggregate, one segment_reduce
+        dispatch per distinct (var, stat) pair — all sharing the batch's
+        precomputed ``seg`` boundaries (the within-run sort of the distinct
+        path permutes rows only inside runs, so the boundaries coincide).
+        Returns (stats, dinfo): stats[ai][stat] is a (n_runs,) float64
+        array; dinfo[ai] is the (sorted_codes, keep_mask) pair used to
+        slice the unique bound codes of a boundary run out of the sorted
+        batch."""
+        col_cache: Dict[int, Dict[str, np.ndarray]] = {}
+        dsort_cache: Dict[int, Tuple[np.ndarray, ...]] = {}
+        job_cache: Dict[Tuple[int, str], np.ndarray] = {}
+
+        def cols_of(var: int) -> Dict[str, np.ndarray]:
+            c = col_cache.get(var)
+            if c is None:
+                codes = cb.column(var)
+                vals = self.dictionary.numeric_of(codes)
+                c = {"codes": codes, "vals": vals, "valid": ~np.isnan(vals)}
+                col_cache[var] = c
+            return c
+
+        def dsort_of(var: int) -> Tuple[np.ndarray, ...]:
+            d = dsort_cache.get(var)
+            if d is None:
+                c = cols_of(var)
+                order = np.lexsort((c["codes"], keys))
+                skeys = keys[order]
+                scodes = c["codes"][order]
+                # adjacent-unique over sorted (group, code) pairs — the
+                # frontier_dedup kernel with an empty visited set; codes are
+                # shifted by one so NULL (-1) stays in the kernel's
+                # non-negative pair domain
+                t0 = time.perf_counter()
+                uniq = np.asarray(ops.frontier_dedup(
+                    skeys, scodes + np.int32(1), _EMPTY_I32, _EMPTY_I32,
+                    backend=self.backend,
+                ), dtype=bool)
+                self._dd_ms += time.perf_counter() - t0
+                self._dd_calls += 1
+                keep = uniq & (scodes >= 0)  # first occurrence AND bound
+                svals = c["vals"][order]
+                d = (skeys, scodes, svals, keep)
+                dsort_cache[var] = d
+            return d
+
+        def job(var: Optional[int], stat: str) -> np.ndarray:
+            key = (-1 if var is None else var, stat)
+            out = job_cache.get(key)
+            if out is not None:
+                return out
+            if stat == "cnt":
+                out = self._reduce(keys, None, "count", seg)
+            elif stat in ("bnd", "nn", "sum", "min", "max"):
+                c = cols_of(var)
+                if stat == "bnd":
+                    out = self._reduce(
+                        keys, (c["codes"] >= 0).astype(np.float64), "sum", seg)
+                elif stat == "nn":
+                    out = self._reduce(keys, c["valid"].astype(np.float64), "sum", seg)
+                elif stat == "sum":
+                    out = self._reduce(
+                        keys, np.where(c["valid"], c["vals"], 0.0), "sum", seg)
+                elif stat == "min":
+                    out = self._reduce(
+                        keys, np.where(c["valid"], c["vals"], np.inf), "min", seg)
+                else:
+                    out = self._reduce(
+                        keys, np.where(c["valid"], c["vals"], -np.inf), "max", seg)
+            else:  # distinct stats run over the (group, code)-sorted batch
+                skeys, _, svals, keep = dsort_of(var)
+                if stat == "dbnd":
+                    out = self._reduce(skeys, keep.astype(np.float64), "sum", seg)
+                elif stat == "dnn":
+                    dv = keep & ~np.isnan(svals)
+                    out = self._reduce(skeys, dv.astype(np.float64), "sum", seg)
+                else:  # dsum
+                    dv = keep & ~np.isnan(svals)
+                    out = self._reduce(skeys, np.where(dv, svals, 0.0), "sum", seg)
+            assert len(out) == n_runs
+            job_cache[key] = out
+            return out
+
+        stats = [
+            {stat: job(a.var, stat) for stat in need}
+            for a, need in zip(self.aggs, self._needs)
+        ]
+        dinfo = {
+            ai: (dsort_of(self.aggs[ai].var)[1], dsort_of(self.aggs[ai].var)[3])
+            for ai in self._dset_aggs
+        }
+        return stats, dinfo
 
     def _consume_batch(self, keys: np.ndarray, cb: ColumnBatch) -> None:
         run_keys, starts, lengths = vecops.run_boundaries(keys)
         n_runs = len(run_keys)
-        # merge first run into carry if it continues the open group
-        first_complete = 0
-        if self._carry.key is not None and n_runs and int(run_keys[0]) == self._carry.key:
-            self._merge_into_carry(cb, keys, 0, int(lengths[0]))
-            first_complete = 1
-            if n_runs > 1:
-                # the carried group is now provably complete
-                self._close_carry()
-        elif self._carry.key is not None and n_runs:
-            self._close_carry()
-        # all complete runs except possibly the last (it may span boundary)
-        for i in range(first_complete, n_runs):
-            is_last = i == n_runs - 1
-            s, ln = int(starts[i]), int(lengths[i])
-            if is_last:
-                self._carry = _AggState(key=int(run_keys[i]))
-                self._merge_into_carry(cb, keys, s, ln)
+        if n_runs == 0:
+            return
+        self._runs += n_runs
+        # one boundary derivation per batch, shared by every reduction
+        seg_ids = (
+            np.repeat(np.arange(n_runs), lengths)
+            if any(a.var is not None for a in self.aggs)
+            else None
+        )
+        stats, dinfo = self._batch_stats(
+            keys, cb, n_runs, seg=(run_keys, lengths, seg_ids)
+        )
+        i0 = 0
+        if self._carry.key is not None:
+            if int(run_keys[0]) == self._carry.key:
+                # first run continues the open group: fold its partials in
+                self._merge_run(stats, dinfo, 0, starts, lengths)
+                i0 = 1
+                if n_runs > 1:
+                    self._close_carry()
             else:
-                self._carry = _AggState(key=int(run_keys[i]))
-                self._merge_into_carry(cb, keys, s, ln)
                 self._close_carry()
+        last = n_runs - 1
+        if last > i0:
+            # every interior run is provably complete: finalize vectorized
+            sl = slice(i0, last)
+            self._out_keys.append(run_keys[sl].copy())
+            for ai, a in enumerate(self.aggs):
+                part = {k: v[sl] for k, v in stats[ai].items()}
+                self._out_vals[ai].append(self._final(a, part))
+        if last >= i0:
+            # the last run may span the batch boundary: it becomes the carry
+            self._carry = self._open_carry(int(run_keys[last]))
+            self._merge_run(stats, dinfo, last, starts, lengths)
 
-    def _merge_into_carry(self, cb: ColumnBatch, keys: np.ndarray, s: int, ln: int) -> None:
+    def _open_carry(self, key: int) -> _Carry:
+        return _Carry(
+            key=key,
+            stats=[
+                {s: _SCALAR_INIT[s] for s in need if s not in _DISTINCT_STATS}
+                for need in self._needs
+            ],
+            dcodes={},
+        )
+
+    def _merge_run(self, stats, dinfo, r: int, starts, lengths) -> None:
         c = self._carry
-        if c.sums is None:
-            c.sums, c.mins, c.maxs = {}, {}, {}
-            c.counts, c.distinct = {}, {}
-        c.count += ln
-        for ai, a in enumerate(self.aggs):
-            if a.var is None:  # COUNT(*)
-                continue
-            codes = cb.column(a.var)[s : s + ln]
-            if a.distinct:
-                c.distinct.setdefault(ai, set()).update(np.unique(codes).tolist())
-                continue
-            vals = self.dictionary.numeric_of(codes)
-            ok = ~np.isnan(vals)
-            v = vals[ok]
-            c.counts[ai] = c.counts.get(ai, 0.0) + float(ok.sum())
-            if len(v):
-                c.sums[ai] = c.sums.get(ai, 0.0) + float(v.sum())
-                c.mins[ai] = min(c.mins.get(ai, np.inf), float(v.min()))
-                c.maxs[ai] = max(c.maxs.get(ai, -np.inf), float(v.max()))
+        for ai in range(len(self.aggs)):
+            st = c.stats[ai]
+            for k, arr in stats[ai].items():
+                if k in _DISTINCT_STATS:
+                    continue  # folded through the code set below
+                if k == "min":
+                    st["min"] = min(st["min"], float(arr[r]))
+                elif k == "max":
+                    st["max"] = max(st["max"], float(arr[r]))
+                else:
+                    st[k] += float(arr[r])
+            if ai in dinfo:
+                scodes, keep = dinfo[ai]
+                s, e = int(starts[r]), int(starts[r] + lengths[r])
+                run_codes = scodes[s:e][keep[s:e]]  # sorted unique by constr.
+                c.dcodes.setdefault(ai, []).append(run_codes.copy())
 
     def _close_carry(self) -> None:
         c = self._carry
-        if c.key is None and c.count == 0:
+        if c.key is None:
             return
-        self._out_keys.append(c.key if c.key is not None else 0)
+        self._out_keys.append(np.asarray([c.key], dtype=np.int32))
         for ai, a in enumerate(self.aggs):
-            if a.func == "count" and a.var is None:
-                val = c.count
-            elif a.distinct:
-                val = float(len((c.distinct or {}).get(ai, set())))
-            elif a.func == "count":
-                val = (c.counts or {}).get(ai, 0.0)
-            elif a.func == "sum":
-                val = (c.sums or {}).get(ai, 0.0)
-            elif a.func == "min":
-                val = (c.mins or {}).get(ai, np.nan)
-            elif a.func == "max":
-                val = (c.maxs or {}).get(ai, np.nan)
-            elif a.func == "avg":
-                cnt = (c.counts or {}).get(ai, 0.0)
-                val = (c.sums or {}).get(ai, 0.0) / cnt if cnt else np.nan
-            else:
-                raise ValueError(a.func)
-            self._out_vals[ai].append(val)
-        self._carry = _AggState()
+            st = dict(c.stats[ai])
+            if ai in self._dset_aggs:
+                chunks = c.dcodes.get(ai)
+                codes = (
+                    np.unique(np.concatenate(chunks)) if chunks else _EMPTY_I32
+                )
+                if not len(codes):
+                    st.update(dbnd=0.0, dnn=0.0, dsum=0.0)
+                else:
+                    vals = self.dictionary.numeric_of(codes)
+                    ok = ~np.isnan(vals)
+                    st.update(
+                        dbnd=float(len(codes)),
+                        dnn=float(ok.sum()),
+                        dsum=float(vals[ok].sum()) if ok.any() else 0.0,
+                    )
+            part = {k: np.asarray([v], dtype=np.float64) for k, v in st.items()}
+            self._out_vals[ai].append(self._final(a, part))
+        self._carry = _Carry()
+
+    @staticmethod
+    def _final(a: AggSpec, st: Dict[str, np.ndarray]) -> np.ndarray:
+        """Vectorized finalization: per-run float64 results, NaN marking an
+        UNBOUND output (mapped to NULL_ID at encode time, never a NaN term)."""
+        if a.var is None:
+            return st["cnt"]
+        if a.func == "count":
+            return st["dbnd"] if a.distinct else st["bnd"]
+        if a.func == "sum":
+            return st["dsum"] if a.distinct else st["sum"]
+        if a.func == "min":
+            return np.where(st["nn"] > 0, st["min"], np.nan)
+        if a.func == "max":
+            return np.where(st["nn"] > 0, st["max"], np.nan)
+        if a.func == "avg":
+            num = st["dsum"] if a.distinct else st["sum"]
+            den = st["dnn"] if a.distinct else st["nn"]
+            return np.where(den > 0, num / np.maximum(den, 1.0), np.nan)
+        raise ValueError(a.func)
 
     # -- emission ----------------------------------------------------------------
+
+    def _encode(self, vals: np.ndarray) -> np.ndarray:
+        """Bulk result encoding: one dictionary.encode per *distinct* value
+        (not per group), mapped back with one vectorized take; NaN rows
+        (unbound aggregates) become NULL_ID."""
+        codes = np.full(len(vals), NULL_ID, dtype=np.int32)
+        ok = ~np.isnan(vals)
+        if ok.any():
+            uniq, inv = np.unique(vals[ok], return_inverse=True)
+            ids = np.asarray(
+                [
+                    self.dictionary.encode(
+                        int(u) if float(u).is_integer() else float(u)
+                    )
+                    for u in uniq
+                ],
+                dtype=np.int32,
+            )
+            codes[ok] = ids[inv]
+        return codes
 
     def _next(self) -> Optional[ColumnBatch]:
         if not self._drained:
             self._consume_all()
-            if self.g is None and not self._out_keys:
-                # global aggregate over empty input still yields one row
-                self._carry = _AggState(key=0)
-                self._carry.count = 0.0
-                self._close_carry()
-        n = len(self._out_keys)
+        if self._enc_keys is None:
+            self._enc_keys = (
+                np.concatenate(self._out_keys) if self._out_keys else _EMPTY_I32
+            )
+            self._enc_cols = [
+                self._encode(
+                    np.concatenate(v) if v else np.zeros(0, dtype=np.float64)
+                )
+                for v in self._out_vals
+            ]
+        n = len(self._enc_keys)
         if self._emitted >= n:
             return None
         hi = min(self._emitted + self.batch_size, n)
         sl = slice(self._emitted, hi)
-        cols = []
-        if self.g is not None:
-            cols.append(np.asarray(self._out_keys[sl], dtype=np.int32))
-        for ai, a in enumerate(self.aggs):
-            vals = self._out_vals[ai][sl]
-            codes = [
-                self.dictionary.encode(
-                    int(v) if a.func == "count" or a.distinct or float(v).is_integer() else float(v)
-                )
-                for v in vals
-            ]
-            cols.append(np.asarray(codes, dtype=np.int32))
+        cols = [self._enc_keys[sl]] if self.g is not None else []
+        cols.extend(c[sl] for c in self._enc_cols)
         self._emitted = hi
-        return ColumnBatch.from_columns(self.var_ids(), cols, self.g)
+        return ColumnBatch.from_columns(self.var_ids(), cols, self.g, pool=self.pool)
 
     def _reset(self) -> None:
         self.child.reset()
         self._out_keys = []
         self._out_vals = [[] for _ in self.aggs]
-        self._carry = _AggState()
+        self._carry = _Carry()
+        self._enc_keys = None
+        self._enc_cols = []
         self._emitted = 0
         self._drained = False
+        self._sr_calls = 0
+        self._sr_ms = 0.0
+        self._dd_calls = 0
+        self._dd_ms = 0.0
+        self._runs = 0
+
+
+# synthetic variable id for the packed composite group key (never collides
+# with parser-assigned ids, which are non-negative)
+_GID = -1
 
 
 class SortGroupBy(BatchOperator):
-    """General GROUP BY (multi-var or unsorted input): materialize, sort by
-    group keys, delegate to the streaming operator over a composite key."""
+    """General GROUP BY (multi-var or unsorted input): drain only the
+    needed columns from pooled batches, sort ONCE by a packed int64
+    composite key (vecops.pack_group_keys), assign dense group ids, and
+    stream the sorted runs through StreamingGroupBy."""
 
     def __init__(
         self,
@@ -227,13 +487,18 @@ class SortGroupBy(BatchOperator):
         aggs: Sequence[AggSpec],
         dictionary: Dictionary,
         batch_size: int = MAX_BATCH,
+        pool: Optional[BatchPool] = None,
+        backend: Optional[str] = None,
     ):
         self.child = child
         self.group_vars = tuple(group_vars)
         self.aggs = list(aggs)
         self.dictionary = dictionary
         self.batch_size = batch_size
+        self.pool = pool
+        self.backend = backend
         self._src: Optional[BatchOperator] = None
+        self._stream: Optional[StreamingGroupBy] = None
         super().__init__("Group", f"by={self.group_vars} (sort-based)")
 
     def var_ids(self) -> Tuple[int, ...]:
@@ -242,52 +507,77 @@ class SortGroupBy(BatchOperator):
     def children(self) -> List[BatchOperator]:
         return [self.child]
 
+    def _drain_needed(self, need: Tuple[int, ...]) -> np.ndarray:
+        """Materialize only the grouping + aggregate input columns,
+        recycling every consumed batch through the pool."""
+        blocks = []
+        while True:
+            b = self.child.next_batch()
+            if b is None:
+                break
+            cb = b.compact()
+            if cb.n_rows:
+                idx = [cb.col_index(v) for v in need]
+                blocks.append(cb.columns[idx, : cb.n_rows])  # fancy-index copy
+            cb.release()
+        if blocks:
+            return np.concatenate(blocks, axis=1)
+        return np.zeros((len(need), 0), dtype=np.int32)
+
     def _ensure(self) -> BatchOperator:
         if self._src is not None:
             return self._src
-        vars_, cols = materialize(self.child)
+        avars = tuple(
+            dict.fromkeys(a.var for a in self.aggs if a.var is not None)
+        )
+        need = tuple(dict.fromkeys(self.group_vars + avars))
+        cols = self._drain_needed(need)
         n = cols.shape[1]
-        key_cols = [cols[vars_.index(v)] for v in self.group_vars]
-        order = np.lexsort(tuple(reversed(key_cols))) if key_cols else np.arange(n)
-        cols = cols[:, order]
-        key_cols = [cols[vars_.index(v)] for v in self.group_vars]
-        # composite group id: run boundaries across all key columns
-        if n:
-            change = np.zeros(n, dtype=bool)
-            change[0] = True
-            for kc in key_cols:
-                change[1:] |= kc[1:] != kc[:-1]
-            gid = np.cumsum(change).astype(np.int32) - 1
+        key_rows = cols[: 0] if not self.group_vars else cols[
+            [need.index(v) for v in self.group_vars]
+        ]
+        if self.group_vars and n:
+            packed = vecops.pack_group_keys(key_rows)
+            order = np.argsort(packed, kind="stable")
+            cols = cols[:, order]
+            key_rows = cols[[need.index(v) for v in self.group_vars]]
+            _, starts, lengths = vecops.run_boundaries(packed[order])
+            gid = np.repeat(
+                np.arange(len(starts), dtype=np.int32), lengths
+            )
         else:
-            gid = np.zeros(0, dtype=np.int32)
+            gid = np.zeros(n, dtype=np.int32)
+            starts = np.zeros(1 if n else 0, dtype=np.int64)
 
+        inner = np.concatenate(
+            [gid[None, :], cols[[need.index(v) for v in avars]]], axis=0
+        ) if avars else gid[None, :]
         inner_src = MaterializedSource(
-            vars_ + (-1,),
-            np.concatenate([cols, gid[None, :]], axis=0),
-            -1,
-            self.batch_size,
-            name="GroupSortBuffer",
+            (_GID,) + avars, inner, _GID, self.batch_size,
+            name="GroupSortBuffer", pool=self.pool,
         )
-        stream = StreamingGroupBy(
-            inner_src, -1, self.aggs, self.dictionary, self.batch_size
+        self._stream = StreamingGroupBy(
+            inner_src, _GID, self.aggs, self.dictionary, self.batch_size,
+            backend=self.backend,
         )
-        # drain stream, then translate composite gid back to the key columns
-        svars, scols = materialize(stream)
+        # drain the stream (small: one row per group), then translate the
+        # dense gid back to the group-key column values via each group's
+        # first sorted row
+        svars, scols = materialize(self._stream)
         gids = scols[0]
-        first_row = np.zeros(len(gids), dtype=np.int64)
-        if n:
-            starts = np.nonzero(change)[0]
-            first_row = starts[gids]
-        out_cols = [kc[first_row] for kc in key_cols]
-        for ai in range(len(self.aggs)):
-            out_cols.append(scols[1 + ai])
+        first_row = starts[gids] if n else np.zeros(0, dtype=np.int64)
+        out_cols = [kr[first_row] for kr in key_rows]
+        out_cols.extend(scols[1 + ai] for ai in range(len(self.aggs)))
         block = (
-            np.stack(out_cols, axis=0)
+            np.stack(out_cols, axis=0).astype(np.int32)
             if out_cols
             else np.zeros((0, 0), dtype=np.int32)
         )
+        for k, v in self._stream.stats.extra.items():
+            self.stats.extra[k] = v
         self._src = MaterializedSource(
-            self.var_ids(), block.astype(np.int32), None, self.batch_size, name="GroupOut"
+            self.var_ids(), block, None, self.batch_size, name="GroupOut",
+            pool=self.pool,
         )
         return self._src
 
@@ -297,6 +587,7 @@ class SortGroupBy(BatchOperator):
     def _reset(self) -> None:
         self.child.reset()
         self._src = None
+        self._stream = None
 
 
 class StreamingDistinct(BatchOperator):

@@ -53,6 +53,7 @@ class FilterOp(BatchOperator):
         expr: Expr,
         dictionary: Optional[Dictionary],
         program=_UNSET,
+        name: str = "Filter",  # "Having" for the post-grouping stage
     ):
         self.child = child
         self.expr = expr
@@ -63,7 +64,7 @@ class FilterOp(BatchOperator):
             else program
         )
         self._timer = ProgramTimer()
-        super().__init__("Filter", "" if self.program is None else "[vm]")
+        super().__init__(name, "" if self.program is None else "[vm]")
         if self.program is not None:
             self.stats.extra["expr_ops"] = len(self.program.instrs)
 

@@ -76,6 +76,11 @@ class Parser:
         self.toks = tokenize(text)
         self.i = 0
         self.vt = A.VarTable()
+        # inside a HAVING constraint, aggregate calls are legal expression
+        # primaries; they desugar to (possibly hidden) AggSpecs collected
+        # here and referenced by their out var (DESIGN.md §10)
+        self._agg_specs: Optional[List[A.AggSpec]] = None
+        self._hidden_aggs: List[A.AggSpec] = []
 
     # -- token helpers ------------------------------------------------------------
 
@@ -166,6 +171,28 @@ class Parser:
                 else:
                     break
 
+        # HAVING (SPARQL 1.1 §11): one or more parenthesized constraints
+        # over the aggregate output, implicitly AND-ed. Aggregate calls in
+        # the constraints desugar to hidden AggSpecs (see _primary).
+        having: Optional[A.Expr] = None
+        if self.accept_kw("having"):
+            self._agg_specs = aggs
+            constraints: List[A.Expr] = []
+            while self.peek().kind == "OP" and self.peek().value == "(":
+                self.expect_op("(")
+                constraints.append(self._expr())
+                self.expect_op(")")
+            self._agg_specs = None
+            if not constraints:
+                raise SyntaxError(
+                    f"HAVING requires a parenthesized constraint at "
+                    f"{self.peek().value!r}"
+                )
+            having = (
+                constraints[0] if len(constraints) == 1
+                else A.And(tuple(constraints))
+            )
+
         # ORDER BY keys are full expressions (ASC/DESC(expr) or a bare
         # var); expression keys desugar to a BIND below
         order_specs: List[Tuple[A.Expr, bool]] = []
@@ -197,12 +224,40 @@ class Parser:
             node = A.Extend(out, e, node)
         for v, e in group_binds:
             node = A.Extend(v, e, node)
-        if aggs or group_vars:
-            node = A.GroupAgg(group_vars, aggs, node)
+        if having is not None:
+            # SPARQL §18.2.4.4: HAVING sees only the group keys and
+            # aggregate results — anything else must fail at parse time,
+            # not as an internal error downstream
+            allowed = (
+                set(group_vars)
+                | {a.out for a in aggs}
+                | {a.out for a in self._hidden_aggs}
+            )
+            for v in A.expr_vars(having):
+                if v not in allowed:
+                    raise SyntaxError(
+                        "HAVING may only reference group variables or "
+                        f"aggregates; ?{self.vt.name(v)} is neither"
+                    )
+        if aggs or group_vars or having is not None:
+            # grouping projects only its keys and aggregate results —
+            # anything else fails here, not as an internal error downstream
+            visible = set(group_vars) | {a.out for a in aggs}
+            for v in proj_vars:
+                if v not in visible:
+                    raise SyntaxError(
+                        f"SELECT variable ?{self.vt.name(v)} must be a "
+                        "GROUP BY key or an aggregate result when "
+                        "grouping is used"
+                    )
+            # hidden HAVING aggregates ride along in the spec list; the
+            # final projection below strips their out columns
+            node = A.GroupAgg(group_vars, aggs + self._hidden_aggs, node, having)
             if not proj_vars:
                 proj_vars = group_vars + [a.out for a in aggs]
         if select_all or not proj_vars:
-            proj_vars = list(A.plan_vars(node))
+            hidden = {a.out for a in self._hidden_aggs}
+            proj_vars = [v for v in A.plan_vars(node) if v not in hidden]
         order_keys: List[A.SortKey] = []
         order_binds: List[Tuple[int, A.Expr]] = []
         for e, asc in order_specs:
@@ -261,6 +316,14 @@ class Parser:
             self.expect_op("(")
             dist = self.accept_kw("distinct")
             if self.accept_op("*"):
+                if dist:
+                    # would require whole-solution dedup, which no engine
+                    # implements — reject instead of silently answering
+                    # with the plain row count
+                    raise SyntaxError(
+                        "COUNT(DISTINCT *) is not supported; count a "
+                        "specific variable instead"
+                    )
                 var = None
             else:
                 var = self.vt.var(self.next().value)
@@ -520,6 +583,19 @@ class Parser:
             e = self._expr()
             self.expect_op(")")
             return e
+        if self._agg_specs is not None and t.kind == "KW" and t.value.lower() in (
+            "count", "sum", "min", "max", "avg"
+        ):
+            # aggregate call inside HAVING: reuse a matching SELECT-clause
+            # spec (so `HAVING (SUM(?v) > k)` and `(SUM(?v) AS ?s)` share
+            # one accumulator) or add a hidden spec with a fresh out var
+            func, var, dist = self._try_aggregate()
+            for a in self._agg_specs + self._hidden_aggs:
+                if (a.func, a.var, a.distinct) == (func, var, dist):
+                    return A.VarRef(a.out)
+            out = self.vt.fresh("_agg")
+            self._hidden_aggs.append(A.AggSpec(func, var, dist, out))
+            return A.VarRef(out)
         if t.kind == "KW" and t.value.lower() == "bound":
             self.next()
             self.expect_op("(")

@@ -129,6 +129,17 @@ class PGroup(PhysNode):
 
 
 @dataclasses.dataclass
+class PHaving(PhysNode):
+    """HAVING: a mask-mode expression-VM filter stage over the aggregate
+    output (DESIGN.md §10). Kept distinct from PFilter so plans show the
+    post-grouping stage and translators can keep row/batch parity."""
+
+    expr: A.Expr
+    child: "Phys"
+    program: Optional[object] = None  # plan-time compiled ExprProgram
+
+
+@dataclasses.dataclass
 class POrderBy(PhysNode):
     child: "Phys"
     keys: Tuple[A.SortKey, ...]
@@ -149,14 +160,15 @@ class PUnion(PhysNode):
 
 Phys = TUnion[
     PScan, PPathScan, PPathExpand, PSort, PMergeJoin, PLookupJoin, PCross,
-    PFilter, PExtend, PProject, PDistinct, PGroup, POrderBy, PSlice, PUnion,
+    PFilter, PExtend, PProject, PDistinct, PGroup, PHaving, POrderBy,
+    PSlice, PUnion,
 ]
 
 
 def phys_vars(n: Phys) -> Tuple[int, ...]:
     if isinstance(n, (PScan, PPathScan, PPathExpand)):
         return n.pattern.vars()
-    if isinstance(n, (PSort, PFilter, PSlice)):
+    if isinstance(n, (PSort, PFilter, PHaving, PSlice)):
         return phys_vars(n.child)
     if isinstance(n, PDistinct):
         return phys_vars(n.child)
@@ -198,7 +210,7 @@ def phys_sorted_by(n: Phys) -> Optional[int]:
         return None if n.mode == "left_outer" else n.var
     if isinstance(n, PLookupJoin):
         return phys_sorted_by(n.probe)
-    if isinstance(n, (PFilter, PSlice)):
+    if isinstance(n, (PFilter, PHaving, PSlice)):
         return phys_sorted_by(n.child)
     if isinstance(n, PExtend):
         return phys_sorted_by(n.child)
@@ -320,6 +332,13 @@ class Planner:
                 streaming = True
             out = PGroup(child, gv, tuple(node.aggs), streaming)
             out.est_rows = max(child.est_rows * 0.1, 1)
+            if node.having is not None:
+                h = PHaving(
+                    node.having, out,
+                    program=self.compile_expr(node.having, "mask"),
+                )
+                h.est_rows = max(out.est_rows * 0.5, 1)
+                return h
             return out
         if isinstance(node, A.OrderBy):
             child = self._plan(node.child)
@@ -565,6 +584,8 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
         )
     if isinstance(n, PFilter):
         return f"{pad}Filter est={n.est_rows:.0f}\n" + explain(n.child, var_table, indent + 1)
+    if isinstance(n, PHaving):
+        return f"{pad}Having est={n.est_rows:.0f}\n" + explain(n.child, var_table, indent + 1)
     if isinstance(n, PExtend):
         return f"{pad}Bind({vname(n.var)})\n" + explain(n.child, var_table, indent + 1)
     if isinstance(n, PProject):

@@ -301,6 +301,44 @@ def multiway_equal_mask(cols_l: np.ndarray, cols_r: np.ndarray) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# composite group keys (multi-key GROUP BY, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+
+def pack_group_keys(key_cols: np.ndarray) -> np.ndarray:
+    """Pack a (k, n) block of int32 group-key columns (NULL_ID == -1
+    allowed) into ONE int64 composite key whose ordering and equality match
+    the lexicographic order of the columns — so multi-key grouping needs a
+    single-key argsort instead of a k-column lexsort.
+
+    Columns pack most-significant-first with per-column ranges
+    max+2 (codes shift by one so NULL packs as 0). When the range product
+    would overflow 63 bits, falls back to a lexsort-based dense rank, which
+    preserves both ordering and group boundaries."""
+    key_cols = np.asarray(key_cols)
+    k, n = key_cols.shape
+    assert k >= 1
+    packed = key_cols[0].astype(np.int64) + 1
+    span = int(key_cols[0].max(initial=-1)) + 2
+    for c in key_cols[1:]:
+        r = int(c.max(initial=-1)) + 2
+        if span * r >= 1 << 62:
+            order = np.lexsort(tuple(key_cols[::-1]))
+            srt = key_cols[:, order]
+            change = np.zeros(n, dtype=bool)
+            if n:
+                change[0] = True
+                for row in srt:
+                    change[1:] |= row[1:] != row[:-1]
+            out = np.empty(n, dtype=np.int64)
+            out[order] = np.cumsum(change) - 1
+            return out
+        packed = packed * r + (c.astype(np.int64) + 1)
+        span *= r
+    return packed
+
+
+# ---------------------------------------------------------------------------
 # sorted segment aggregation (paper §3.3)
 # ---------------------------------------------------------------------------
 
@@ -316,6 +354,7 @@ def segment_reduce(
     keys: np.ndarray,
     values: Optional[np.ndarray],
     func: str,
+    seg: Optional[Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Per-run aggregate over a batch sorted by ``keys``.
 
@@ -323,14 +362,24 @@ def segment_reduce(
     the numeric side-array) or None for COUNT(*). Associative partials merge
     across batches in the streaming operator (paper: count/min/max/avg are
     associative and merge across batches).
+
+    ``seg`` optionally carries precomputed (run_keys, lengths, seg_ids) for
+    ``keys`` so a caller issuing one reduction per statistic over the same
+    key column (the streaming GROUP BY) skips the per-call boundary
+    re-derivation; seg_ids may be None and is derived on demand.
     """
-    run_keys, starts, lengths = run_boundaries(keys)
+    if seg is None:
+        run_keys, _, lengths = run_boundaries(keys)
+        seg_ids = None
+    else:
+        run_keys, lengths, seg_ids = seg
     n_runs = len(run_keys)
     if n_runs == 0:
         return run_keys, np.zeros(0)
-    seg_ids = np.repeat(np.arange(n_runs), lengths)
     if func == "count":
         return run_keys, lengths.astype(np.float64)
+    if seg_ids is None:
+        seg_ids = np.repeat(np.arange(n_runs), lengths)
     assert values is not None
     if func == "sum":
         out = np.zeros(n_runs)

@@ -12,6 +12,7 @@ Select globally with REPRO_KERNEL_BACKEND or per call with backend=...
 
 from __future__ import annotations
 
+import collections
 import os
 from typing import Optional, Tuple
 
@@ -20,6 +21,24 @@ import numpy as np
 from repro.core import vecops
 
 _DEFAULT = os.environ.get("REPRO_KERNEL_BACKEND", "numpy")
+
+# process-wide dispatch ledger: every public wrapper below counts one entry
+# per call under its kernel name. Observability for tests and benchmarks —
+# e.g. a grouped query must show segment_reduce > 0 or the "vectorized
+# grouping" claim is hollow (tests/test_aggregate.py pins this).
+DISPATCH_COUNTS: "collections.Counter[str]" = collections.Counter()
+
+
+def dispatch_count(name: Optional[str] = None) -> int:
+    """Total kernel dispatches (or for one kernel) since process start /
+    last reset."""
+    if name is None:
+        return sum(DISPATCH_COUNTS.values())
+    return DISPATCH_COUNTS[name]
+
+
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
 
 
 def _backend(override: Optional[str]) -> str:
@@ -34,6 +53,7 @@ def join_expand(
     backend: Optional[str] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     be = _backend(backend)
+    DISPATCH_COUNTS["join_expand"] += 1
     if be == "numpy":
         return vecops.expand_cross(lstarts, llens, rstarts, rlens, cum, base, count)
     if be == "jax":
@@ -95,6 +115,7 @@ def gather_emit(
     (ri == -1), and fold secondary-key equality ``pairs`` into the validity
     mask — one dispatch per output block instead of per column."""
     be = _backend(backend)
+    DISPATCH_COUNTS["gather_emit"] += 1
     lsel, rsel, pairs = tuple(lsel), tuple(rsel), tuple(pairs)
     if be == "numpy":
         return vecops.gather_emit(lcols, rcols, li, ri, lsel, rsel, pairs,
@@ -153,6 +174,7 @@ def gather_emit(
 
 def sorted_search(keys, queries, side: str = "left", backend: Optional[str] = None):
     be = _backend(backend)
+    DISPATCH_COUNTS["sorted_search"] += 1
     if be == "numpy":
         return vecops.sorted_search(keys, queries, side)
     if be == "jax":
@@ -177,6 +199,7 @@ def frontier_dedup(
     first occurrence in the batch and absent from the sorted visited set
     (see vecops.frontier_dedup)."""
     be = _backend(backend)
+    DISPATCH_COUNTS["frontier_dedup"] += 1
     if be == "numpy":
         return vecops.frontier_dedup(cand_hi, cand_lo, vis_hi, vis_lo)
     cand_hi = np.asarray(cand_hi, dtype=np.int32)
@@ -197,11 +220,16 @@ def frontier_dedup(
 # -- segment aggregation ---------------------------------------------------------------
 
 
-def segment_reduce(keys, values, func: str, backend: Optional[str] = None):
-    """(run_keys, per-run aggregates) over sorted keys."""
+def segment_reduce(keys, values, func: str, backend: Optional[str] = None,
+                   seg=None):
+    """(run_keys, per-run aggregates) over sorted keys. ``seg`` is the
+    optional precomputed (run_keys, lengths, seg_ids) of the key column
+    (see vecops.segment_reduce); the scan backends derive boundaries
+    in-kernel and ignore it."""
     be = _backend(backend)
+    DISPATCH_COUNTS["segment_reduce"] += 1
     if be == "numpy":
-        return vecops.segment_reduce(keys, values, func)
+        return vecops.segment_reduce(keys, values, func, seg)
     # jax / pallas: segmented scan then pick run ends
     keys = np.asarray(keys)
     n = len(keys)
@@ -238,6 +266,7 @@ def expr_eval(prog, icols, fcols, backend: Optional[str] = None):
     oracle; jax runs the jit'd float32 reference; pallas runs the fused
     kernel (whole program, one dispatch per batch)."""
     be = _backend(backend)
+    DISPATCH_COUNTS["expr_eval"] += 1
     icols = np.ascontiguousarray(icols, dtype=np.int32)
     if be == "numpy":
         from repro.core.exprs.vm import _interp
@@ -264,6 +293,7 @@ def expr_eval(prog, icols, fcols, backend: Optional[str] = None):
 
 def radix_partition(keys, n_parts: int, backend: Optional[str] = None):
     be = _backend(backend)
+    DISPATCH_COUNTS["radix_partition"] += 1
     if be == "numpy":
         pid = vecops.hash_partition(np.asarray(keys), n_parts)
         return pid, vecops.partition_histogram(pid, n_parts)

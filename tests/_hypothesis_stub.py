@@ -10,7 +10,7 @@ requirements-dev.txt) this module is never imported and the genuine
 shrinking/replay machinery is used instead.
 
 Only the strategies the test suite uses are implemented: integers, lists,
-tuples, sampled_from, builds, data.
+tuples, sampled_from, builds, data, none, one_of.
 """
 
 from __future__ import annotations
@@ -47,6 +47,16 @@ def tuples(*elems):
 def sampled_from(seq):
     seq = list(seq)
     return _Strategy(lambda rng: seq[int(rng.randint(len(seq)))])
+
+
+def none():
+    return _Strategy(lambda rng: None)
+
+
+def one_of(*strategies):
+    return _Strategy(
+        lambda rng: strategies[int(rng.randint(len(strategies)))]._draw(rng)
+    )
 
 
 def builds(fn, *args):
@@ -112,7 +122,8 @@ def _as_module():
     hyp.settings = settings
     hyp.HealthCheck = HealthCheck
     st = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "lists", "tuples", "sampled_from", "builds", "data"):
+    for name in ("integers", "lists", "tuples", "sampled_from", "builds",
+                 "data", "none", "one_of"):
         setattr(st, name, globals()[name])
     hyp.strategies = st
     return hyp, st
