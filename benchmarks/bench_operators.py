@@ -110,6 +110,103 @@ def bench_lookup_join(rng, n_probe=200000, n_build=50000, n_keys=20000, batch=40
     return _drain_timed(make)
 
 
+def bench_hash_vs_sort_merge(rng, n=200_000, multi_key=False, reps=3,
+                             oracle_n=None):
+    """The §11 acceptance workloads: 200k-row unsorted high-cardinality
+    joins. ``sort_merge`` is the pre-PR plan (PSort on BOTH inputs feeding
+    MergeJoin — what every unsorted binary join paid); ``hash`` is the
+    radix-partitioned HashJoin probing the same streams unsorted.
+
+    single-key: 100k distinct codes, ~2 rows per key on each side.
+    multi-key (the ISSUE-5 >=5x acceptance row): two shared variables
+    whose COMPOSITE is high-cardinality (~200k pairs) but whose primary
+    alone is low-distinct (2k) — the merge join can only sort/merge on
+    the primary and must expand every primary-run cross product before
+    the secondary-key equality pass discards ~99% of it (§3.2 Multiple
+    Join Keys); the hash join keys on the packed composite and never
+    materializes the blowup.
+
+    Exact multiset parity is asserted against the legacy row engine
+    (RowHashJoin; ``oracle_n`` caps the slice the row oracle chews
+    through in fast/CI mode)."""
+    from repro.core.operators.hash_join import HashJoin
+    from repro.core.operators.sort import SortByVarOp
+    from repro.core.legacy.operators import RowHashJoin
+
+    if multi_key:
+        lv, rv, keys = (0, 1, 2), (0, 1, 3), (0, 1)
+        l = np.stack([rng.randint(0, n // 100, n), rng.randint(0, 100, n),
+                      rng.randint(0, 1000, n)]).astype(np.int32)
+        r = np.stack([rng.randint(0, n // 100, n), rng.randint(0, 100, n),
+                      rng.randint(0, 1000, n)]).astype(np.int32)
+    else:
+        lv, rv, keys = (0, 1), (0, 2), (0,)
+        l = np.stack([rng.permutation(n) % (n // 2),
+                      rng.randint(0, 1000, n)]).astype(np.int32)
+        r = np.stack([rng.permutation(n) % (n // 2),
+                      rng.randint(0, 1000, n)]).astype(np.int32)
+
+    def make_hash():
+        pool = BatchPool()
+        return HashJoin(
+            MaterializedSource(lv, l, None, 4096, pool=pool),
+            MaterializedSource(rv, r, None, 4096, pool=pool),
+            keys, pool=pool,
+        )
+
+    def make_sort_merge():
+        pool = BatchPool()
+        return MergeJoin(
+            SortByVarOp(MaterializedSource(lv, l, None, 4096, pool=pool),
+                        0, pool=pool),
+            SortByVarOp(MaterializedSource(rv, r, None, 4096, pool=pool),
+                        0, pool=pool),
+            0, pool=pool,
+        )
+
+    out_h, dt_h = _drain_timed(make_hash, reps)
+    out_m, dt_m = _drain_timed(make_sort_merge, reps if not multi_key else 1)
+    assert out_h == out_m, (out_h, out_m)
+
+    # legacy row-engine oracle: exact multiset parity on the (possibly
+    # sliced) workload
+    oracle_n = n if oracle_n is None else min(oracle_n, n)
+    lo, ro = l[:, :oracle_n], r[:, :oracle_n]
+    t0 = time.perf_counter()
+    j = RowHashJoin(
+        BatchToRow(MaterializedSource(lv, lo, None, 4096)),
+        BatchToRow(MaterializedSource(rv, ro, None, 4096)),
+        keys,
+    )
+    out_vars = tuple(dict.fromkeys(lv + rv))
+    row_out = {}
+    while True:
+        rrow = j.next_row()
+        if rrow is None:
+            break
+        key = tuple(rrow[v] for v in out_vars)
+        row_out[key] = row_out.get(key, 0) + 1
+    dt_r = time.perf_counter() - t0
+
+    chk = HashJoin(
+        MaterializedSource(lv, lo, None, 4096),
+        MaterializedSource(rv, ro, None, 4096), keys,
+    )
+    assert tuple(chk.var_ids()) == out_vars
+    got = {}
+    n_chk = 0
+    while True:
+        b = chk.next_batch()
+        if b is None:
+            break
+        for rrow in b.compact().to_rows_array().tolist():
+            key = tuple(rrow)
+            got[key] = got.get(key, 0) + 1
+            n_chk += 1
+    assert got == row_out, "hash join != legacy row engine"
+    return (out_h, dt_h), (out_m, dt_m), (n_chk, dt_r, oracle_n)
+
+
 def _expr_workload(rng, n):
     """The acceptance workload (ISSUE 3): conjunctive FILTER + arithmetic
     + one string predicate over >= 100k rows. Codes 0..999 decode to their
@@ -376,6 +473,35 @@ def run(seed: int = 0, fast: bool = False) -> str:
                                     n_keys=4000 if fast else 20000)
     suite.add("lookup_join_batch", dt_l * 1e6,
               f"tuples_out={out_l};Mtps={out_l / dt_l / 1e6:.1f}")
+
+    # hash-join suite (DESIGN.md §11): 200k-row unsorted high-cardinality
+    # joins, radix-hash vs the pre-PR double-PSort+MergeJoin plan, exact
+    # multiset parity vs the legacy row engine asserted inside. The
+    # multi-key row is the ISSUE-5 acceptance comparison (>= 5x floor on
+    # the full-size run): merge can only order on the primary var and
+    # pays the §3.2 secondary-key expansion blowup.
+    n_hj = 40_000 if fast else 200_000
+    oracle_hj = 5_000 if fast else None
+    (o_h, t_h), (o_sm, t_sm), (o_r, t_r, n_r) = bench_hash_vs_sort_merge(
+        rng, n=n_hj, multi_key=False, oracle_n=oracle_hj)
+    suite.add("hash_join_batch", t_h * 1e6,
+              f"tuples_out={o_h};Mtps={o_h / t_h / 1e6:.1f};"
+              f"speedup_vs_sort_merge={t_sm / t_h:.1f}x")
+    suite.add("sort_merge_join_batch", t_sm * 1e6,
+              f"tuples_out={o_sm};Mtps={o_sm / t_sm / 1e6:.1f}")
+    (o_h2, t_h2), (o_sm2, t_sm2), (o_r2, t_r2, n_r2) = bench_hash_vs_sort_merge(
+        rng, n=n_hj, multi_key=True, oracle_n=oracle_hj)
+    speedup = t_sm2 / t_h2
+    suite.add("hash_join_multikey_batch", t_h2 * 1e6,
+              f"tuples_out={o_h2};Mtps={o_h2 / t_h2 / 1e6:.1f};"
+              f"speedup_vs_sort_merge={speedup:.1f}x")
+    suite.add("sort_merge_join_multikey_batch", t_sm2 * 1e6,
+              f"tuples_out={o_sm2};Mtps={o_sm2 / t_sm2 / 1e6:.1f}")
+    suite.add("hash_join_row_oracle", (t_r + t_r2) * 1e6,
+              f"tuples_out={o_r + o_r2};rows={n_r + n_r2};"
+              f"Mtps={(o_r + o_r2) / 1e6 / (t_r + t_r2):.3f}")
+    if not fast:
+        assert speedup >= 5.0, f"acceptance: hash vs sort+merge {speedup:.1f}x < 5x"
 
     # expression VM suite (DESIGN.md §9): interpreted tree walk vs VM
     # backends on the FILTER acceptance workload (arith + conjunction +

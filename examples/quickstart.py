@@ -94,6 +94,34 @@ for row in path_result.decoded(store.dict):
 print("\npath profile:")
 print(path_result.profile())
 
+# 6b. join strategies (DESIGN.md §11): EXPLAIN-style plan output. The
+# UNION's output arrives unsorted on ?b, so sorting both inputs for a
+# merge join would cost two O(n log n) pipeline breakers — the cost model
+# picks the radix-partitioned HashJoin instead (probe side streams
+# unsorted; the build side is partitioned once). Forcing join_strategy
+# shows the alternative plan; FILTER NOT EXISTS plans onto the same
+# machinery as an anti hash/merge join.
+from repro.core.planner import explain
+
+STRAT = """
+SELECT ?a ?b ?company {
+  { ?a :knows ?b } UNION { ?b :knows ?a }
+  OPTIONAL { ?b :worksAt ?company }
+  FILTER NOT EXISTS { ?b :worksAt :Initech }
+}
+"""
+node, vt = engine.parse(STRAT)
+print("\nchosen plan (cost-based — note HashJoin, no Sort below it):")
+print(explain(engine.plan(node), vt))
+forced = Engine(store, EngineConfig(join_strategy="merge"))
+print("\nforced join_strategy='merge' (the pre-§11 double-Sort shape):")
+print(explain(forced.plan(forced.parse(STRAT)[0]), vt))
+strat_rows = engine.execute(STRAT).decoded(store.dict)
+assert sorted(map(str, forced.execute(STRAT).decoded(store.dict))) == sorted(
+    map(str, strat_rows)
+)
+print("\nboth strategies agree ✓:", strat_rows)
+
 # 7. the expression VM (DESIGN.md §9): FILTER/BIND compile to bytecode
 # programs at plan time — string predicates evaluate once per distinct
 # dictionary term, three-valued logic is exact (COALESCE recovers the

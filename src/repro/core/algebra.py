@@ -265,6 +265,19 @@ class Minus(PlanNode):
 
 
 @dataclasses.dataclass
+class NotExists(PlanNode):
+    """FILTER NOT EXISTS { ... } — an anti-semi-join, kept distinct from
+    Minus because the two diverge when ``right`` shares no variables with
+    ``left`` (SPARQL §8.3.3): MINUS keeps every left row (nothing is
+    compatible), NOT EXISTS removes *all* left rows as soon as the inner
+    pattern has any solution. The planner lowers the disjoint case onto
+    the degenerate constant-key anti hash join."""
+
+    left: PlanNode
+    right: PlanNode
+
+
+@dataclasses.dataclass
 class Union(PlanNode):
     left: PlanNode
     right: PlanNode
@@ -345,7 +358,7 @@ def plan_vars(node: PlanNode) -> Tuple[int, ...]:
         return tuple(dict.fromkeys(plan_vars(node.left) + plan_vars(node.right)))
     if isinstance(node, LeftJoin):
         return tuple(dict.fromkeys(plan_vars(node.left) + plan_vars(node.right)))
-    if isinstance(node, Minus):
+    if isinstance(node, (Minus, NotExists)):
         return plan_vars(node.left)
     if isinstance(node, (Filter, Distinct)):
         return plan_vars(node.child)

@@ -76,6 +76,9 @@ class EngineConfig:
     # join emission batch size: None = default (256); fixed-batch ablations
     # (bench_adaptive) set it so the joins follow the experiment too
     join_initial_batch: Optional[int] = None
+    # binary-join physical strategy: None = cost-based (DESIGN.md §11),
+    # "hash" / "merge" force one path (parity tests, ablations)
+    join_strategy: Optional[str] = None
     # buffer pooling (DESIGN.md §2.3): recycle batch buffers through a
     # per-query arena so steady-state execution is allocation-free
     pool_buffers: bool = True
@@ -169,6 +172,20 @@ class Translator:
             probe = self._to_batch(self._build(n.probe))
             build = self._to_batch(self._build(n.build))
             return LookupJoin(probe, build, n.var, n.mode, pool=self.pool)
+        if isinstance(n, PL.PHashJoin):
+            from repro.core.operators.hash_join import HashJoin
+
+            return HashJoin(
+                self._to_batch(self._build(n.probe)),
+                self._to_batch(self._build(n.build)),
+                n.keys,
+                mode=n.mode,
+                post_filter=n.post_filter,
+                dictionary=self.store.dict,
+                sizer=self._join_sizer(),
+                pool=self.pool,
+                post_program=n.post_program,
+            )
         if isinstance(n, PL.PCross):
             return CrossJoin(
                 self._to_batch(self._build(n.left)),
@@ -307,6 +324,11 @@ class Translator:
             if probe.sorted_by() != n.var:
                 probe = LOP.RowSort(probe, var=n.var)
             return LOP.RowMergeJoin(probe, build, n.var, mode=n.mode)
+        if isinstance(n, PL.PHashJoin):
+            return LOP.RowHashJoin(
+                self._row(n.probe), self._row(n.build), n.keys, mode=n.mode,
+                post_filter=n.post_filter, dictionary=self.store.dict,
+            )
         if isinstance(n, PL.PCross):
             # block nested loop via bind join over a constant
             left = self._row(n.left)
@@ -459,6 +481,7 @@ class Engine:
             self.stats,
             barq_enabled=self.cfg.engine != "legacy",
             dictionary=store.dict,
+            join_strategy=self.cfg.join_strategy,
         )
 
     def parse(self, text: str) -> Tuple[A.PlanNode, A.VarTable]:

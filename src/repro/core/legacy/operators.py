@@ -304,6 +304,118 @@ class RowMergeJoin(RowOperator):
         self._gi = 0
 
 
+class RowHashJoin(RowOperator):
+    """Classic hash join — the row engine's general join for unsorted
+    inputs (the legacy translation of PHashJoin). The build side loads
+    into a key-tuple → rows dict; probe rows stream through. Unbound key
+    slots hash as None and match each other, mirroring the batch engine's
+    NULL_ID-equals-itself semantics. An empty key tuple is the degenerate
+    constant-key join (cross / NULL-extending cross / exists-anything),
+    the shape the disjoint OPTIONAL and FILTER NOT EXISTS fixes need.
+    ``post_filter`` is the SPARQL LeftJoin condition: a probe row whose
+    matches all fail it still emits, NULL-extended."""
+
+    def __init__(self, probe: RowOperator, build: RowOperator,
+                 keys: Sequence[int], mode: str = "inner",
+                 post_filter=None, dictionary=None):
+        assert mode in ("inner", "left_outer", "semi", "anti")
+        self.probe, self.build = probe, build
+        self.keys = tuple(keys)
+        self.mode = mode
+        self.post_filter = post_filter
+        self.dictionary = dictionary
+        pv, bv = tuple(probe.var_ids()), tuple(build.var_ids())
+        self.shared = tuple(x for x in pv if x in bv)
+        self._vars = pv if mode in ("semi", "anti") else pv + tuple(
+            x for x in bv if x not in pv
+        )
+        self._table: Optional[Dict[Tuple, List[Row]]] = None
+        self._emit: List[Row] = []
+        self._ei = 0  # cursor into _emit (front-pops would be O(n) each)
+        super().__init__(
+            "HashJoin", f"({','.join(f'?v{k}' for k in self.keys)}) row mode={mode}"
+        )
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self._vars
+
+    def sorted_by(self) -> Optional[int]:
+        if self.mode == "left_outer" and self.post_filter is not None:
+            return None
+        return self.probe.sorted_by()
+
+    def children(self) -> List[RowOperator]:
+        return [self.probe, self.build]
+
+    def _ensure_table(self) -> None:
+        if self._table is not None:
+            return
+        self._table = {}
+        while True:
+            r = self.build.next_row()
+            if r is None:
+                break
+            key = tuple(r.get(k) for k in self.keys)
+            self._table.setdefault(key, []).append(r)
+
+    def _expr_ok(self, row: Row) -> bool:
+        b = _row_to_batch(row, self._vars)
+        return bool(eval_expr_mask(self.post_filter, b, self.dictionary)[0])
+
+    def _next(self) -> Optional[Row]:
+        self._ensure_table()
+        while True:
+            if self._ei < len(self._emit):
+                r = self._emit[self._ei]
+                self._ei += 1
+                return r
+            lrow = self.probe.next_row()
+            if lrow is None:
+                return None
+            group = self._table.get(tuple(lrow.get(k) for k in self.keys), [])
+            matches = [
+                r for r in group
+                if all(lrow.get(s) == r.get(s) for s in self.shared)
+            ]
+            if self.mode == "semi":
+                if matches:
+                    return dict(lrow)
+                continue
+            if self.mode == "anti":
+                if not matches:
+                    return dict(lrow)
+                continue
+            out_rows = []
+            for r in matches:
+                out = dict(lrow)
+                for k, v in r.items():
+                    out.setdefault(k, v)
+                if self.post_filter is not None and not self._expr_ok(out):
+                    continue
+                out_rows.append(out)
+            if self.mode == "left_outer" and not out_rows:
+                out_rows.append(dict(lrow))
+            if self.mode == "inner" and not out_rows:
+                continue
+            self._emit = out_rows
+            self._ei = 0
+
+    def _skip(self, var: int, target: int) -> None:
+        # buffered rows at or above the target must survive the gallop
+        self._emit = [
+            r for r in self._emit[self._ei:] if r.get(var, -1) >= target
+        ]
+        self._ei = 0
+        self.probe.skip(var, target)
+
+    def _reset(self) -> None:
+        self.probe.reset()
+        self.build.reset()
+        self._table = None
+        self._emit = []
+        self._ei = 0
+
+
 class RowFilter(RowOperator):
     def __init__(self, child: RowOperator, expr: Expr, dictionary: Dictionary):
         self.child, self.expr, self.dictionary = child, expr, dictionary

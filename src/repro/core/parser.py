@@ -354,7 +354,10 @@ class Parser:
                     self.expect_kw("exists")
                     flush()
                     sub = self._group_graph_pattern()
-                    node = A.Minus(node, sub) if node is not None else sub
+                    # NOT EXISTS is an anti-semi-join, NOT a MINUS: the two
+                    # diverge when the inner pattern shares no variables
+                    # with the outer group (SPARQL §8.3.3)
+                    node = A.NotExists(node, sub) if node is not None else sub
                 else:
                     self.expect_op("(")
                     filters.append(self._expr())

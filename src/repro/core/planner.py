@@ -2,9 +2,13 @@
 
 The planner keeps the paper's architecture: ONE optimizer and cost model for
 both executors. Join ordering is greedy smallest-expansion-first over the
-System-R containment estimate; physical selection prefers merge joins
-(sorted indexes make them nearly free, §2.2.1), inserting Sort pipeline
-breakers otherwise, or a LookupJoin when the build side is small.
+System-R containment estimate; physical selection prefers merge joins when
+the inputs arrive sorted (sorted indexes make them nearly free, §2.2.1),
+a LookupJoin when the build side is small, and otherwise chooses by cost
+between Sort pipeline breakers + merge and the radix-partitioned hash
+join (DESIGN.md §11) — so unsorted OPTIONAL/MINUS/mid-plan inputs no
+longer force two O(n log n) sorts. EngineConfig.join_strategy forces one
+path for parity tests and ablations.
 
 The single BARQ-awareness concession the paper describes (§4.2 Component
 Isolation) is reproduced: merge joins expected to produce substantially
@@ -18,6 +22,7 @@ BARQ).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import List, Optional, Sequence, Tuple, Union as TUnion
 
 from repro.core import algebra as A
@@ -83,6 +88,23 @@ class PLookupJoin(PhysNode):
     build: "Phys"
     var: int
     mode: str = "inner"
+
+
+@dataclasses.dataclass
+class PHashJoin(PhysNode):
+    """Radix-partitioned hash join (DESIGN.md §11): the build side is
+    materialized into a partitioned hash layout, the probe side streams
+    through unsorted — chosen by cost when sorting the inputs for a merge
+    join would dominate. ``keys`` may be empty: the degenerate
+    constant-key join (cross / NULL-extending cross / exists-anything)
+    that disjoint OPTIONAL and FILTER NOT EXISTS lower onto."""
+
+    probe: "Phys"
+    build: "Phys"
+    keys: Tuple[int, ...] = ()
+    mode: str = "inner"
+    post_filter: Optional[A.Expr] = None
+    post_program: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -159,9 +181,9 @@ class PUnion(PhysNode):
 
 
 Phys = TUnion[
-    PScan, PPathScan, PPathExpand, PSort, PMergeJoin, PLookupJoin, PCross,
-    PFilter, PExtend, PProject, PDistinct, PGroup, PHaving, POrderBy,
-    PSlice, PUnion,
+    PScan, PPathScan, PPathExpand, PSort, PMergeJoin, PLookupJoin,
+    PHashJoin, PCross, PFilter, PExtend, PProject, PDistinct, PGroup,
+    PHaving, POrderBy, PSlice, PUnion,
 ]
 
 
@@ -182,6 +204,11 @@ def phys_vars(n: Phys) -> Tuple[int, ...]:
             return lv
         return tuple(dict.fromkeys(lv + phys_vars(n.right)))
     if isinstance(n, PLookupJoin):
+        lv = phys_vars(n.probe)
+        if n.mode in ("semi", "anti"):
+            return lv
+        return tuple(dict.fromkeys(lv + phys_vars(n.build)))
+    if isinstance(n, PHashJoin):
         lv = phys_vars(n.probe)
         if n.mode in ("semi", "anti"):
             return lv
@@ -210,6 +237,16 @@ def phys_sorted_by(n: Phys) -> Optional[int]:
         return None if n.mode == "left_outer" else n.var
     if isinstance(n, PLookupJoin):
         return phys_sorted_by(n.probe)
+    if isinstance(n, PHashJoin):
+        # probe order survives; tracked left_outer (a join condition, or a
+        # multi-key join whose packing may fall back to pair tracking)
+        # emits its NULL-extended rows after each batch's expansions,
+        # breaking the interleave
+        if n.mode == "left_outer" and (
+            n.post_filter is not None or len(n.keys) > 1
+        ):
+            return None
+        return phys_sorted_by(n.probe)
     if isinstance(n, (PFilter, PHaving, PSlice)):
         return phys_sorted_by(n.child)
     if isinstance(n, PExtend):
@@ -231,17 +268,35 @@ def phys_sorted_by(n: Phys) -> Optional[int]:
 # ---------------------------------------------------------------------------
 
 
+# hash-join cost constants (DESIGN.md §11 strategy table): building the
+# partitioned layout touches every build row a few times (partition, reorder,
+# probe bookkeeping), a sort costs ~ n log2 n row moves. The constants only
+# need to be right about the crossover, not the absolute times.
+_HASH_BUILD_FACTOR = 4.0
+
+
+def _sort_cost(n: float) -> float:
+    n = max(n, 2.0)
+    return n * math.log2(n)
+
+
 class Planner:
     def __init__(
         self,
         stats: GraphStats,
         barq_enabled: bool = True,
         dictionary=None,
+        join_strategy: Optional[str] = None,
     ):
+        assert join_strategy in (None, "hash", "merge")
         self.stats = stats
         # §4.2: the one cost-model tweak — amplifying merge joins get cheaper
         # when BARQ executes them
         self.barq_enabled = barq_enabled
+        # EngineConfig.join_strategy: None = cost-based choice between the
+        # sort+merge and radix-hash paths; "hash"/"merge" force one (tests,
+        # ablations)
+        self.join_strategy = join_strategy
         # expression VM: FILTER / BIND / left-join conditions compile once
         # at plan time; programs are cached per (expr, mode) across the
         # whole plan (and across plans, for a long-lived planner)
@@ -294,6 +349,13 @@ class Planner:
             return self._plan_binary_join(node.left, node.right, "left_outer", node.expr)
         if isinstance(node, A.Minus):
             return self._plan_binary_join(node.left, node.right, "anti", None)
+        if isinstance(node, A.NotExists):
+            # anti-semi-join like Minus, EXCEPT with disjoint variable sets
+            # (see _plan_binary_join): there NOT EXISTS removes every left
+            # row as soon as the inner pattern has any solution
+            return self._plan_binary_join(
+                node.left, node.right, "not_exists", None
+            )
         if isinstance(node, A.Union):
             l, r = self._plan(node.left), self._plan(node.right)
             out = PUnion(l, r)
@@ -471,25 +533,89 @@ class Planner:
     def _make_join(self, left: Phys, p: A.TriplePattern, jv: int, est: float) -> Phys:
         right: Phys = self._leaf(p, jv)
         right.est_rows = self._pattern_card(p)
-        if phys_sorted_by(right) != jv:
-            s = PSort(right, jv)
-            s.est_rows = right.est_rows
-            right = s
         left_sorted = phys_sorted_by(left) == jv
         if not left_sorted:
-            if left.est_rows <= 4096 and isinstance(left, (PScan, PFilter)):
+            if (
+                self.join_strategy != "hash"
+                and left.est_rows <= 4096
+                and isinstance(left, (PScan, PFilter))
+            ):
                 # small unsorted left: lookup-join into the scan instead
+                if phys_sorted_by(right) != jv:
+                    s = PSort(right, jv)
+                    s.est_rows = right.est_rows
+                    right = s
                 out = PLookupJoin(probe=right, build=left, var=jv)
+                out.est_rows = est
+                return out
+            # unsorted mid-plan input: hash-join it against the pattern
+            # when that beats re-sorting it (DESIGN.md §11) — the probe
+            # side streams unsorted, only the pattern is materialized
+            if self._choose_join_strategy(left, right, jv, est) == "hash":
+                shared = tuple(
+                    v for v in phys_vars(left) if v in phys_vars(right)
+                )
+                out = PHashJoin(probe=left, build=right, keys=shared)
                 out.est_rows = est
                 return out
             left = PSort(left, jv)
             left.est_rows = left.child.est_rows
+        if phys_sorted_by(right) != jv:
+            s = PSort(right, jv)
+            s.est_rows = right.est_rows
+            right = s
         join = PMergeJoin(left, right, jv)
         join.est_rows = est
         join.amplifying = est > 4 * max(left.est_rows, right.est_rows)
         return join
 
     # -- generic binary joins (OPTIONAL / MINUS / subplans) -------------------------------
+
+    def _binary_join_estimate(
+        self, left: Phys, right: Phys, jv: int, mode: str
+    ) -> float:
+        """Output estimate for a generic binary join, flowing through the
+        stats object so the hash-vs-merge choice below prices output cost
+        from the same number the plan reports. semi/anti estimates use the
+        containment-based semi-join selectivity (NOT the old flat
+        left * 0.5, which ignored the right side entirely)."""
+        d_l = self._distinct_estimate(left, jv)
+        d_r = self._distinct_estimate(right, jv)
+        card_l = max(int(left.est_rows), 1)
+        card_r = max(int(right.est_rows), 1)
+        if mode in ("semi", "anti", "not_exists"):
+            return self.stats.semi_join_cardinality(
+                card_l, d_l, d_r, anti=mode != "semi"
+            )
+        est = self.stats.join_cardinality(card_l, card_r, d_l, d_r)
+        if mode == "left_outer":
+            # a left join emits at least one row per left row
+            est = max(est, left.est_rows)
+        return est
+
+    def _choose_join_strategy(
+        self, left: Phys, right: Phys, jv: int, est: float
+    ) -> str:
+        """Sort+merge vs radix-hash (DESIGN.md §11 strategy table). Merge
+        pays one PSort per unsorted input plus a linear pass; hash pays a
+        constant-factor build over the right side and streams the probe
+        side unsorted. With both inputs already sorted the merge join is
+        nearly free and always wins."""
+        if self.join_strategy in ("hash", "merge"):
+            return self.join_strategy
+        l_sorted = phys_sorted_by(left) == jv
+        r_sorted = phys_sorted_by(right) == jv
+        if l_sorted and r_sorted:
+            return "merge"
+        ln = max(left.est_rows, 1.0)
+        rn = max(right.est_rows, 1.0)
+        merge_cost = ln + rn + est
+        if not l_sorted:
+            merge_cost += _sort_cost(ln)
+        if not r_sorted:
+            merge_cost += _sort_cost(rn)
+        hash_cost = _HASH_BUILD_FACTOR * rn + ln + est
+        return "hash" if hash_cost < merge_cost else "merge"
 
     def _plan_binary_join(
         self,
@@ -508,16 +634,42 @@ class Planner:
                 out.est_rows = left.est_rows * right.est_rows
                 return out
             if mode == "anti":
-                # MINUS with disjoint domains keeps everything
+                # MINUS with disjoint domains keeps everything (§8.3.3:
+                # no shared variable -> every pair is incompatible)
                 return left
-            # left_outer without shared vars: cross with NULL fallback ~ cross
-            out = PCross(left, right)
+            if mode == "not_exists":
+                # NOT EXISTS diverges from MINUS here: any inner solution
+                # removes ALL left rows. The degenerate constant-key anti
+                # hash join is exactly that shape.
+                out = PHashJoin(left, right, (), mode="anti")
+                out.est_rows = left.est_rows * 0.5
+                return out
+            # left_outer without shared vars: SPARQL left join must keep
+            # every left row even when the optional side is empty — the
+            # NULL-extending constant-key hash join, not a plain PCross
+            # (which returns zero rows on an empty right side)
+            out = PHashJoin(
+                left, right, (), mode="left_outer", post_filter=expr,
+                post_program=self.compile_expr(expr, "mask"),
+            )
             out.est_rows = max(left.est_rows, left.est_rows * right.est_rows)
             return out
         jv = shared[0]
-        if phys_sorted_by(left) == jv:
-            pass
-        else:
+        # prefer a shared var an input is already sorted by
+        for v in shared:
+            if phys_sorted_by(left) == v or phys_sorted_by(right) == v:
+                jv = v
+                break
+        est = self._binary_join_estimate(left, right, jv, mode)
+        join_mode = "anti" if mode == "not_exists" else mode
+        if self._choose_join_strategy(left, right, jv, est) == "hash":
+            out = PHashJoin(
+                left, right, tuple(shared), mode=join_mode, post_filter=expr,
+                post_program=self.compile_expr(expr, "mask"),
+            )
+            out.est_rows = est
+            return out
+        if phys_sorted_by(left) != jv:
             s = PSort(left, jv)
             s.est_rows = left.est_rows
             left = s
@@ -526,15 +678,10 @@ class Planner:
             s.est_rows = right.est_rows
             right = s
         out = PMergeJoin(
-            left, right, jv, mode=mode, post_filter=expr,
+            left, right, jv, mode=join_mode, post_filter=expr,
             post_program=self.compile_expr(expr, "mask"),
         )
-        d = max(int(max(left.est_rows, 1) ** 0.5), 1)
-        out.est_rows = self.stats.join_cardinality(
-            max(int(left.est_rows), 1), max(int(right.est_rows), 1), d, d
-        )
-        if mode in ("semi", "anti"):
-            out.est_rows = left.est_rows * 0.5
+        out.est_rows = est
         return out
 
 
@@ -571,6 +718,14 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
     if isinstance(n, PLookupJoin):
         return (
             f"{pad}LookupJoin({vname(n.var)}, {n.mode}) est={n.est_rows:.0f}\n"
+            + explain(n.probe, var_table, indent + 1)
+            + "\n"
+            + explain(n.build, var_table, indent + 1)
+        )
+    if isinstance(n, PHashJoin):
+        keys = ", ".join(vname(k) for k in n.keys) if n.keys else "<const>"
+        return (
+            f"{pad}HashJoin({keys}, {n.mode}) est={n.est_rows:.0f}\n"
             + explain(n.probe, var_table, indent + 1)
             + "\n"
             + explain(n.build, var_table, indent + 1)

@@ -214,6 +214,24 @@ class GraphStats:
     ) -> float:
         return card_a * card_b / max(d_a, d_b, 1)
 
+    def semi_join_cardinality(
+        self,
+        card_a: int,
+        d_a: int,
+        d_b: int,
+        anti: bool = False,
+    ) -> float:
+        """Semi-join estimate under the same containment assumption as
+        join_cardinality: the smaller key domain is contained in the
+        larger, so a left row finds a match with probability
+        min(d_a, d_b) / d_a. ``anti`` returns the complement. This is what
+        semi/anti selectivity flows through (replacing the old flat
+        left * 0.5, which ignored the right side entirely and skewed the
+        hash-vs-merge strategy choice)."""
+        match_frac = min(d_a, d_b) / max(d_a, 1)
+        frac = (1.0 - match_frac) if anti else match_frac
+        return card_a * min(max(frac, 0.0), 1.0)
+
     def _bound(self, pattern: TriplePattern):
         bound = [None, None, None, None]
         for role, sl in enumerate(

@@ -13,7 +13,8 @@ per-row loops — that is the point of the paper.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import math
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -305,19 +306,46 @@ def multiway_equal_mask(cols_l: np.ndarray, cols_r: np.ndarray) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def pack_group_keys(key_cols: np.ndarray) -> np.ndarray:
+def pack_group_keys(
+    key_cols: np.ndarray,
+    spans: Optional[Sequence[int]] = None,
+) -> Optional[np.ndarray]:
     """Pack a (k, n) block of int32 group-key columns (NULL_ID == -1
     allowed) into ONE int64 composite key whose ordering and equality match
     the lexicographic order of the columns — so multi-key grouping needs a
     single-key argsort instead of a k-column lexsort.
 
-    Columns pack most-significant-first with per-column ranges
-    max+2 (codes shift by one so NULL packs as 0). When the range product
-    would overflow 63 bits, falls back to a lexsort-based dense rank, which
-    preserves both ordering and group boundaries."""
+    With ``spans=None`` (grouping), columns pack most-significant-first
+    with per-column ranges max+2 (codes shift by one so NULL packs as 0).
+    When the range product would overflow 63 bits, falls back to a
+    lexsort-based dense rank, which preserves both ordering and group
+    boundaries.
+
+    With explicit ``spans`` (multi-variable hash-join keys: the packing
+    must be identical across probe batches, so the ranges are fixed up
+    front from the build side), values at or above their span clamp to the
+    span's last slot. Callers must size each span with one spare sentinel
+    slot above the build side's maximum shifted value (span >= max+3 for
+    codes up to max), so clamped out-of-range probe values land on a slot
+    no build key occupies — they can then never falsely match, and
+    probe-probe collisions are harmless because probe keys are only ever
+    compared against build keys. Returns None when the span product
+    overflows 62 bits (the caller falls back to primary-key hashing +
+    pairwise verification); the rank fallback is not available because
+    ranks are not stable across batches."""
     key_cols = np.asarray(key_cols)
     k, n = key_cols.shape
     assert k >= 1
+    if spans is not None:
+        assert len(spans) == k
+        if math.prod(int(s) for s in spans) >= 1 << 62:
+            return None
+        packed = np.minimum(key_cols[0].astype(np.int64) + 1, spans[0] - 1)
+        for c, s in zip(key_cols[1:], spans[1:]):
+            packed = packed * int(s) + np.minimum(
+                c.astype(np.int64) + 1, int(s) - 1
+            )
+        return packed
     packed = key_cols[0].astype(np.int64) + 1
     span = int(key_cols[0].max(initial=-1)) + 2
     for c in key_cols[1:]:
@@ -410,3 +438,180 @@ def hash_partition(keys: np.ndarray, n_parts: int) -> np.ndarray:
 
 def partition_histogram(part_ids: np.ndarray, n_parts: int) -> np.ndarray:
     return np.bincount(part_ids, minlength=n_parts).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# radix-partitioned hash join primitives (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+#
+# The logical join key is an int32 (hi, lo) pair compared lexicographically:
+# single-variable keys pass hi=None (all-zero) and lo=the code column
+# (NULL_ID == -1 is an ordinary value that equals itself, matching the
+# merge-join and row-engine semantics); multi-variable keys pack through
+# pack_group_keys(spans=...) into a non-negative int64 split as
+# hi = packed >> 31, lo = packed & 0x7FFFFFFF. hi is always >= 0.
+
+_MIX_MULT = np.uint32(0x85EBCA6B)  # murmur3 fmix constant
+
+
+def mix_pair(key_hi: Optional[np.ndarray], key_lo: np.ndarray) -> np.ndarray:
+    """Fold an (hi, lo) key pair into one int32 hash input; identity for
+    single-column keys so their partition ids match radix_partition on the
+    raw codes. INT32_MIN is remapped (it is the Pallas radix_partition
+    kernel's padding sentinel; single-column inputs are dictionary codes
+    >= -1 and can never hit it, but a xor-mix can)."""
+    lo = np.asarray(key_lo, dtype=np.int32)
+    if key_hi is None:
+        return lo
+    mixed = (
+        lo.view(np.uint32)
+        ^ (np.asarray(key_hi, dtype=np.int32).view(np.uint32) * _MIX_MULT)
+    ).view(np.int32)
+    sentinel = np.iinfo(np.int32).min
+    if (mixed == sentinel).any():
+        mixed = np.where(mixed == sentinel, np.int32(0), mixed)
+    return mixed
+
+
+def _pair_comp(key_hi: Optional[np.ndarray], key_lo: np.ndarray) -> np.ndarray:
+    """int64 composite preserving (hi, lo) lexicographic order (hi >= 0).
+    Values are non-negative and < 2^63 (single-column keys < 2^32)."""
+    lo64 = np.asarray(key_lo, np.int32).astype(np.int64) + (1 << 31)
+    if key_hi is None:
+        return lo64
+    return (np.asarray(key_hi, np.int32).astype(np.int64) << 32) | lo64
+
+
+def _pid_shift(n_parts: int) -> int:
+    """Bits available for the key below the partition id in a global
+    (pid, key) int64 composite."""
+    return 63 - max(int(n_parts - 1).bit_length(), 1)
+
+
+def hash_build_order(
+    pid: np.ndarray,
+    key_hi: Optional[np.ndarray],
+    key_lo: np.ndarray,
+    n_parts: int,
+) -> np.ndarray:
+    """Build-side reorder permutation: rows grouped by partition id, key-
+    sorted within each partition — the two-level layout hash_probe
+    searches. When the (pid, key) pair fits one int64 word (always for
+    single-column keys; pair keys whenever the pack spans leave room for
+    the partition bits) this is ONE stable argsort — numpy's stable sort
+    on integer dtypes is a radix sort, so the build is O(n), not a
+    comparison sort. The rare oversized pair keys fall back to lexsort."""
+    lo = np.asarray(key_lo, dtype=np.int32)
+    packed = _pair_comp(key_hi, lo)
+    shift = _pid_shift(n_parts)
+    if key_hi is None or int(packed.max(initial=0)) < (1 << shift):
+        comp = (pid.astype(np.int64) << shift) | packed
+        return np.argsort(comp, kind="stable").astype(np.int32)
+    return np.lexsort((lo, np.asarray(key_hi, np.int32), pid)).astype(np.int32)
+
+
+def hash_probe_positions(
+    spid: np.ndarray,
+    skey_hi: Optional[np.ndarray],
+    skey_lo: np.ndarray,
+    qpid: np.ndarray,
+    qkey_hi: Optional[np.ndarray],
+    qkey_lo: np.ndarray,
+    part_starts: np.ndarray,
+    cache: Optional[dict] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(lo, hi) match-run positions of each probe key in the partitioned
+    build layout: build rows [lo[i], hi[i]) carry probe i's exact key.
+
+    The steady-state path folds (pid, key) into one global int64 composite
+    and answers both run boundaries with two searchsorted passes; ``cache``
+    (one dict per build, threaded through kernels.ops by the operator)
+    keeps the build-side composite across probe batches so the per-batch
+    cost is the searches alone. Pair keys too wide to share a word with
+    the partition bits take a vectorized segmented binary search inside
+    each probe's partition slice instead (every iteration advances all
+    probes one halving step — O(probes · log max_partition))."""
+    n_parts = len(part_starts) - 1
+    shift = _pid_shift(n_parts)
+    if (
+        cache is not None
+        and skey_hi is None
+        and "tables" not in cache
+        and len(skey_lo)
+    ):
+        # single-column keys are dictionary codes — a dense, bounded
+        # domain. When it is small enough, upgrade the partition directory
+        # to a direct-addressed run table (the limiting case of radix
+        # partitioning: every key its own bucket): probe cost drops from a
+        # binary search to two gathers per key. Runs stay contiguous in
+        # the (pid, key) layout, so the table just records them.
+        max_b = int(skey_lo.max())
+        domain = max_b + 2  # +1 shift so NULL_ID (-1) owns slot 0
+        if domain <= max(4 * len(skey_lo), 1 << 16):
+            is_start = np.empty(len(skey_lo), dtype=bool)
+            is_start[0] = True
+            np.not_equal(skey_lo[1:], skey_lo[:-1], out=is_start[1:])
+            if n_parts > 1:  # equal keys never span partitions; pid breaks runs too
+                np.logical_or(
+                    is_start[1:], spid[1:] != spid[:-1], out=is_start[1:]
+                )
+            starts = np.nonzero(is_start)[0].astype(np.int32)
+            lengths = np.diff(np.append(starts, len(skey_lo))).astype(np.int32)
+            lo_t = np.zeros(domain + 1, np.int32)  # last slot = sentinel
+            len_t = np.zeros(domain + 1, np.int32)
+            slot = skey_lo[starts].astype(np.int64) + 1
+            lo_t[slot] = starts
+            len_t[slot] = lengths
+            cache["tables"] = (lo_t, len_t, domain)
+        else:
+            cache["tables"] = None
+    if (
+        cache is not None
+        and skey_hi is None
+        and cache.get("tables") is not None
+    ):
+        lo_t, len_t, domain = cache["tables"]
+        idx = qkey_lo.astype(np.int64) + 1
+        idx = np.where(idx < domain, idx, domain)  # out-of-domain -> sentinel
+        lo = lo_t[idx]
+        return lo, lo + len_t[idx]
+    if cache is not None and "comp_b" in cache:
+        comp_b = cache["comp_b"]
+    else:
+        packed_b = _pair_comp(skey_hi, skey_lo)
+        if skey_hi is None or int(packed_b.max(initial=0)) < (1 << shift):
+            comp_b = (spid.astype(np.int64) << shift) | packed_b
+        else:
+            comp_b = None  # oversized pair keys: segmented search
+        if cache is not None:
+            cache["comp_b"] = comp_b
+    packed_q = _pair_comp(qkey_hi, qkey_lo)
+    if comp_b is not None and (
+        qkey_hi is None or int(packed_q.max(initial=0)) < (1 << shift)
+    ):
+        comp_q = (qpid.astype(np.int64) << shift) | packed_q
+        lo = np.searchsorted(comp_b, comp_q, side="left")
+        hi = np.searchsorted(comp_b, comp_q, side="right")
+        return lo.astype(np.int32), hi.astype(np.int32)
+    # fallback: per-partition binary search on the (hi, lo) composite,
+    # both boundaries advanced in one halving loop
+    comp_seg = _pair_comp(skey_hi, skey_lo)
+    n_b = max(len(comp_seg), 1)
+    seg_lo = part_starts[qpid].astype(np.int64)
+    seg_hi = part_starts[qpid + 1].astype(np.int64)
+    llo, lhi = seg_lo.copy(), seg_hi.copy()
+    rlo, rhi = seg_lo, seg_hi.copy()
+    while True:
+        l_act = llo < lhi
+        r_act = rlo < rhi
+        if not (l_act.any() or r_act.any()):
+            break
+        lmid = (llo + lhi) >> 1
+        rmid = (rlo + rhi) >> 1
+        lgo = (comp_seg[np.minimum(lmid, n_b - 1)] < packed_q) & l_act
+        rgo = (comp_seg[np.minimum(rmid, n_b - 1)] <= packed_q) & r_act
+        llo = np.where(lgo, lmid + 1, llo)
+        lhi = np.where(l_act & ~lgo, lmid, lhi)
+        rlo = np.where(rgo, rmid + 1, rlo)
+        rhi = np.where(r_act & ~rgo, rmid, rhi)
+    return llo.astype(np.int32), rlo.astype(np.int32)

@@ -308,3 +308,96 @@ def radix_partition(keys, n_parts: int, backend: Optional[str] = None):
         pid, hist = radix_partition_pallas(keys, n_parts)
         return np.asarray(pid), np.asarray(hist)
     raise ValueError(be)
+
+
+# -- hash join: build / probe (DESIGN.md §11) --------------------------------------
+#
+# The join key is an int32 (hi, lo) pair compared lexicographically;
+# single-variable keys pass key_hi=None (see vecops §11 header). The build
+# step reuses the radix_partition kernel for bucketing (its dispatch is
+# counted separately), then reorders rows by (partition, key) — an XLA/host
+# sort; sorting inside Pallas is not profitable on TPU. The probe step is
+# where the Pallas path runs its own kernel (gather-free counting search).
+
+
+def hash_build(
+    key_hi, key_lo, n_parts: int, backend: Optional[str] = None
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Partitioned build layout for ``hash_probe``: returns
+    (order, part_starts) where ``order`` permutes build rows into
+    partition-grouped, key-sorted position and ``part_starts`` is the
+    (P+1,) prefix-sum of the partition histogram."""
+    be = _backend(backend)
+    DISPATCH_COUNTS["hash_build"] += 1
+    key_lo = np.asarray(key_lo, dtype=np.int32)
+    mixed = vecops.mix_pair(key_hi, key_lo)
+    pid, hist = radix_partition(mixed, n_parts, backend=be)
+    part_starts = np.concatenate(
+        [np.zeros(1, np.int32), np.cumsum(hist, dtype=np.int64)]
+    ).astype(np.int32)
+    if be == "numpy":
+        order = vecops.hash_build_order(pid, key_hi, key_lo, n_parts)
+    elif be in ("jax", "pallas"):
+        from repro.kernels import ref
+
+        hi = (
+            np.zeros(len(key_lo), np.int32)
+            if key_hi is None
+            else np.asarray(key_hi, np.int32)
+        )
+        order = np.asarray(ref.hash_build_order(pid, hi, key_lo))
+    else:
+        raise ValueError(be)
+    return order, part_starts
+
+
+def hash_probe(
+    spid,
+    skey_hi,
+    skey_lo,
+    qkey_hi,
+    qkey_lo,
+    part_starts,
+    n_parts: int,
+    backend: Optional[str] = None,
+    cache: Optional[dict] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(lo, hi) match-run boundaries of each probe key in a hash_build
+    layout: build rows [lo[i], hi[i]) carry probe i's exact key. ``spid``
+    is the partition id per *reordered* build row (repeat of arange over
+    the histogram). ``cache`` is a per-build dict the operator threads
+    through consecutive probe batches so build-side derivations (the
+    global composite) are computed once, not per batch."""
+    be = _backend(backend)
+    DISPATCH_COUNTS["hash_probe"] += 1
+    skey_lo = np.asarray(skey_lo, dtype=np.int32)
+    qkey_lo = np.asarray(qkey_lo, dtype=np.int32)
+    if len(skey_lo) == 0 or len(qkey_lo) == 0:
+        z = np.zeros(len(qkey_lo), np.int32)
+        return z, z.copy()
+    qpid = vecops.hash_partition(vecops.mix_pair(qkey_hi, qkey_lo), n_parts)
+    if be == "numpy":
+        return vecops.hash_probe_positions(
+            spid, skey_hi, skey_lo, qpid, qkey_hi, qkey_lo, part_starts,
+            cache=cache,
+        )
+    z_s = np.zeros(len(skey_lo), np.int32)
+    z_q = np.zeros(len(qkey_lo), np.int32)
+    shi = z_s if skey_hi is None else np.asarray(skey_hi, np.int32)
+    qhi = z_q if qkey_hi is None else np.asarray(qkey_hi, np.int32)
+    if be == "jax":
+        from repro.kernels import ref
+
+        lo = ref.hash_probe(spid, shi, skey_lo, qpid, qhi, qkey_lo,
+                            part_starts, side="left")
+        hi = ref.hash_probe(spid, shi, skey_lo, qpid, qhi, qkey_lo,
+                            part_starts, side="right")
+        return np.asarray(lo), np.asarray(hi)
+    if be == "pallas":
+        from repro.kernels.hash_join import hash_probe_pallas
+
+        lo, hi = hash_probe_pallas(
+            np.asarray(spid, np.int32), shi, skey_lo, qpid, qhi, qkey_lo
+        )
+        return np.asarray(lo), np.asarray(hi)
+    raise ValueError(be)

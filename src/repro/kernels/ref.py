@@ -222,3 +222,59 @@ def radix_partition(keys: jax.Array, n_parts: int) -> Tuple[jax.Array, jax.Array
         jax.nn.one_hot(pid, n_parts, dtype=jnp.int32), axis=0
     )
     return pid, hist
+
+
+# ---------------------------------------------------------------------------
+# hash join: partitioned build reorder + probe (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+#
+# Keys are int32 (hi, lo) pairs compared lexicographically with hi >= 0
+# (see vecops §11 header); int64 composites are avoided so x64 stays off.
+
+
+@jax.jit
+def hash_build_order(
+    pid: jax.Array, key_hi: jax.Array, key_lo: jax.Array
+) -> jax.Array:
+    """Permutation grouping rows by partition id, key-sorted within each
+    partition (XLA sort; on TPU the partition/histogram step is the Pallas
+    kernel, the reorder is a plain device sort)."""
+    return jnp.lexsort((key_lo, key_hi, pid)).astype(jnp.int32)
+
+
+def _pair_less(ah, al, bh, bl):
+    return (ah < bh) | ((ah == bh) & (al < bl))
+
+
+@functools.partial(jax.jit, static_argnames=("side",))
+def hash_probe(
+    spid: jax.Array,  # unused; kept for wrapper signature parity
+    skey_hi: jax.Array,  # (N,) int32 build keys, partition-grouped + sorted
+    skey_lo: jax.Array,
+    qpid: jax.Array,  # (C,) int32 probe partition ids
+    qkey_hi: jax.Array,
+    qkey_lo: jax.Array,
+    part_starts: jax.Array,  # (P+1,) int32
+    side: str = "left",
+) -> jax.Array:
+    """Segmented binary search: position of each probe key inside its
+    partition's sorted slice. 32 halving steps cover any int32-sized
+    partition; every step is one vectorized gather + compare."""
+    n = max(int(skey_lo.shape[0]), 1)
+    lo = part_starts[qpid].astype(jnp.int32)
+    hi = part_starts[qpid + 1].astype(jnp.int32)
+
+    def step(_, lh):
+        lo, hi = lh
+        mid = (lo + hi) >> 1
+        m = jnp.minimum(mid, n - 1)
+        vh, vl = skey_hi[m], skey_lo[m]
+        if side == "left":
+            go = _pair_less(vh, vl, qkey_hi, qkey_lo)
+        else:
+            go = ~_pair_less(qkey_hi, qkey_lo, vh, vl)
+        go &= lo < hi
+        return jnp.where(go, mid + 1, lo), jnp.where((lo < hi) & ~go, mid, hi)
+
+    lo, hi = jax.lax.fori_loop(0, 32, step, (lo, hi))
+    return lo

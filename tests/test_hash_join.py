@@ -1,0 +1,550 @@
+"""Radix-partitioned hash join (DESIGN.md §11): kernel-level backend
+parity, operator parity against merge join / the legacy row engine /
+brute force across all four modes, the NOT-EXISTS and disjoint-OPTIONAL
+semantics regressions (both engines), strategy-choice and semi/anti
+costing pins, and the dispatch-ledger assertion that the Pallas path
+actually fires."""
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import Engine, EngineConfig, QuadStore, vecops
+from repro.core.batch import BatchPool
+from repro.core.legacy.operators import RowHashJoin
+from repro.core.operators.adapters import BatchToRow
+from repro.core.operators.hash_join import HashJoin
+from repro.core.operators.merge_join import MergeJoin
+from repro.core.operators.sort import MaterializedSource
+from repro.kernels import ops as KOPS
+
+BACKENDS = ("numpy", "jax", "pallas")
+MODES = ("inner", "left_outer", "semi", "anti")
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _src(var_ids, cols, sorted_var=None, batch=8, pool=None):
+    return MaterializedSource(
+        var_ids, np.asarray(cols, np.int32), sorted_var, batch_size=batch,
+        pool=pool,
+    )
+
+
+def _drain_rows(op):
+    rows = []
+    for b in op.drain():
+        c = b.compact()
+        rows.extend(tuple(r) for r in c.to_rows_array().tolist())
+        c.release()
+    return sorted(rows)
+
+
+def _drain_row_op(op, vars_):
+    out = []
+    while True:
+        r = op.next_row()
+        if r is None:
+            break
+        out.append(tuple(r.get(v, -1) for v in vars_))
+    return sorted(out)
+
+
+def _brute_join(l, r, lv, rv, mode):
+    shared = [v for v in lv if v in rv]
+    out = []
+    for lrow in zip(*l):
+        matches = [
+            rrow for rrow in zip(*r)
+            if all(lrow[lv.index(s)] == rrow[rv.index(s)] for s in shared)
+        ]
+        if mode == "inner":
+            for rrow in matches:
+                out.append(tuple(lrow) + tuple(
+                    rrow[rv.index(v)] for v in rv if v not in lv))
+        elif mode == "left_outer":
+            if matches:
+                for rrow in matches:
+                    out.append(tuple(lrow) + tuple(
+                        rrow[rv.index(v)] for v in rv if v not in lv))
+            else:
+                out.append(tuple(lrow) + tuple(
+                    -1 for v in rv if v not in lv))
+        elif mode == "semi" and matches:
+            out.append(tuple(lrow))
+        elif mode == "anti" and not matches:
+            out.append(tuple(lrow))
+    return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: hash_build / hash_probe across backends
+# ---------------------------------------------------------------------------
+
+kernel_cases = st.tuples(
+    st.integers(0, 200),  # n_build
+    st.integers(0, 150),  # n_probe
+    st.sampled_from([2, 5, 40, 5000]),  # key range (2 = heavy skew)
+    st.sampled_from([1, 4, 16]),  # n_parts
+)
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(kernel_cases, st.integers(0, 10_000))
+def test_hash_kernels_backend_parity_single_key(case, seed):
+    n_b, n_q, key_range, n_parts = case
+    rng = np.random.RandomState(seed)
+    bk = rng.randint(-1, key_range, n_b).astype(np.int32)  # -1 == NULL key
+    qk = rng.randint(-1, key_range + 3, n_q).astype(np.int32)
+    results = {}
+    for be in BACKENDS:
+        order, starts = KOPS.hash_build(None, bk, n_parts, backend=be)
+        sk = bk[order]
+        spid = np.repeat(np.arange(n_parts, dtype=np.int32), np.diff(starts))
+        lo, hi = KOPS.hash_probe(
+            spid, None, sk, None, qk, starts, n_parts, backend=be)
+        # semantic: [lo, hi) is exactly the probe key's match run
+        for i in range(n_q):
+            assert (sk[lo[i]:hi[i]] == qk[i]).all(), (be, i)
+            assert hi[i] - lo[i] == int((bk == qk[i]).sum()), (be, i)
+        results[be] = (starts, lo, hi)
+    for be in BACKENDS[1:]:
+        for got, want in zip(results[be], results["numpy"]):
+            np.testing.assert_array_equal(got, want, err_msg=be)
+
+
+@settings(max_examples=10, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.integers(0, 10_000))
+def test_hash_kernels_backend_parity_pair_key(seed):
+    rng = np.random.RandomState(seed)
+    n_b, n_q, n_parts = 150, 120, 8
+    cols_b = np.stack([rng.randint(-1, 9, n_b),
+                       rng.randint(-1, 6, n_b)]).astype(np.int32)
+    cols_q = np.stack([rng.randint(-1, 12, n_q),
+                       rng.randint(-1, 8, n_q)]).astype(np.int32)
+    spans = [int(c.max(initial=-1)) + 3 for c in cols_b]
+    pb = vecops.pack_group_keys(cols_b, spans=spans)
+    pq = vecops.pack_group_keys(cols_q, spans=spans)
+    bh, bl = (pb >> 31).astype(np.int32), (pb & 0x7FFFFFFF).astype(np.int32)
+    qh, ql = (pq >> 31).astype(np.int32), (pq & 0x7FFFFFFF).astype(np.int32)
+    results = {}
+    for be in BACKENDS:
+        order, starts = KOPS.hash_build(bh, bl, n_parts, backend=be)
+        spid = np.repeat(np.arange(n_parts, dtype=np.int32), np.diff(starts))
+        lo, hi = KOPS.hash_probe(
+            spid, bh[order], bl[order], qh, ql, starts, n_parts, backend=be)
+        want = np.asarray([
+            int(((cols_b[0] == cols_q[0][i]) & (cols_b[1] == cols_q[1][i])).sum())
+            for i in range(n_q)
+        ])
+        np.testing.assert_array_equal(hi - lo, want, err_msg=be)
+        results[be] = (lo, hi)
+    for be in BACKENDS[1:]:
+        np.testing.assert_array_equal(results[be][0], results["numpy"][0], be)
+        np.testing.assert_array_equal(results[be][1], results["numpy"][1], be)
+
+
+def test_pack_group_keys_fixed_spans_sentinel():
+    """Out-of-range probe values clamp onto the reserved sentinel slot and
+    can never collide with a real build key."""
+    build = np.asarray([[0, 7], [3, 3]], np.int32)  # two cols, max 7 / 3
+    spans = [int(c.max()) + 3 for c in build]
+    pb = vecops.pack_group_keys(build, spans=spans)
+    probe = np.asarray([[7, 99], [3, 3]], np.int32)  # 99 out of range
+    pq = vecops.pack_group_keys(probe, spans=spans)
+    assert pq[0] == pb[1]  # exact match preserved
+    assert pq[1] not in set(pb.tolist())  # clamped, no false match
+    # overflow -> None (operator falls back to primary-key + pairs)
+    assert vecops.pack_group_keys(build, spans=[1 << 40, 1 << 40]) is None
+
+
+# ---------------------------------------------------------------------------
+# operator parity: HashJoin vs MergeJoin vs RowHashJoin vs brute force
+# ---------------------------------------------------------------------------
+
+join_cases = st.tuples(
+    st.integers(0, 45),  # n_left
+    st.integers(0, 45),  # n_right (0 == empty build side)
+    st.sampled_from([2, 3, 12]),  # key range: 2/3 == heavy skew
+    st.sampled_from(MODES),
+)
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(join_cases, st.integers(0, 10_000))
+def test_hash_join_modes_vs_bruteforce_and_merge(case, seed):
+    nl, nr, key_range, mode = case
+    rng = np.random.RandomState(seed)
+    lk = rng.randint(-1, key_range, nl).astype(np.int32)  # NULL keys included
+    rk = rng.randint(-1, key_range, nr).astype(np.int32)
+    l = [lk, rng.randint(0, 5, nl)]  # vars (0, 1)
+    r = [rk, rng.randint(0, 5, nr)]  # vars (0, 2)
+    want = _brute_join(l, r, (0, 1), (0, 2), mode)
+
+    for be in BACKENDS:
+        pool = BatchPool()
+        j = HashJoin(
+            _src((0, 1), l, pool=pool), _src((0, 2), r, pool=pool), (0,),
+            mode, pool=pool, backend=be,
+        )
+        assert _drain_rows(j) == want, (mode, be)
+
+    ls = np.argsort(lk, kind="stable")
+    rs = np.argsort(rk, kind="stable")
+    mj = MergeJoin(
+        _src((0, 1), [c[ls] for c in l], 0), _src((0, 2), [c[rs] for c in r], 0),
+        0, mode=mode,
+    )
+    assert _drain_rows(mj) == want, mode
+
+    rj = RowHashJoin(
+        BatchToRow(_src((0, 1), l)), BatchToRow(_src((0, 2), r)), (0,), mode)
+    vars_ = (0, 1) if mode in ("semi", "anti") else (0, 1, 2)
+    assert _drain_row_op(rj, vars_) == want, mode
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.sampled_from(MODES), st.integers(0, 10_000))
+def test_hash_join_multi_key_parity(mode, seed):
+    """Two shared variables: the packed-composite hash-key path."""
+    rng = np.random.RandomState(seed)
+    nl, nr = rng.randint(1, 35), rng.randint(1, 35)
+    l = [rng.randint(-1, 5, nl), rng.randint(0, 3, nl)]  # vars (0, 1)
+    r = [rng.randint(-1, 5, nr), rng.randint(0, 3, nr),
+         rng.randint(10, 13, nr)]  # vars (0, 1, 2)
+    want = _brute_join(l, r, (0, 1), (0, 1, 2), mode)
+    for be in BACKENDS:
+        j = HashJoin(_src((0, 1), l), _src((0, 1, 2), r), (0, 1), mode,
+                     backend=be)
+        assert _drain_rows(j) == want, (mode, be)
+    rj = RowHashJoin(BatchToRow(_src((0, 1), l)),
+                     BatchToRow(_src((0, 1, 2), r)), (0, 1), mode)
+    vars_ = (0, 1) if mode in ("semi", "anti") else (0, 1, 2)
+    assert _drain_row_op(rj, vars_) == want, mode
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_hash_join_span_overflow_fallback(mode):
+    """Key values near 2^30 across three columns overflow the 62-bit pack;
+    the operator must fall back to primary-key hashing + pair verification
+    and still be exact."""
+    rng = np.random.RandomState(3)
+    base = (1 << 31) - 4  # spans > 2^31 each: two columns overflow 62 bits
+    nl = nr = 25
+    lk = rng.randint(0, 4, nl).astype(np.int64) + base
+    rk = rng.randint(0, 4, nr).astype(np.int64) + base
+    l = [lk, lk - rng.randint(0, 2, nl), rng.randint(0, 3, nl)]
+    r = [rk, rk - rng.randint(0, 2, nr), rng.randint(0, 3, nr)]
+    l = [np.asarray(c, np.int32) for c in l]
+    r = [np.asarray(c, np.int32) for c in r]
+    # vars (0,1,2) join (0,1,3): keys (0,1) both huge-valued
+    want = _brute_join(l, r, (0, 1, 2), (0, 1, 3), mode)
+    j = HashJoin(_src((0, 1, 2), l), _src((0, 1, 3), r), (0, 1), mode)
+    assert _drain_rows(j) == want, mode
+    assert j._spans is None  # the fallback actually engaged
+    assert j._pair_vars, "pair verification should carry the overflow keys"
+
+
+def test_hash_join_empty_key_degenerate_cross():
+    """keys=(): inner == cross product, left_outer == NULL-extending cross,
+    anti == drop-all-iff-build-nonempty (the NOT EXISTS shape)."""
+    l = [np.arange(3), np.arange(3) + 10]
+    for mode in MODES:
+        for nr in (0, 4):
+            r = [np.arange(nr) + 100]
+            want = _brute_join(l, r, (0, 1), (2,), mode)
+            j = HashJoin(_src((0, 1), l), _src((2,), r), (), mode)
+            assert _drain_rows(j) == want, (mode, nr)
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.integers(0, 10_000))
+def test_hash_join_left_outer_condition(seed):
+    """The SPARQL LeftJoin condition: a probe row whose matches all fail
+    the expression still emits NULL-extended (parity vs RowHashJoin with
+    the same post_filter)."""
+    from repro.core.algebra import Cmp, Lit, VarRef
+    from repro.core.dictionary import Dictionary
+
+    rng = np.random.RandomState(seed)
+    d = Dictionary()
+    for v in range(20):
+        d.encode(v)
+    nl, nr = rng.randint(1, 25), rng.randint(0, 25)
+    l = [rng.randint(0, 6, nl), rng.randint(0, 20, nl)]
+    r = [rng.randint(0, 6, nr), rng.randint(0, 20, nr)]
+    cond = Cmp(">", VarRef(2), Lit(9))  # right payload > 9
+    j = HashJoin(_src((0, 1), l), _src((0, 2), r), (0,), "left_outer",
+                 post_filter=cond, dictionary=d)
+    got = _drain_rows(j)
+    rj = RowHashJoin(BatchToRow(_src((0, 1), l)), BatchToRow(_src((0, 2), r)),
+                     (0,), "left_outer", post_filter=cond, dictionary=d)
+    assert got == _drain_row_op(rj, (0, 1, 2))
+
+
+def test_hash_join_skip_floor_keeps_pending_rows():
+    """A parent gallop (skip) must not drop already-expanded rows at or
+    above the target — the regression behind the q3 triangle undercount."""
+    n = 50
+    lk = np.arange(n, dtype=np.int32)
+    l = [lk, lk + 100]
+    r = [np.repeat(lk, 2), np.repeat(lk, 2) + 200]
+    j = HashJoin(_src((0, 1), l, sorted_var=0, batch=64),
+                 _src((0, 2), r, batch=64), (0,))
+    b = j.next_batch()  # prime: expansion enters pending state
+    got = {tuple(row) for row in b.compact().to_rows_array().tolist()}
+    j.skip(0, 10)  # gallop: rows with ?v0 >= 10 must survive
+    while True:
+        b = j.next_batch()
+        if b is None:
+            break
+        got |= {tuple(row) for row in b.compact().to_rows_array().tolist()}
+    want = {(k, k + 100, k + 200) for k in range(n) if k >= 10}
+    missing = want - got
+    assert not missing, sorted(missing)[:5]
+    assert all(row[0] >= 10 or row in got for row in want)
+
+
+# ---------------------------------------------------------------------------
+# dispatch ledger: the Pallas path actually fires
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_ledger_pallas_hash_path_fires():
+    rng = np.random.RandomState(0)
+    l = [rng.randint(0, 50, 300), rng.randint(0, 5, 300)]
+    r = [rng.randint(0, 50, 200), rng.randint(0, 5, 200)]
+    KOPS.reset_dispatch_counts()
+    j = HashJoin(_src((0, 1), l), _src((0, 2), r), (0,), backend="pallas")
+    n_out = sum(b.n_active for b in j.drain())
+    assert n_out > 0
+    assert KOPS.dispatch_count("hash_build") == 1
+    assert KOPS.dispatch_count("hash_probe") >= 1
+    # the build's bucketing rides the radix_partition Pallas kernel
+    assert KOPS.dispatch_count("radix_partition") == 1
+    KOPS.reset_dispatch_counts()
+
+
+# ---------------------------------------------------------------------------
+# engine-level regressions: NOT EXISTS vs MINUS, disjoint OPTIONAL
+# ---------------------------------------------------------------------------
+
+ENGINES = ("barq", "legacy", "mixed")
+
+
+def _exec(store, query, engine, strategy=None):
+    e = Engine(store, EngineConfig(engine=engine, join_strategy=strategy))
+    r = e.execute(query)
+    return sorted(
+        tuple(None if c == -1 else store.dict.decode(int(c)) for c in row)
+        for row in r.rows
+    )
+
+
+@pytest.fixture()
+def small_store():
+    store = QuadStore()
+    store.add(":a", ":knows", ":b")
+    store.add(":b", ":knows", ":c")
+    store.add(":x", ":flag", ":on")
+    return store.build()
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_not_exists_disjoint_removes_all(small_store, engine):
+    """SPARQL §8.3.3 divergence: the inner pattern shares no variables and
+    HAS a solution -> NOT EXISTS removes every row, MINUS keeps every row.
+    The old desugaring to MINUS answered both queries identically."""
+    q_ne = "SELECT ?a ?b { ?a :knows ?b . FILTER NOT EXISTS { ?x :flag :on } }"
+    q_mi = "SELECT ?a ?b { ?a :knows ?b . MINUS { ?x :flag :on } }"
+    assert _exec(small_store, q_ne, engine) == []
+    assert _exec(small_store, q_mi, engine) == [(":a", ":b"), (":b", ":c")]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_not_exists_disjoint_empty_inner_keeps_all(small_store, engine):
+    q = "SELECT ?a ?b { ?a :knows ?b . FILTER NOT EXISTS { ?x :flag :off } }"
+    assert _exec(small_store, q, engine) == [(":a", ":b"), (":b", ":c")]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_not_exists_shared_vars_still_anti_join(small_store, engine):
+    q = "SELECT ?a ?b { ?a :knows ?b . FILTER NOT EXISTS { ?b :knows ?c } }"
+    assert _exec(small_store, q, engine) == [(":b", ":c")]
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("strategy", [None, "hash", "merge"])
+def test_optional_disjoint_keeps_left_rows(small_store, engine, strategy):
+    """Left join with no shared variables and an EMPTY optional side must
+    keep every left row with the optional variable unbound (the PCross
+    plan returned zero rows)."""
+    q = "SELECT ?a ?b ?x { ?a :knows ?b . OPTIONAL { ?x :flag :off } }"
+    want = [(":a", ":b", None), (":b", ":c", None)]
+    assert _exec(small_store, q, engine, strategy) == want
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_optional_disjoint_nonempty_is_cross(small_store, engine):
+    q = "SELECT ?a ?b ?x { ?a :knows ?b . OPTIONAL { ?x :flag :on } }"
+    want = [(":a", ":b", ":x"), (":b", ":c", ":x")]
+    assert _exec(small_store, q, engine) == want
+
+
+# ---------------------------------------------------------------------------
+# engine-level hypothesis parity: forced-hash == forced-merge == legacy row
+# ---------------------------------------------------------------------------
+
+graphs = st.builds(
+    lambda e1, e2: (sorted(set(e1)), sorted(set(e2))),
+    st.lists(st.tuples(st.integers(0, 7), st.integers(0, 7)), max_size=50),
+    st.lists(st.tuples(st.integers(0, 7), st.integers(0, 3)), max_size=25),
+)
+
+
+def _graph_store(knows, interests):
+    store = QuadStore()
+    for s, o in knows:
+        store.add(f":p{s}", ":knows", f":p{o}")
+    for s, t in interests:
+        store.add(f":p{s}", ":interest", f":tag{t}")
+    return store.build()
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large])
+@given(graphs)
+def test_strategies_agree_on_optional_minus_not_exists(g):
+    knows, interests = g
+    store = _graph_store(knows, interests)
+    queries = [
+        "SELECT ?a ?b ?t { ?a :knows ?b . OPTIONAL { ?b :interest ?t } }",
+        "SELECT ?a ?b { ?a :knows ?b . MINUS { ?b :knows ?a } }",
+        "SELECT ?a ?b { ?a :knows ?b . FILTER NOT EXISTS { ?b :interest ?t } }",
+        "SELECT ?a ?b ?c { ?a :knows ?b . ?b :knows ?c . ?c :knows ?a }",
+    ]
+    for q in queries:
+        ref = _exec(store, q, "legacy", "merge")
+        for engine in ENGINES:
+            for strategy in (None, "hash", "merge"):
+                assert _exec(store, q, engine, strategy) == ref, (q, engine, strategy)
+
+
+# ---------------------------------------------------------------------------
+# costing pins: strategy choice + semi/anti estimates through stats
+# ---------------------------------------------------------------------------
+
+
+def _plan_for(store, query, strategy=None):
+    e = Engine(store, EngineConfig(join_strategy=strategy))
+    node, vt = e.parse(query)
+    return e.plan(node), vt
+
+
+def test_planner_anti_estimate_flows_through_stats(small_store):
+    """The anti estimate must reflect the right side (containment-based
+    semi-join selectivity), not the old flat left * 0.5 — and it must be
+    set before the hash-vs-merge choice prices output cost."""
+    from repro.core.planner import PHashJoin, PMergeJoin
+    from repro.core.stats import GraphStats
+
+    stats = GraphStats(small_store)
+    # pin the stats method itself: d_b >= d_a -> every left key can match
+    assert stats.semi_join_cardinality(100, 10, 10, anti=True) == 0.0
+    assert stats.semi_join_cardinality(100, 10, 10, anti=False) == 100.0
+    # half the left key domain is covered by the right side
+    assert stats.semi_join_cardinality(100, 10, 5, anti=True) == 50.0
+
+    q = "SELECT ?a ?b { ?a :knows ?b . MINUS { ?b :knows ?c } }"
+    plan, _ = _plan_for(small_store, q)
+
+    def find_join(n):
+        if isinstance(n, (PHashJoin, PMergeJoin)):
+            return n
+        for f in ("child", "probe", "build", "left", "right"):
+            if hasattr(n, f):
+                j = find_join(getattr(n, f))
+                if j is not None:
+                    return j
+        return None
+
+    j = find_join(plan)
+    assert j is not None and j.mode == "anti"
+    # :knows has 2 edges with every subject also an object's domain; the
+    # containment estimate gives 0 surviving rows — the flat rule said 1.0
+    assert j.est_rows != pytest.approx(2 * 0.5), j.est_rows
+
+
+def test_planner_strategy_choice_and_force(small_store):
+    from repro.core.planner import PHashJoin, PMergeJoin, PSort, explain
+
+    # UNION output is unsorted on the join var -> cost picks hash, no PSort
+    q = ("SELECT ?a ?b ?t { { ?a :knows ?b } UNION { ?b :knows ?a } "
+         "OPTIONAL { ?b :interest ?t } }")
+    plan, vt = _plan_for(small_store, q)
+
+    def collect(n, cls, acc):
+        if isinstance(n, cls):
+            acc.append(n)
+        for f in ("child", "probe", "build", "left", "right"):
+            if hasattr(n, f):
+                collect(getattr(n, f), cls, acc)
+        return acc
+
+    hash_joins = collect(plan, PHashJoin, [])
+    assert hash_joins and hash_joins[0].mode == "left_outer"
+    assert not collect(plan, PSort, []), "hash strategy must not re-sort"
+    assert "HashJoin" in explain(plan, vt)
+
+    # forcing merge restores the double-PSort shape
+    plan_m, _ = _plan_for(small_store, q, strategy="merge")
+    assert collect(plan_m, PMergeJoin, [])
+    assert not collect(plan_m, PHashJoin, [])
+    assert len(collect(plan_m, PSort, [])) >= 1
+
+    # forcing hash converts even sorted-input binary joins
+    q2 = "SELECT ?a ?b ?t { ?a :knows ?b . OPTIONAL { ?a :interest ?t } }"
+    plan_h, _ = _plan_for(small_store, q2, strategy="hash")
+    assert collect(plan_h, PHashJoin, [])
+
+
+def test_planner_sorted_inputs_still_merge(small_store):
+    """Cost-model pin: with both inputs already sorted on the join var the
+    merge join is nearly free and must win; two large unsorted inputs must
+    flip to hash (that is the whole point of §11)."""
+    from repro.core import algebra as A
+    from repro.core.planner import Planner, PScan
+    from repro.core.stats import GraphStats
+
+    pl = Planner(GraphStats(small_store), dictionary=small_store.dict)
+    pat = A.TriplePattern(A.V(0), A.K(":knows"), A.V(1))
+
+    def leaf(est, sort_var):
+        n = PScan(pat, sort_var)
+        n.est_rows = est
+        return n
+
+    sorted_l, sorted_r = leaf(100_000, 0), leaf(100_000, 0)
+    assert pl._choose_join_strategy(sorted_l, sorted_r, 0, 100.0) == "merge"
+    unsorted_l, unsorted_r = leaf(100_000, None), leaf(100_000, None)
+    assert pl._choose_join_strategy(unsorted_l, unsorted_r, 0, 100.0) == "hash"
+    # one sorted side + a tiny other side: re-sorting the tiny side is
+    # cheaper than building a hash table over the big sorted one
+    tiny = leaf(100, None)
+    assert pl._choose_join_strategy(tiny, sorted_r, 0, 100.0) == "merge"
+
+
+def test_hash_join_profile_surfaces_counters(small_store):
+    e = Engine(small_store, EngineConfig(join_strategy="hash"))
+    q = "SELECT ?a ?b ?t { ?a :knows ?b . OPTIONAL { ?b :interest ?t } }"
+    r = e.execute(q)
+    prof = r.profile()
+    assert "HashJoin" in prof and "hash_build_rows" in prof

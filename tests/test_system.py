@@ -77,7 +77,9 @@ def test_profiler_reports_tree(social):
     store, _ = social
     r = Engine(store, EngineConfig(engine="barq")).execute(LSQB_QUERIES["q6"])
     prof = r.profile()
-    assert "MergeJoin" in prof and "Scan" in prof and "wall" in prof
+    # the cost-based planner may pick either join strategy here (§11)
+    assert ("MergeJoin" in prof or "HashJoin" in prof)
+    assert "Scan" in prof and "wall" in prof
     stats = collect_stats(r.root)
     assert stats["rows_scanned"] > 0 and stats["operators"] >= 5
 
