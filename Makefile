@@ -1,17 +1,23 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test smoke bench
+.PHONY: check test smoke bench regression
 
 # tier-1 gate: full test suite + the operator microbenchmark suite as an
-# allocation/perf smoke test (see DESIGN.md §6)
-check: test smoke
+# allocation/perf smoke test (see DESIGN.md §6) + the cross-PR benchmark
+# regression check over the committed BENCH_PR*.json files (DESIGN.md §12)
+check: test smoke regression
 
 test:
 	$(PYTHON) -m pytest -q
 
 smoke:
 	$(PYTHON) -m benchmarks.run --fast --suite ops
+
+# static gate: newest committed BENCH_PR*.json vs the most recent prior
+# file reporting the same metric on the same workload; fails beyond 1.15x
+regression:
+	$(PYTHON) -m benchmarks.check_regression
 
 bench:
 	$(PYTHON) -m benchmarks.run --json bench_results.json

@@ -1,0 +1,146 @@
+"""Cross-PR benchmark regression gate (ISSUE-6 satellite).
+
+Compares the committed BENCH_PR<N>.json of the current PR against the most
+recent prior BENCH_PR*.json that reports the same metric, and fails if any
+shared metric regressed by more than the threshold (default 1.15x on
+us_per_call, lower is better).
+
+Benchmark workloads legitimately change between PRs (sizes, key counts), so
+two rows are only comparable when their workload signature matches: the
+size-describing tokens inside the ``derived`` field (tuples_out=, rows=,
+groups=, pairs=, selected=, n=). Rows whose signature changed are reported
+as skipped, not compared — a gate that screams every time a workload is
+retuned trains people to ignore it.
+
+Usage:
+    python -m benchmarks.check_regression            # newest BENCH_PR*.json
+    python -m benchmarks.check_regression --current BENCH_PR6.json
+    python -m benchmarks.check_regression --threshold 1.15
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, Optional, Tuple
+
+# derived-field tokens that describe workload size; if any of these differ
+# between two rows of the same name, the rows measure different work
+_SIG_TOKENS = ("tuples_out", "rows", "groups", "pairs", "selected", "n")
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _pr_number(path: str) -> int:
+    m = re.search(r"BENCH_PR(\d+)\.json$", path)
+    return int(m.group(1)) if m else -1
+
+
+def _workload_sig(derived: str) -> Tuple[Tuple[str, str], ...]:
+    sig = []
+    for tok in str(derived).split(";"):
+        if "=" not in tok:
+            continue
+        k, v = tok.split("=", 1)
+        if k.strip() in _SIG_TOKENS:
+            sig.append((k.strip(), v.strip()))
+    return tuple(sorted(sig))
+
+
+def _after_rows(path: str) -> Dict[Tuple[str, str], dict]:
+    """(suite, metric_name) -> row, from a bench file's 'after' section."""
+    with open(path) as f:
+        data = json.load(f)
+    rows: Dict[Tuple[str, str], dict] = {}
+    for suite, entries in data.get("after", {}).items():
+        for row in entries:
+            rows[(suite, row["name"])] = row
+    return rows
+
+
+def check(
+    current_path: str, threshold: float = 1.15, root: str = REPO_ROOT
+) -> int:
+    """Returns the number of regressions (0 = gate passes)."""
+    current_pr = _pr_number(current_path)
+    priors = sorted(
+        (
+            p
+            for p in glob.glob(os.path.join(root, "BENCH_PR*.json"))
+            if 0 <= _pr_number(p) < current_pr
+        ),
+        key=_pr_number,
+        reverse=True,
+    )
+    current = _after_rows(current_path)
+    if not current:
+        print(f"error: no 'after' rows in {current_path}")
+        return 1
+
+    # most recent prior value per metric
+    baseline: Dict[Tuple[str, str], Tuple[dict, str]] = {}
+    for p in priors:
+        for key, row in _after_rows(p).items():
+            baseline.setdefault(key, (row, os.path.basename(p)))
+
+    regressions, compared, skipped = 0, 0, 0
+    for key, row in sorted(current.items()):
+        prior = baseline.get(key)
+        if prior is None:
+            continue  # new metric this PR: nothing to compare against
+        prow, psrc = prior
+        if _workload_sig(row.get("derived", "")) != _workload_sig(
+            prow.get("derived", "")
+        ):
+            skipped += 1
+            print(f"skip  {key[0]}/{key[1]}: workload changed vs {psrc}")
+            continue
+        cur, old = float(row["us_per_call"]), float(prow["us_per_call"])
+        ratio = cur / max(old, 1e-9)
+        compared += 1
+        tag = "REGRESSION" if ratio > threshold else "ok"
+        print(
+            f"{tag:>10}  {key[0]}/{key[1]}: {old:.1f} -> {cur:.1f} us "
+            f"({ratio:.2f}x vs {psrc})"
+        )
+        if ratio > threshold:
+            regressions += 1
+
+    print(
+        f"\n{compared} compared, {skipped} skipped (workload changed), "
+        f"{regressions} regression(s) beyond {threshold:.2f}x"
+    )
+    return regressions
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--current",
+        default=None,
+        help="bench file for this PR (default: highest-numbered BENCH_PR*.json)",
+    )
+    ap.add_argument("--threshold", type=float, default=1.15)
+    args = ap.parse_args(argv)
+
+    current = args.current
+    if current is None:
+        candidates = sorted(
+            glob.glob(os.path.join(REPO_ROOT, "BENCH_PR*.json")), key=_pr_number
+        )
+        if not candidates:
+            print("error: no BENCH_PR*.json files found")
+            return 1
+        current = candidates[-1]
+    elif not os.path.isabs(current):
+        current = os.path.join(REPO_ROOT, current)
+    print(f"current: {os.path.basename(current)}")
+    return 1 if check(current, args.threshold) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,6 +49,7 @@ from repro.core.operators.simple import (
 )
 from repro.core.operators.sort import OrderByOp, SortByVarOp
 from repro.core.profiler import profile_tree
+from repro.core.sip import SipFilter
 from repro.core.stats import GraphStats
 from repro.core.storage import QuadStore
 
@@ -79,6 +80,11 @@ class EngineConfig:
     # binary-join physical strategy: None = cost-based (DESIGN.md §11),
     # "hash" / "merge" force one path (parity tests, ablations)
     join_strategy: Optional[str] = None
+    # sideways information passing (DESIGN.md §12): None = cost-gated,
+    # "on" = push prefilters wherever sound, "off" = disabled
+    sip: Optional[str] = None
+    # kernel backend for the bloom summaries (None = REPRO_KERNEL_BACKEND)
+    sip_backend: Optional[str] = None
     # buffer pooling (DESIGN.md §2.3): recycle batch buffers through a
     # per-query arena so steady-state execution is allocation-free
     pool_buffers: bool = True
@@ -94,6 +100,18 @@ class Translator:
             if cfg.pool_buffers and cfg.engine != "legacy"
             else None
         )
+        # SIP runtime handles, keyed by annotation sid: consuming leaves
+        # and exporting joins resolve to the same SipFilter object. Fresh
+        # per Translator, so a plan reused through the server's plan cache
+        # never sees stale summaries.
+        self._sip_registry: Dict[int, SipFilter] = {}
+
+    def _sip_filter(self, ann: "PL.PSipFilter") -> SipFilter:
+        sf = self._sip_registry.get(ann.sid)
+        if sf is None:
+            sf = SipFilter(ann.var, sid=ann.sid, backend=self.cfg.sip_backend)
+            self._sip_registry[ann.sid] = sf
+        return sf
 
     # -- entry ------------------------------------------------------------------
 
@@ -126,6 +144,7 @@ class Translator:
             return IndexScan(
                 self.store, n.pattern, n.sort_var, sizer=self._sizer(),
                 pool=self.pool,
+                sip_filters=[self._sip_filter(a) for a in n.sip],
             )
         if isinstance(n, PL.PPathExpand):
             # vectorized frontier engine (DESIGN.md §8): paths run on the
@@ -135,6 +154,7 @@ class Translator:
             return PathExpand(
                 self.store, n.pattern.expr, n.pattern.s, n.pattern.o,
                 batch_size=self.cfg.max_batch, pool=self.pool,
+                sip_filters=[self._sip_filter(a) for a in n.sip],
             )
         if isinstance(n, PL.PPathScan):
             # pre-§8 physical plans: row-based `+` bridged via adapter
@@ -155,6 +175,15 @@ class Translator:
         if isinstance(n, PL.PMergeJoin):
             left = self._to_batch(self._build(n.left))
             right = self._to_batch(self._build(n.right))
+            # SIP export (DESIGN.md §12): the build window summarizes as a
+            # full bloom off a Sort's materialization, or a free O(1) code
+            # range off a sorted scan; anything else stays pass-through
+            for ann in n.sip_exports:
+                sf = self._sip_filter(ann)
+                if isinstance(right, SortByVarOp):
+                    sf.bind(lambda r=right, v=ann.var: ("keys", r.sip_keys(v)))
+                elif isinstance(right, IndexScan) and right.sorted_by() == ann.var:
+                    sf.bind(lambda r=right: ("range",) + r.sip_code_range())
             return MergeJoin(
                 left,
                 right,
@@ -175,7 +204,7 @@ class Translator:
         if isinstance(n, PL.PHashJoin):
             from repro.core.operators.hash_join import HashJoin
 
-            return HashJoin(
+            op = HashJoin(
                 self._to_batch(self._build(n.probe)),
                 self._to_batch(self._build(n.build)),
                 n.keys,
@@ -186,6 +215,12 @@ class Translator:
                 pool=self.pool,
                 post_program=n.post_program,
             )
+            # SIP export: reuse the materialized build layout as bloom keys
+            for ann in n.sip_exports:
+                self._sip_filter(ann).bind(
+                    lambda j=op, v=ann.var: ("keys", j.sip_keys(v))
+                )
+            return op
         if isinstance(n, PL.PCross):
             return CrossJoin(
                 self._to_batch(self._build(n.left)),
@@ -482,7 +517,14 @@ class Engine:
             barq_enabled=self.cfg.engine != "legacy",
             dictionary=store.dict,
             join_strategy=self.cfg.join_strategy,
+            sip=self.cfg.sip,
         )
+
+    def plan_fingerprint(self) -> str:
+        """Identity of every config knob that changes plan shape. Plan
+        caches keyed on query text alone serve a stale shape after a
+        config change — fold this in (see serve.query_server)."""
+        return f"{self.cfg.engine}|{self.cfg.join_strategy}|{self.cfg.sip}"
 
     def parse(self, text: str) -> Tuple[A.PlanNode, A.VarTable]:
         from repro.core.parser import parse_query

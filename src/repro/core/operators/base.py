@@ -85,6 +85,12 @@ class BatchOperator:
     def supports_skip(self) -> bool:
         return self.sorted_by() is not None
 
+    def can_skip(self, var: Optional[int]) -> bool:
+        """True iff skip(var, ...) is valid on this operator — queryable so
+        callers (SIP range narrowing, join galloping) choose mask-mode
+        fallbacks instead of relying on ValueError control flow."""
+        return var is not None and self.sorted_by() == var
+
     def children(self) -> List["BatchOperator"]:
         return []
 

@@ -211,6 +211,21 @@ class HashJoin(BatchOperator):
         self.stats.extra["hash_partitions"] = self._n_parts
         self.stats.extra["hash_build_ms"] = round((perf_counter() - t0) * 1e3, 3)
 
+    def sip_keys(self, var: int) -> np.ndarray:
+        """Build-side key column for a SipFilter export (DESIGN.md §12).
+        Runs the build phase if needed — safe, because _next() always
+        builds before the first probe batch is pulled, so forcing it from
+        a probe-side leaf's first batch only moves the same work earlier.
+        The partition-grouped reorder doesn't matter: the bloom filter is
+        order-insensitive."""
+        self._ensure_built()
+        self.stats.extra["sip_exports"] = (
+            self.stats.extra.get("sip_exports", 0) + 1
+        )
+        return np.ascontiguousarray(
+            self._bcols[self._bv.index(var), : self._n_build]
+        )
+
     # -- probe phase -------------------------------------------------------------
 
     def _probe_keys(self, cb: ColumnBatch) -> Tuple[Optional[np.ndarray], np.ndarray]:

@@ -15,13 +15,14 @@ dedup ratio) land in OpStats.extra for the profiler.
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.algebra import K, Slot, V
 from repro.core.batch import BatchPool, ColumnBatch
 from repro.core.operators.base import BatchOperator
+from repro.core.sip import SipFilter
 from repro.core.paths.engine import PathEngine, PathResult
 from repro.core.paths.expr import PathExpr, path_repr
 from repro.core.storage import QuadStore
@@ -37,10 +38,16 @@ class PathExpand(BatchOperator):
         batch_size: int = 4096,
         pool: Optional[BatchPool] = None,
         backend: Optional[str] = None,
+        sip_filters: Sequence[SipFilter] = (),
     ) -> None:
         self.store = store
         self.expr = expr
         self.s_slot, self.o_slot = s_slot, o_slot
+        # SIP prefilters (DESIGN.md §12), mask-mode only: the closure is
+        # materialized wholesale by the frontier engine, so range seeks buy
+        # nothing here — but masking emitted pairs still prunes the join's
+        # probe stream
+        self.sip_filters = list(sip_filters)
         self.batch_size = batch_size
         self.pool = pool
         self.engine = PathEngine(store, pool, backend)
@@ -163,12 +170,32 @@ class PathExpand(BatchOperator):
             cols = [res.src[sl]]
         else:
             cols = [res.dst[sl]]
-        return ColumnBatch.from_columns(
+        b = ColumnBatch.from_columns(
             self._var_ids, cols, self._sorted_var, pool=self.pool
         )
+        for f in self.sip_filters:
+            if f.var not in self._var_ids:
+                continue
+            m = f.mask(b.columns[b.col_index(f.var), : b.n_rows])
+            if m is None:
+                continue
+            full = np.ones(b.capacity, dtype=bool)
+            full[: b.n_rows] = m
+            b = b.with_mask(full)
+        if self.sip_filters:
+            self.stats.extra["sip_pruned_rows"] = sum(
+                f.rows_pruned for f in self.sip_filters
+            )
+            self.stats.extra["sip_probe_dispatches"] = sum(
+                f.probe_dispatches for f in self.sip_filters
+            )
+        return b
+
+    def can_skip(self, var: Optional[int]) -> bool:
+        return var is not None and var == self._sorted_var
 
     def _skip(self, var: int, target: int) -> None:
-        if var != self._sorted_var:
+        if not self.can_skip(var):
             raise ValueError("skip on unsorted variable")
         if self._result is None:
             self._result = self._evaluate()

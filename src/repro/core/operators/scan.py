@@ -8,7 +8,7 @@ and counts rows read from storage so benchmarks can report overfetching.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -16,6 +16,7 @@ from repro.core.adaptive import AdaptiveBatchSizer
 from repro.core.algebra import K, TriplePattern, V
 from repro.core.batch import BatchPool, ColumnBatch
 from repro.core.operators.base import BatchOperator
+from repro.core.sip import SipFilter
 from repro.core.storage import INDEX_ORDERS, QuadStore, ScanRange
 
 _ROLE_NAMES = ("s", "p", "o", "g")
@@ -30,10 +31,19 @@ class IndexScan(BatchOperator):
         sizer: Optional[AdaptiveBatchSizer] = None,
         detail: str = "",
         pool: Optional[BatchPool] = None,
+        sip_filters: Sequence[SipFilter] = (),
     ) -> None:
         self.store = store
         self.pattern = pattern
         self.pool = pool
+        # sideways-information-passing prefilters (DESIGN.md §12): each is
+        # a bloom/range summary of some downstream join's build side. On
+        # the sorted var they narrow the scan through skip()/seek; on other
+        # vars they mask batches. Applied lazily on the first next() so the
+        # exporting join's build phase has run by then.
+        self.sip_filters = list(sip_filters)
+        self._sip_pending = bool(self.sip_filters)
+        self._sip_hi: Optional[int] = None
 
         # encode constant slots; a constant not present in the dictionary
         # means the pattern matches nothing
@@ -106,25 +116,92 @@ class IndexScan(BatchOperator):
         return self._sorted_var
 
     def _next(self) -> Optional[ColumnBatch]:
-        if self.offset >= len(self.range):
-            return None
-        count = self.sizer.on_next()
-        rows = self.store.read(self.range, self.offset, count)
-        self.offset += len(rows)
-        self.stats.rows_scanned += len(rows)
-        cols = [rows[:, self.var_col_pos[v]] for v in self._var_ids]
-        b = ColumnBatch.from_columns(
-            self._var_ids, cols, self._sorted_var, pool=self.pool
-        )
-        for ra, rb in self.residual_pairs:
-            pa, pb = self.perm.index(ra), self.perm.index(rb)
-            m = np.zeros(b.capacity, dtype=bool)
-            m[: b.n_rows] = rows[:, pa] == rows[:, pb]
-            b = b.with_mask(m)
+        if self._sip_pending:
+            self._apply_sip_ranges()
+        while True:
+            if self.offset >= len(self.range):
+                return None
+            count = self.sizer.on_next()
+            rows = self.store.read(self.range, self.offset, count)
+            self.offset += len(rows)
+            self.stats.rows_scanned += len(rows)
+            if self._sip_hi is not None and len(rows):
+                keys = rows[:, self._sort_col_pos]
+                if keys[0] > self._sip_hi:
+                    # galloped past the build-side range: the scan is done
+                    self.offset = len(self.range)
+                    return None
+                if keys[-1] > self._sip_hi:
+                    end = int(np.searchsorted(keys, self._sip_hi, "right"))
+                    rows = rows[:end]
+                    self.offset = len(self.range)
+            cols = [rows[:, self.var_col_pos[v]] for v in self._var_ids]
+            b = ColumnBatch.from_columns(
+                self._var_ids, cols, self._sorted_var, pool=self.pool
+            )
+            for ra, rb in self.residual_pairs:
+                pa, pb = self.perm.index(ra), self.perm.index(rb)
+                m = np.zeros(b.capacity, dtype=bool)
+                m[: b.n_rows] = rows[:, pa] == rows[:, pb]
+                b = b.with_mask(m)
+            b = self._apply_sip_masks(b)
+            if b.n_active or self.offset >= len(self.range):
+                return b
+            # fully pruned by SIP: read the next chunk instead of bouncing
+            # an empty batch up the pipeline
+            b.release()
+
+    # -- sideways information passing (DESIGN.md §12) ---------------------------
+
+    def _apply_sip_ranges(self) -> None:
+        """Code-range narrowing on the sorted var, once, before the first
+        read: seek to the build side's min key and stop past its max —
+        the skip() machinery applied sideways instead of from a parent."""
+        self._sip_pending = False
+        for f in self.sip_filters:
+            if not self.can_skip(f.var):
+                continue  # unsorted var: mask-mode only (no exceptions)
+            rng = f.code_range()
+            if rng is None:
+                continue
+            lo, hi = rng
+            if hi < lo:  # provably empty build side: nothing can match
+                self.offset = len(self.range)
+                return
+            self.offset = self.store.seek(
+                self.range, self.offset, self._sort_col_pos, lo
+            )
+            self._sip_hi = hi if self._sip_hi is None else min(self._sip_hi, hi)
+            self.stats.extra["sip_range_seeks"] = (
+                self.stats.extra.get("sip_range_seeks", 0) + 1
+            )
+
+    def _apply_sip_masks(self, b: ColumnBatch) -> ColumnBatch:
+        for f in self.sip_filters:
+            m = f.mask(b.columns[b.col_index(f.var), : b.n_rows])
+            if m is None:
+                continue
+            full = np.ones(b.capacity, dtype=bool)
+            full[: b.n_rows] = m
+            b = b.with_mask(full)
+        if self.sip_filters:
+            self.stats.extra["sip_pruned_rows"] = sum(
+                f.rows_pruned for f in self.sip_filters
+            )
+            self.stats.extra["sip_probe_dispatches"] = sum(
+                f.probe_dispatches for f in self.sip_filters
+            )
         return b
 
+    def can_skip(self, var: Optional[int]) -> bool:
+        return (
+            var is not None
+            and var == self._sorted_var
+            and self._sort_col_pos is not None
+        )
+
     def _skip(self, var: int, target: int) -> None:
-        if var != self._sorted_var or self._sort_col_pos is None:
+        if not self.can_skip(var):
             raise ValueError("skip on unsorted variable")
         self.sizer.on_skip()
         self.offset = self.store.seek(
@@ -134,7 +211,21 @@ class IndexScan(BatchOperator):
     def _reset(self) -> None:
         self.offset = 0
         self.sizer.on_reset()
+        self._sip_pending = bool(self.sip_filters)
+        self._sip_hi = None
 
     # cardinality for the planner
     def estimated_rows(self) -> int:
         return len(self.range)
+
+    def sip_code_range(self) -> Tuple[int, int]:
+        """Inclusive (lo, hi) of the sort column over the whole range —
+        O(1) off the sorted index, the range-only SipFilter payload a
+        merely-sorted merge-join build side can export without
+        materializing. (0, -1) when the scan is empty."""
+        n = len(self.range)
+        if n == 0 or self._sort_col_pos is None:
+            return 0, -1
+        first = self.store.read(self.range, 0, 1)[0, self._sort_col_pos]
+        last = self.store.read(self.range, n - 1, 1)[0, self._sort_col_pos]
+        return int(first), int(last)

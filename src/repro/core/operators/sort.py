@@ -138,6 +138,13 @@ class SortByVarOp(BatchOperator):
     def _next(self) -> Optional[ColumnBatch]:
         return self._ensure().next_batch()
 
+    def sip_keys(self, var: int) -> np.ndarray:
+        """Key column for a SipFilter export (DESIGN.md §12): the sort is
+        a pipeline breaker anyway, so forcing its materialization from a
+        probe-side leaf costs nothing extra asymptotically."""
+        src = self._ensure()
+        return src.cols[src.var_ids().index(var)]
+
     def _skip(self, var: int, target: int) -> None:
         self._ensure().skip(var, target)
 

@@ -39,9 +39,23 @@ class PhysNode:
 
 
 @dataclasses.dataclass
+class PSipFilter:
+    """Sideways-information-passing annotation (DESIGN.md §12): a probe-
+    side leaf carrying one of these prefilters its output through a
+    bloom/code-range summary of the exporting join's build side. ``sid``
+    links the consuming leaf to the exporting join (which lists the same
+    annotation in ``sip_exports``) across the translator."""
+
+    var: int
+    sid: int
+    source: str  # "hash_build" | "merge_build"
+
+
+@dataclasses.dataclass
 class PScan(PhysNode):
     pattern: A.TriplePattern
     sort_var: Optional[int]  # variable the scan should come out sorted by
+    sip: Tuple[PSipFilter, ...] = ()
 
 
 @dataclasses.dataclass
@@ -62,6 +76,7 @@ class PPathExpand(PhysNode):
 
     pattern: A.PathPattern
     seed_side: str = "subject"
+    sip: Tuple[PSipFilter, ...] = ()
 
 
 @dataclasses.dataclass
@@ -80,6 +95,7 @@ class PMergeJoin(PhysNode):
     amplifying: bool = False  # output >> inputs: the BARQ sweet spot
     # left-join condition compiled by the expression VM (planner-cached)
     post_program: Optional[object] = None
+    sip_exports: Tuple[PSipFilter, ...] = ()
 
 
 @dataclasses.dataclass
@@ -105,6 +121,7 @@ class PHashJoin(PhysNode):
     mode: str = "inner"
     post_filter: Optional[A.Expr] = None
     post_program: Optional[object] = None
+    sip_exports: Tuple[PSipFilter, ...] = ()
 
 
 @dataclasses.dataclass
@@ -287,9 +304,16 @@ class Planner:
         barq_enabled: bool = True,
         dictionary=None,
         join_strategy: Optional[str] = None,
+        sip: Optional[str] = None,
     ):
         assert join_strategy in (None, "hash", "merge")
+        assert sip in (None, "on", "off")
         self.stats = stats
+        # sideways information passing (DESIGN.md §12): None = cost-gated
+        # (push a prefilter when the build side looks selective), "on" =
+        # always push where sound, "off" = never annotate
+        self.sip = sip
+        self._sip_counter = 0
         # §4.2: the one cost-model tweak — amplifying merge joins get cheaper
         # when BARQ executes them
         self.barq_enabled = barq_enabled
@@ -308,7 +332,10 @@ class Planner:
     # -- public -------------------------------------------------------------------
 
     def plan(self, node: A.PlanNode) -> Phys:
-        return self._plan(node)
+        phys = self._plan(node)
+        if self.sip != "off":
+            self._sip_walk(phys)
+        return phys
 
     def compile_expr(self, expr: A.Expr, mode: str):
         """ExprProgram for ``expr``; ``False`` (cached) when the expression
@@ -331,6 +358,107 @@ class Planner:
         out = PFilter(expr, child, program=self.compile_expr(expr, "mask"))
         out.est_rows = child.est_rows * sel
         return out
+
+    # -- sideways information passing (DESIGN.md §12) ---------------------------
+
+    # auto mode pushes a prefilter only when the build side is estimated
+    # to be meaningfully smaller than the probe stream it would prune
+    _SIP_GATE = 0.5
+
+    def _sip_wanted(self, build_est: float, probe_est: float) -> bool:
+        if self.sip == "on":
+            return True
+        return build_est < self._SIP_GATE * max(probe_est, 1.0)
+
+    def _sip_walk(self, n: Phys) -> None:
+        """Post-pass over the final physical plan: for every inner/semi
+        hash or merge join whose build side looks selective, push a
+        PSipFilter annotation into the probe-side leaves. Runs bottom-up
+        so inner joins' filters land before outer ones'."""
+        for fld in ("child", "left", "right", "probe", "build"):
+            c = getattr(n, fld, None)
+            if isinstance(c, PhysNode):
+                self._sip_walk(c)
+        if (
+            isinstance(n, PHashJoin)
+            and n.mode in ("inner", "semi")
+            and n.keys
+            and self._sip_wanted(n.build.est_rows, n.probe.est_rows)
+        ):
+            for var in n.keys:
+                ann = PSipFilter(var, self._sip_counter, "hash_build")
+                if self._push_sip(n.probe, ann):
+                    self._sip_counter += 1
+                    n.sip_exports = n.sip_exports + (ann,)
+        if isinstance(n, PMergeJoin) and n.mode in ("inner", "semi"):
+            # the right side must either be a pipeline breaker (PSort —
+            # full bloom summary for free) or a sorted leaf (O(1)
+            # range-only summary); anything else would force an extra
+            # materialization just to summarize it
+            exportable = isinstance(n.right, PSort) or (
+                isinstance(n.right, PScan) and n.right.sort_var == n.var
+            )
+            if exportable and self._sip_wanted(n.right.est_rows, n.left.est_rows):
+                ann = PSipFilter(n.var, self._sip_counter, "merge_build")
+                if self._push_sip(n.left, ann):
+                    self._sip_counter += 1
+                    n.sip_exports = n.sip_exports + (ann,)
+
+    def _push_sip(self, n: Phys, ann: PSipFilter) -> bool:
+        """Descend toward leaves binding ann.var; attach where sound.
+        A SIP prefilter may only remove rows whose ann.var value is
+        certainly absent from the exporting join's build side, so it can
+        cross any operator for which 'prune child rows with var not in S'
+        never changes rows the top join would keep: filters, sorts,
+        distinct, both union branches, the probe/left side of inner,
+        semi, anti and left-outer joins, and grouping keyed on the var.
+        It must NOT cross a nullable (optional) side, an anti subtrahend,
+        a slice, or an aggregate input whose group keys don't include the
+        var."""
+        v = ann.var
+        if isinstance(n, PScan):
+            if v in n.pattern.vars():
+                n.sip = n.sip + (ann,)
+                return True
+            return False
+        if isinstance(n, PPathExpand):
+            if v in n.pattern.vars():
+                n.sip = n.sip + (ann,)
+                return True
+            return False
+        if isinstance(n, (PSort, PFilter, PHaving, PDistinct, POrderBy)):
+            return self._push_sip(n.child, ann)
+        if isinstance(n, PExtend):
+            # BIND introduces n.var fresh — if that's the filtered var it
+            # originates here, not in any leaf below
+            return False if v == n.var else self._push_sip(n.child, ann)
+        if isinstance(n, PProject):
+            return v in n.vars and self._push_sip(n.child, ann)
+        if isinstance(n, PGroup):
+            # sound only on a group key: pruning rows of a v∉S group
+            # removes that whole group, which the top join drops anyway
+            return v in n.group_vars and self._push_sip(n.child, ann)
+        if isinstance(n, (PUnion, PCross)):
+            a = self._push_sip(n.left, ann)
+            b = self._push_sip(n.right, ann)
+            return a or b
+        if isinstance(n, PMergeJoin):
+            if n.mode == "inner":
+                a = self._push_sip(n.left, ann)
+                b = self._push_sip(n.right, ann)
+                return a or b
+            if n.mode in ("semi", "anti", "left_outer"):
+                return self._push_sip(n.left, ann)
+            return False
+        if isinstance(n, (PHashJoin, PLookupJoin)):
+            if n.mode == "inner":
+                a = self._push_sip(n.probe, ann)
+                b = self._push_sip(n.build, ann)
+                return a or b
+            if n.mode in ("semi", "anti", "left_outer"):
+                return self._push_sip(n.probe, ann)
+            return False
+        return False  # PSlice, PPathScan: stop
 
     # -- logical dispatch -------------------------------------------------------------
 
@@ -446,9 +574,159 @@ class Planner:
             return self.stats.path_distinct_values(p, var)
         return self.stats.distinct_values(p, var)
 
+    # beyond this many patterns the exact DP's subset enumeration (3^n)
+    # would dominate planning time; fall back to the greedy loop
+    _BUSHY_MAX = 8
+
     def _plan_bgp(self, patterns: Sequence[A.TriplePattern], filters: List[A.Expr]) -> Phys:
         assert patterns
         remaining = [self._normalize_pattern(p) for p in patterns]
+        if 3 <= len(remaining) <= self._BUSHY_MAX:
+            plan = self._plan_bgp_bushy(remaining, list(filters))
+            if plan is not None:
+                return plan
+        return self._plan_bgp_greedy(remaining, filters)
+
+    def _plan_bgp_bushy(self, pats: List, filters: List[A.Expr]) -> Optional[Phys]:
+        """Bounded exact join ordering: bitmask DP over connected pattern
+        subsets (System-R generalized to bushy trees). Each DP state keeps
+        the cheapest plan for one subset under the §11 cost model with
+        SIP-aware probe discounts, so shapes like (A⋈B)⋈(C⋈D) — which the
+        greedy linear loop can never emit — win when two small
+        intermediate results exist. Returns None for disconnected BGPs
+        (the greedy loop's cartesian handling covers those)."""
+        n = len(pats)
+        leaves: List[Phys] = []
+        for p in pats:
+            leaf = self._leaf(p)
+            leaf.est_rows = self._pattern_card(p)
+            leaves.append(leaf)
+        vsets = [frozenset(p.vars()) for p in pats]
+        # variable set per subset mask
+        vmask = {0: frozenset()}
+        for m in range(1, 1 << n):
+            low = m & -m
+            vmask[m] = vmask[m ^ low] | vsets[low.bit_length() - 1]
+        # best[mask] = (cost, plan)
+        best: dict = {1 << i: (leaves[i].est_rows, leaves[i]) for i in range(n)}
+        for m in sorted(range(1, 1 << n), key=lambda x: bin(x).count("1")):
+            if bin(m).count("1") < 2:
+                continue
+            sub = (m - 1) & m
+            while sub:
+                oth = m ^ sub
+                if sub < oth and sub in best and oth in best and (
+                    vmask[sub] & vmask[oth]
+                ):
+                    ca, pa = best[sub]
+                    cb, pb = best[oth]
+                    join, jc = self._join_subplans(pa, pb)
+                    tot = ca + cb + jc
+                    if m not in best or tot < best[m][0]:
+                        best[m] = (tot, join)
+                sub = (sub - 1) & m
+        full = (1 << n) - 1
+        if full not in best:
+            return None
+        plan = best[full][1]
+        return self._attach_filters(plan, filters)
+
+    def _join_subplans(self, left: Phys, right: Phys) -> Tuple[Phys, float]:
+        """Join two DP subplans: pick the join var (preferring an already
+        sorted side), estimate output, and choose merge vs hash by the
+        §11 cost model. The hash probe pass is discounted by the SIP
+        survival fraction min(d_probe, d_build)/d_probe — the same
+        containment assumption stats.semi_join_cardinality uses — since
+        an annotated probe leaf never streams rows the build side can't
+        match. Never mutates its inputs (losing DP candidates share
+        subtrees with winners)."""
+        lv, rv = phys_vars(left), phys_vars(right)
+        shared = [v for v in lv if v in rv]
+        jv = shared[0]
+        for v in shared:
+            if phys_sorted_by(left) == v or phys_sorted_by(right) == v:
+                jv = v
+                break
+        d_l = self._distinct_estimate(left, jv)
+        d_r = self._distinct_estimate(right, jv)
+        est = self.stats.join_cardinality(
+            max(int(left.est_rows), 1), max(int(right.est_rows), 1), d_l, d_r
+        )
+        amplifying = est > 4 * max(left.est_rows, right.est_rows)
+        if self.barq_enabled and amplifying:
+            est *= 0.5  # §4.2: amplifying merge joins are cheap under BARQ
+        ln = max(left.est_rows, 1.0)
+        rn = max(right.est_rows, 1.0)
+        l_sorted = phys_sorted_by(left) == jv
+        r_sorted = phys_sorted_by(right) == jv
+        merge_cost = est + ln + rn
+        if not l_sorted:
+            merge_cost += _sort_cost(ln)
+        if not r_sorted:
+            merge_cost += _sort_cost(rn)
+        # hash: build the smaller side, stream the bigger one
+        if ln >= rn:
+            probe, build, pn, bn, d_p, d_b = left, right, ln, rn, d_l, d_r
+        else:
+            probe, build, pn, bn, d_p, d_b = right, left, rn, ln, d_r, d_l
+        sip_f = 1.0
+        if self.sip != "off" and self._sip_wanted(bn, pn):
+            sip_f = max(min(d_p, d_b) / max(d_p, 1), 0.05)
+        hash_cost = _HASH_BUILD_FACTOR * bn + pn * sip_f + est
+        if self.join_strategy == "merge" or (
+            self.join_strategy != "hash"
+            and (l_sorted and r_sorted or merge_cost <= hash_cost)
+        ):
+            if not l_sorted:
+                s = PSort(left, jv)
+                s.est_rows = left.est_rows
+                left = s
+            if not r_sorted:
+                s = PSort(right, jv)
+                s.est_rows = right.est_rows
+                right = s
+            out: Phys = PMergeJoin(left, right, jv)
+            out.amplifying = amplifying
+            out.est_rows = est
+            return out, merge_cost
+        keys = tuple(v for v in phys_vars(probe) if v in phys_vars(build))
+        if isinstance(probe, PScan) and probe.sort_var is None:
+            # a hash probe doesn't need sorted input, but asking the scan
+            # to come out sorted by the join var is free (index choice)
+            # and lets a pushed SIP filter narrow it by code range via
+            # seek instead of just masking (copy: DP leaves are shared
+            # across candidate plans)
+            p2 = PScan(probe.pattern, jv, sip=probe.sip)
+            p2.est_rows = probe.est_rows
+            probe = p2
+        out = PHashJoin(probe=probe, build=build, keys=keys)
+        out.est_rows = est
+        return out, hash_cost
+
+    def _attach_filters(self, plan: Phys, filters: List[A.Expr]) -> Phys:
+        """Place each pushed-down filter at the lowest node that covers
+        its variables (post-pass over the DP-chosen shape — the greedy
+        loop instead interleaves placement with ordering)."""
+        if not filters:
+            return plan
+
+        def place(node: Phys) -> Phys:
+            for fld in ("child", "left", "right", "probe", "build"):
+                c = getattr(node, fld, None)
+                if isinstance(c, PhysNode):
+                    setattr(node, fld, place(c))
+            for f in list(filters):
+                if set(A.expr_vars(f)) <= set(phys_vars(node)):
+                    filters.remove(f)
+                    node = self._pfilter(f, node)
+            return node
+
+        plan = place(plan)
+        for f in filters:  # vars never all bound: evaluate at the top
+            plan = self._pfilter(f, plan)
+        return plan
+
+    def _plan_bgp_greedy(self, remaining: List, filters: List[A.Expr]) -> Phys:
         cards = {id(p): self._pattern_card(p) for p in remaining}
         # start from the most selective pattern
         first = min(remaining, key=lambda p: cards[id(p)])
@@ -691,11 +969,25 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
     def vname(v):
         return f"?{var_table.name(v)}" if var_table else f"?v{v}"
 
+    def sip_in(node) -> str:
+        if not getattr(node, "sip", ()):
+            return ""
+        anns = ", ".join(
+            f"SipFilter({vname(f.var)}#{f.sid})" for f in node.sip
+        )
+        return f" sip=[{anns}]"
+
+    def sip_out(node) -> str:
+        if not getattr(node, "sip_exports", ()):
+            return ""
+        anns = ", ".join(f"{vname(f.var)}#{f.sid}" for f in node.sip_exports)
+        return f" sip-export=[{anns}]"
+
     if isinstance(n, PScan):
         t = []
         for sl in (n.pattern.s, n.pattern.p, n.pattern.o):
             t.append(vname(sl.id) if isinstance(sl, A.V) else str(sl.term))
-        return f"{pad}Scan({', '.join(t)}) est={n.est_rows:.0f}"
+        return f"{pad}Scan({', '.join(t)}) est={n.est_rows:.0f}{sip_in(n)}"
     if isinstance(n, PPathExpand):
         from repro.core.paths.expr import path_repr
 
@@ -703,14 +995,15 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
         o = vname(n.pattern.o.id) if isinstance(n.pattern.o, A.V) else str(n.pattern.o.term)
         return (
             f"{pad}PathExpand({s}, {path_repr(n.pattern.expr)}, {o}) "
-            f"[seed={n.seed_side}] est={n.est_rows:.0f}"
+            f"[seed={n.seed_side}] est={n.est_rows:.0f}{sip_in(n)}"
         )
     if isinstance(n, PSort):
         return f"{pad}Sort({vname(n.var)})\n" + explain(n.child, var_table, indent + 1)
     if isinstance(n, PMergeJoin):
         amp = " AMPLIFYING" if n.amplifying else ""
         return (
-            f"{pad}MergeJoin({vname(n.var)}, {n.mode}){amp} est={n.est_rows:.0f}\n"
+            f"{pad}MergeJoin({vname(n.var)}, {n.mode}){amp} "
+            f"est={n.est_rows:.0f}{sip_out(n)}\n"
             + explain(n.left, var_table, indent + 1)
             + "\n"
             + explain(n.right, var_table, indent + 1)
@@ -725,7 +1018,7 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
     if isinstance(n, PHashJoin):
         keys = ", ".join(vname(k) for k in n.keys) if n.keys else "<const>"
         return (
-            f"{pad}HashJoin({keys}, {n.mode}) est={n.est_rows:.0f}\n"
+            f"{pad}HashJoin({keys}, {n.mode}) est={n.est_rows:.0f}{sip_out(n)}\n"
             + explain(n.probe, var_table, indent + 1)
             + "\n"
             + explain(n.build, var_table, indent + 1)

@@ -60,6 +60,11 @@ class QuadStore:
     def __init__(self, dictionary: Optional[Dictionary] = None) -> None:
         self.dict = dictionary or Dictionary()
         self._indexes: Dict[str, np.ndarray] = {}
+        # contiguous per-column copies of each index: searchsorted on a
+        # strided column view of the (N, 4) C-order array copies the whole
+        # column before binary-searching, turning every range_for_pattern /
+        # seek into an O(N) memcpy instead of an O(log N) probe.
+        self._index_cols: Dict[str, list] = {}
         self._pending: list = []
         self.n_quads = 0
 
@@ -97,7 +102,11 @@ class QuadStore:
         raw = np.unique(raw, axis=0)
         self.n_quads = len(raw)
         for name, perm in INDEX_ORDERS.items():
-            self._indexes[name] = _lexsort_rows(raw[:, list(perm)])
+            idx = _lexsort_rows(raw[:, list(perm)])
+            self._indexes[name] = idx
+            self._index_cols[name] = [
+                np.ascontiguousarray(idx[:, i]) for i in range(4)
+            ]
         return self
 
     # -- pattern evaluation ----------------------------------------------------
@@ -135,15 +144,18 @@ class QuadStore:
         self, index: str, bound: Sequence[Optional[int]]
     ) -> ScanRange:
         """Binary-search the row range matching the bound prefix."""
-        arr = self._indexes[index]
+        cols = self._index_cols[index]
         perm = INDEX_ORDERS[index]
-        lo, hi = 0, len(arr)
+        lo, hi = 0, len(self._indexes[index])
         for col_pos in range(4):
             role = perm[col_pos]
             v = bound[role]
             if v is None:
                 break
-            col = arr[lo:hi, col_pos]
+            col = cols[col_pos][lo:hi]  # contiguous 1-D slice: O(log N)
+            # needle must match the column dtype: a Python-int needle makes
+            # numpy promote and cast the whole column (O(N)) before searching
+            v = np.int32(v)
             lo_off = np.searchsorted(col, v, side="left")
             hi_off = np.searchsorted(col, v, side="right")
             lo, hi = lo + int(lo_off), lo + int(hi_off)
@@ -160,9 +172,8 @@ class QuadStore:
         """skip(): offset (>= start) of first row whose key at ``sort_col_pos``
         within the index order is >= target. This is the RocksDB seek
         analogue the BARQ merge join drives (paper §3.2 Skip phase)."""
-        arr = self._indexes[rng.index]
-        col = arr[rng.lo + start : rng.hi, sort_col_pos]
-        return start + int(np.searchsorted(col, target, side="left"))
+        col = self._index_cols[rng.index][sort_col_pos][rng.lo + start : rng.hi]
+        return start + int(np.searchsorted(col, np.int32(target), side="left"))
 
     # -- stats for the optimizer ------------------------------------------------
 

@@ -615,3 +615,58 @@ def hash_probe_positions(
         rlo = np.where(rgo, rmid + 1, rlo)
         rhi = np.where(r_act & ~rgo, rmid, rhi)
     return llo.astype(np.int32), rlo.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# blocked bloom filter (sideways information passing, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+#
+# One uint32 word per block; each key sets two bits of one word, both derived
+# from two independent multiplicative hashes of the raw int32 code (NULL_ID
+# == -1 hashes like any other value — it equals itself in joins). A probe is
+# a member iff both its bits are set in its word: no false negatives, false
+# positives bounded by the words-per-key ratio chosen in bloom_n_words.
+
+_BLOOM_MULT2 = np.uint32(0x85EBCA6B)  # murmur3 fmix constant, decorrelates h2
+
+
+def bloom_n_words(n_keys: int) -> int:
+    """Power-of-two word count targeting ~16 bits per key (two probes in a
+    32-bit word at half load keeps the false-positive rate around 1-2%)."""
+    n = 1
+    while n * 2 < max(n_keys, 1) and n < (1 << 20):
+        n *= 2
+    return n
+
+
+def bloom_hash(keys: np.ndarray, n_words: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(word index, bit pattern) per key — the shared address computation
+    every backend must reproduce exactly (parity-swept in test_sip)."""
+    u = np.asarray(keys, dtype=np.int32).astype(np.uint32)
+    h1 = u * _HASH_MULT
+    h2 = u * _BLOOM_MULT2
+    word = ((h1 >> np.uint32(18)) & np.uint32(n_words - 1)).astype(np.int32)
+    b1 = h1 & np.uint32(31)
+    b2 = (h2 >> np.uint32(13)) & np.uint32(31)
+    bits = (np.uint32(1) << b1) | (np.uint32(1) << b2)
+    return word, bits
+
+
+def bloom_build(keys: np.ndarray, n_words: int) -> Tuple[np.ndarray, int, int]:
+    """(words, lo, hi): the blocked bloom filter plus the min/max code range
+    of the build side. An empty build returns the empty range (0, -1)."""
+    keys = np.asarray(keys, dtype=np.int32)
+    words = np.zeros(n_words, dtype=np.uint32)
+    if len(keys) == 0:
+        return words, 0, -1
+    word, bits = bloom_hash(keys, n_words)
+    np.bitwise_or.at(words, word, bits)
+    return words, int(keys.min()), int(keys.max())
+
+
+def bloom_probe(words: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    """Membership mask: True where the query's two bits are both set.
+    False positives possible, false negatives never."""
+    queries = np.asarray(queries, dtype=np.int32)
+    word, bits = bloom_hash(queries, len(words))
+    return (words[word] & bits) == bits

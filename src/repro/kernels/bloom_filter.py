@@ -1,0 +1,159 @@
+"""Pallas TPU kernels: blocked bloom filter build + membership probe.
+
+The sideways-information-passing prefilter (DESIGN.md §12): a hash/merge
+join's build side is summarized as one uint32 word per block, two bits per
+key, and probe-side scans test membership batch-at-a-time before the join
+ever sees the rows. Both kernels are gather/scatter-free: addressing is a
+one-hot comparison matrix against the word tile, so they run on the same
+(block, tile) sequential-grid accumulation pattern as frontier_dedup.
+
+  * build — scatter-OR decomposed per bit plane: a one-hot (word × key)
+    matmul against the key's 32 bit indicators counts how many keys set
+    each (word, bit); any nonzero count sets the bit. OR across key blocks
+    accumulates in-place in VMEM (output revisiting).
+  * probe — each query gathers its word via a one-hot sum over word tiles
+    (exactly one tile matches), then checks both bits in the jitted
+    epilogue.
+
+Address computation must match vecops.bloom_hash bit for bit — the parity
+sweeps in tests/test_sip.py hold all three backends to identical words.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+K_BLOCK = 1024  # build keys per grid step
+Q_BLOCK = 1024  # probe queries per grid step
+W_TILE = 1024  # filter words resident per grid step
+_PAD = jnp.iinfo(jnp.int32).min
+_MULT1 = np.uint32(0x9E3779B1)
+_MULT2 = np.uint32(0x85EBCA6B)
+
+
+def _hash(keys, n_words: int):
+    u = keys.astype(jnp.uint32)
+    h1 = u * _MULT1
+    h2 = u * _MULT2
+    word = ((h1 >> np.uint32(18)) & np.uint32(n_words - 1)).astype(jnp.int32)
+    bits = (jnp.uint32(1) << (h1 & np.uint32(31))) | (
+        jnp.uint32(1) << ((h2 >> np.uint32(13)) & np.uint32(31))
+    )
+    return word, bits
+
+
+def _build_kernel(keys_ref, out_ref, *, n_words: int):
+    i = pl.program_id(0)  # word tile
+    j = pl.program_id(1)  # key block
+    keys = keys_ref[...]  # (K_BLOCK,)
+    word, bits = _hash(keys, n_words)
+    rel = word - i * W_TILE
+    sel = (keys != _PAD) & (rel >= 0) & (rel < W_TILE)
+    rel = jnp.where(sel, rel, 0)
+    # (K_BLOCK, 32) bit indicators, zeroed for padding/out-of-tile keys
+    planes = (
+        (bits[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :])
+        & jnp.uint32(1)
+    ).astype(jnp.int32) * sel[:, None].astype(jnp.int32)
+    onehot = (
+        jax.lax.iota(jnp.int32, W_TILE)[:, None] == rel[None, :]
+    ).astype(jnp.int32)  # (W_TILE, K_BLOCK)
+    counts = jnp.dot(onehot, planes)  # (W_TILE, 32) keys setting each bit
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    tile_or = jnp.sum(
+        jnp.where(counts > 0, weights[None, :], jnp.uint32(0)),
+        axis=1, dtype=jnp.uint32,
+    )
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = tile_or
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] | tile_or
+
+
+@functools.partial(jax.jit, static_argnames=("n_words", "interpret"))
+def bloom_build_pallas(
+    keys: jax.Array, n_words: int, interpret: bool = True
+) -> jax.Array:
+    """(n_words,) uint32 filter words — see vecops.bloom_build."""
+    assert n_words & (n_words - 1) == 0, "n_words must be a power of two"
+    n = keys.shape[0]
+    k_pad = pl.cdiv(max(n, 1), K_BLOCK) * K_BLOCK
+    w_pad = pl.cdiv(n_words, W_TILE) * W_TILE
+    keys_p = (
+        jnp.full((k_pad,), _PAD, jnp.int32).at[:n].set(keys.astype(jnp.int32))
+    )
+    words = pl.pallas_call(
+        functools.partial(_build_kernel, n_words=n_words),
+        grid=(w_pad // W_TILE, k_pad // K_BLOCK),
+        in_specs=[pl.BlockSpec((K_BLOCK,), lambda i, j: (j,))],
+        out_specs=pl.BlockSpec((W_TILE,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((w_pad,), jnp.uint32),
+        interpret=interpret,
+    )(keys_p)
+    return words[:n_words]
+
+
+def _probe_kernel(words_ref, q_ref, out_ref, *, n_words: int):
+    j = pl.program_id(1)  # word tile
+    words = words_ref[...]  # (W_TILE,) uint32
+    q = q_ref[...]  # (Q_BLOCK,)
+    word, _ = _hash(q, n_words)
+    rel = word - j * W_TILE
+    sel = (rel >= 0) & (rel < W_TILE)
+    rel = jnp.where(sel, rel, 0)
+    onehot = (
+        jax.lax.iota(jnp.int32, W_TILE)[:, None] == rel[None, :]
+    ) & sel[None, :]
+    vals = jnp.sum(
+        jnp.where(onehot, words[:, None], jnp.uint32(0)),
+        axis=0, dtype=jnp.uint32,
+    )
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = vals
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + vals  # exactly one tile is nonzero
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bloom_probe_pallas(
+    words: jax.Array, queries: jax.Array, interpret: bool = True
+) -> jax.Array:
+    """(C,) bool membership mask — see vecops.bloom_probe."""
+    n_words = int(words.shape[0])
+    c = queries.shape[0]
+    q_pad = pl.cdiv(max(c, 1), Q_BLOCK) * Q_BLOCK
+    w_pad = pl.cdiv(n_words, W_TILE) * W_TILE
+    q_p = (
+        jnp.full((q_pad,), _PAD, jnp.int32)
+        .at[:c]
+        .set(queries.astype(jnp.int32))
+    )
+    words_p = (
+        jnp.zeros((w_pad,), jnp.uint32).at[:n_words].set(words)
+    )
+    gathered = pl.pallas_call(
+        functools.partial(_probe_kernel, n_words=n_words),
+        grid=(q_pad // Q_BLOCK, w_pad // W_TILE),
+        in_specs=[
+            pl.BlockSpec((W_TILE,), lambda i, j: (j,)),
+            pl.BlockSpec((Q_BLOCK,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((Q_BLOCK,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((q_pad,), jnp.uint32),
+        interpret=interpret,
+    )(words_p, q_p)
+    _, bits = _hash(q_p[:c], n_words)
+    return (gathered[:c] & bits) == bits

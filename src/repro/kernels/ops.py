@@ -401,3 +401,51 @@ def hash_probe(
         )
         return np.asarray(lo), np.asarray(hi)
     raise ValueError(be)
+
+
+# -- bloom filter: SIP prefilters (DESIGN.md §12) ----------------------------------
+
+
+def bloom_build(
+    keys, n_words: Optional[int] = None, backend: Optional[str] = None
+) -> Tuple[np.ndarray, int, int]:
+    """(words, lo, hi): blocked bloom filter words (uint32) plus the
+    min/max code range of the build keys — the payload of a SipFilter.
+    ``n_words`` defaults to vecops.bloom_n_words(len(keys))."""
+    be = _backend(backend)
+    DISPATCH_COUNTS["bloom_build"] += 1
+    keys = np.ascontiguousarray(keys, dtype=np.int32)
+    if n_words is None:
+        n_words = vecops.bloom_n_words(len(keys))
+    if be == "numpy" or len(keys) == 0:
+        return vecops.bloom_build(keys, n_words)
+    lo, hi = int(keys.min()), int(keys.max())
+    if be == "jax":
+        from repro.kernels import ref
+
+        return np.asarray(ref.bloom_build(keys, n_words)), lo, hi
+    if be == "pallas":
+        from repro.kernels.bloom_filter import bloom_build_pallas
+
+        return np.asarray(bloom_build_pallas(keys, n_words)), lo, hi
+    raise ValueError(be)
+
+
+def bloom_probe(words, queries, backend: Optional[str] = None) -> np.ndarray:
+    """(C,) bool membership mask over ``queries`` — no false negatives."""
+    be = _backend(backend)
+    DISPATCH_COUNTS["bloom_probe"] += 1
+    queries = np.ascontiguousarray(queries, dtype=np.int32)
+    if be == "numpy":
+        return vecops.bloom_probe(words, queries)
+    if len(queries) == 0:
+        return np.zeros(0, dtype=bool)
+    if be == "jax":
+        from repro.kernels import ref
+
+        return np.asarray(ref.bloom_probe(words, queries))
+    if be == "pallas":
+        from repro.kernels.bloom_filter import bloom_probe_pallas
+
+        return np.asarray(bloom_probe_pallas(words, queries))
+    raise ValueError(be)

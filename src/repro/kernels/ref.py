@@ -278,3 +278,44 @@ def hash_probe(
 
     lo, hi = jax.lax.fori_loop(0, 32, step, (lo, hi))
     return lo
+
+
+# ---------------------------------------------------------------------------
+# blocked bloom filter (SIP prefilters, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+_BLOOM_MULT2 = jnp.uint32(0x85EBCA6B)
+
+
+def _bloom_hash(keys: jax.Array, n_words: int):
+    """Same address computation as vecops.bloom_hash, bit for bit."""
+    u = keys.astype(jnp.uint32)
+    h1 = u * _HASH_MULT
+    h2 = u * _BLOOM_MULT2
+    word = ((h1 >> jnp.uint32(18)) & jnp.uint32(n_words - 1)).astype(jnp.int32)
+    b1 = h1 & jnp.uint32(31)
+    b2 = (h2 >> jnp.uint32(13)) & jnp.uint32(31)
+    bits = (jnp.uint32(1) << b1) | (jnp.uint32(1) << b2)
+    return word, bits
+
+
+@functools.partial(jax.jit, static_argnames=("n_words",))
+def bloom_build(keys: jax.Array, n_words: int) -> jax.Array:
+    """(n_words,) uint32 filter words. jax has no scatter-OR, so the OR is
+    decomposed per bit plane: scatter-ADD each key's 32 bit indicators into
+    a (n_words, 32) count table, then any nonzero count sets that bit."""
+    word, bits = _bloom_hash(keys, n_words)
+    planes = ((bits[:, None] >> jnp.arange(32, dtype=jnp.uint32)[None, :])
+              & jnp.uint32(1)).astype(jnp.int32)
+    counts = jnp.zeros((n_words, 32), jnp.int32).at[word].add(planes)
+    weights = jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(
+        jnp.where(counts > 0, weights[None, :], jnp.uint32(0)),
+        axis=1, dtype=jnp.uint32,
+    )
+
+
+@jax.jit
+def bloom_probe(words: jax.Array, queries: jax.Array) -> jax.Array:
+    word, bits = _bloom_hash(queries, int(words.shape[0]))
+    return (words[word] & bits) == bits

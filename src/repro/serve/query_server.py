@@ -38,8 +38,13 @@ class QueryServer:
     def _plan_for(self, text: str) -> Tuple[PL.Phys, A.VarTable]:
         # cache key is a hash of the query text itself — the caller's
         # query_id is a reporting label only, so two different queries
-        # sharing an id can never silently reuse the wrong cached plan
-        key = hashlib.sha256(text.encode()).hexdigest()
+        # sharing an id can never silently reuse the wrong cached plan.
+        # The engine's plan fingerprint (join strategy, SIP mode, …) is
+        # folded in too: swapping the engine config must not serve a plan
+        # shaped under the old knobs.
+        key = hashlib.sha256(
+            f"{self.engine.plan_fingerprint()}\n{text}".encode()
+        ).hexdigest()
         hit = self._plan_cache.get(key)
         if hit is None:
             node, vt = self.engine.parse(text)
