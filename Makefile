@@ -11,8 +11,13 @@ check: test smoke regression
 test:
 	$(PYTHON) -m pytest -q
 
+# the smoke also runs the telemetry end-to-end (EXPLAIN ANALYZE on an
+# LSQB query + Chrome-trace/metrics JSON export) and leaves the artifacts
+# under artifacts/ for CI to upload
 smoke:
-	$(PYTHON) -m benchmarks.run --fast --suite ops
+	mkdir -p artifacts
+	$(PYTHON) -m benchmarks.run --fast --suite ops \
+	  --json artifacts/bench_ops.json --trace-out artifacts/lsqb_q6.trace.json
 
 # static gate: newest committed BENCH_PR*.json vs the most recent prior
 # file reporting the same metric on the same workload; fails beyond 1.15x

@@ -12,6 +12,12 @@ Prints ``name,us_per_call,derived`` CSV blocks per suite:
 With ``--json <path>`` the same per-suite ``us_per_call`` rows are written
 as a JSON document (suite → [{name, us_per_call, derived}]) so perf
 trajectories can be tracked across PRs (see BENCH_PR1.json).
+
+With ``--trace-out <path>`` an end-to-end telemetry smoke runs after the
+suites: one LSQB query executes under EXPLAIN ANALYZE (report printed),
+its QueryTrace is written as Chrome-trace JSON (loadable in Perfetto),
+and a small served workload's metrics registry is written next to it as
+``<path>.metrics.json`` — CI uploads both as artifacts.
 """
 
 from __future__ import annotations
@@ -33,6 +39,35 @@ def _parse_rows(csv_block: str) -> List[Dict[str, object]]:
     return rows
 
 
+def telemetry_smoke(trace_out: str, fast: bool = True) -> None:
+    """EXPLAIN ANALYZE + trace/metrics export smoke (DESIGN.md §13):
+    exercises the full telemetry surface end-to-end and leaves artifacts
+    CI can upload. Validates the trace is well-formed Chrome-trace JSON."""
+    from repro.core import Engine, EngineConfig
+    from repro.data import LSQB_QUERIES, generate_social_graph
+    from repro.serve.query_server import QueryServer
+
+    store, meta = generate_social_graph(scale=0.02 if fast else 0.05)
+    engine = Engine(store, EngineConfig(engine="barq"))
+    res = engine.execute(LSQB_QUERIES["q6"])
+    print(f"# EXPLAIN ANALYZE lsqb q6 ({meta['n_triples']} triples, "
+          f"{res.n_rows} rows):")
+    print(res.explain_analyze())
+    res.trace.save_chrome_trace(trace_out)
+    with open(trace_out) as fh:
+        doc = json.load(fh)
+    assert doc["traceEvents"], "trace export produced no events"
+    assert all("ph" in ev and "pid" in ev for ev in doc["traceEvents"])
+    print(f"# wrote {trace_out} ({len(doc['traceEvents'])} events)")
+
+    server = QueryServer(store, EngineConfig(engine="barq"))
+    reqs = [("q1", LSQB_QUERIES["q1"]), ("q6", LSQB_QUERIES["q6"])] * 3
+    server.run_workload(reqs, warmup=2)
+    metrics_out = trace_out + ".metrics.json"
+    server.metrics.save(metrics_out)
+    print(f"# wrote {metrics_out}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller scales")
@@ -40,6 +75,9 @@ def main() -> None:
                     choices=("all", "lsqb", "explore", "bi", "adaptive", "ops"))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write per-suite us_per_call results as JSON")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="run the telemetry smoke and write Chrome-trace "
+                         "JSON (+ .metrics.json) artifacts")
     args = ap.parse_args()
     f = args.fast
 
@@ -74,6 +112,8 @@ def main() -> None:
         with open(args.json, "w") as fh:
             json.dump(report, fh, indent=2)
         print(f"# wrote {args.json}")
+    if args.trace_out:
+        telemetry_smoke(args.trace_out, fast=f)
 
 
 if __name__ == "__main__":

@@ -167,3 +167,31 @@ assert sorted(map(str, sip_rows)) == sorted(map(str, off_rows))
 # the profile surfaces what SIP did: sip_range_seeks / sip_pruned_rows
 # on scans, sip_exports on the joins that produced the filters
 print("\nSIP on/off agree ✓:", sip_rows)
+
+# 9. query telemetry (DESIGN.md §13): every execute records a QueryTrace —
+# lifecycle spans, a per-query kernel ledger (dispatch counts + wall time
+# by kernel and backend, exact even when a server interleaves queries),
+# and EXPLAIN ANALYZE: the planner's cardinality estimates printed next
+# to actual rows, with MISEST(q=...) flags at q-error >= 4.
+result2 = engine.execute(QUERY)
+print("\nEXPLAIN ANALYZE (est vs actual, misestimates flagged):")
+print(result2.explain_analyze())
+trace = result2.trace
+print("\nlifecycle spans (ms):",
+      {name: round(dur * 1e3, 2) for name, _c, _t, dur, _a in trace.spans})
+print("kernel ledger:", dict(trace.ledger.counts))
+print("pool delta (this query only):", result2.pool_delta())
+# the trace exports Chrome-trace JSON — open in ui.perfetto.dev
+trace.save_chrome_trace("/tmp/quickstart.trace.json")
+print("wrote /tmp/quickstart.trace.json (Perfetto-loadable)")
+
+# 9b. serving metrics: QueryServer aggregates per-request telemetry into
+# a registry with sliding-window p50/p99/QPS, plan-cache hit rates, and
+# kernel/pool attribution — exported as JSON for dashboards.
+from repro.serve.query_server import QueryServer
+
+server = QueryServer(store, EngineConfig(engine="barq"))
+workload = [("fig1", QUERY), ("agg", AGG)] * 3
+print("\nserved workload:", server.run_workload(workload, warmup=2))
+print("metrics snapshot:")
+print(server.metrics_json())

@@ -17,11 +17,13 @@ execute → decode (the pipeline of Fig. 2).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import algebra as A
+from repro.core import telemetry
 from repro.core import planner as PL
 from repro.core.adaptive import AdaptiveBatchSizer
 from repro.core.batch import NULL_ID, BatchPool, bucket_for
@@ -85,21 +87,29 @@ class EngineConfig:
     sip: Optional[str] = None
     # kernel backend for the bloom summaries (None = REPRO_KERNEL_BACKEND)
     sip_backend: Optional[str] = None
-    # buffer pooling (DESIGN.md §2.3): recycle batch buffers through a
-    # per-query arena so steady-state execution is allocation-free
+    # buffer pooling (DESIGN.md §2.3): recycle batch buffers through an
+    # Engine-owned arena so steady-state execution is allocation-free and
+    # repeated queries start warm
     pool_buffers: bool = True
     pool_max_per_bucket: int = 32
+    # query telemetry (DESIGN.md §13): record a QueryTrace per execution
+    # (spans + scoped kernel ledger + operator lane). Cheap enough to be
+    # on by default; False skips trace creation entirely
+    telemetry: bool = True
 
 
 class Translator:
-    def __init__(self, store: QuadStore, cfg: EngineConfig):
+    def __init__(self, store: QuadStore, cfg: EngineConfig,
+                 pool: Optional[BatchPool] = None):
         self.store = store
         self.cfg = cfg
-        self.pool: Optional[BatchPool] = (
-            BatchPool(cfg.pool_max_per_bucket)
-            if cfg.pool_buffers and cfg.engine != "legacy"
-            else None
-        )
+        # ``pool`` lets an Engine share one warm arena across queries;
+        # standalone Translators keep making their own
+        self.pool: Optional[BatchPool] = None
+        if cfg.pool_buffers and cfg.engine != "legacy":
+            self.pool = pool if pool is not None else BatchPool(
+                cfg.pool_max_per_bucket
+            )
         # SIP runtime handles, keyed by annotation sid: consuming leaves
         # and exporting joins resolve to the same SipFilter object. Fresh
         # per Translator, so a plan reused through the server's plan cache
@@ -139,6 +149,15 @@ class Translator:
     # -- engine-aware build (barq / mixed) ---------------------------------------------
 
     def _build(self, n: PL.Phys) -> AnyOp:
+        """Lower one Phys node, stamping the planner's cardinality estimate
+        onto the produced operator's stats (EXPLAIN ANALYZE input)."""
+        op = self._build_node(n)
+        est = getattr(n, "est_rows", 0.0)
+        if est and op.stats.est_rows is None:
+            op.stats.est_rows = float(est)
+        return op
+
+    def _build_node(self, n: PL.Phys) -> AnyOp:
         mixed = self.cfg.engine == "mixed"
         if isinstance(n, PL.PScan):
             return IndexScan(
@@ -335,6 +354,13 @@ class Translator:
     # -- all-row build (legacy engine, §5 baseline) -----------------------------------------
 
     def _row(self, n: PL.Phys) -> LOP.RowOperator:
+        op = self._row_node(n)
+        est = getattr(n, "est_rows", 0.0)
+        if est and op.stats.est_rows is None:
+            op.stats.est_rows = float(est)
+        return op
+
+    def _row_node(self, n: PL.Phys) -> LOP.RowOperator:
         if isinstance(n, PL.PScan):
             return LOP.RowScan(self.store, n.pattern, n.sort_var)
         if isinstance(n, PL.PPathExpand):
@@ -478,12 +504,23 @@ class _RowExtend(LOP.RowOperator):
 class QueryResult:
     def __init__(self, var_table: A.VarTable, proj: Tuple[int, ...],
                  rows: np.ndarray, root: AnyOp,
-                 pool: Optional[BatchPool] = None):
+                 pool: Optional[BatchPool] = None,
+                 pool_base: Optional[Dict[str, int]] = None,
+                 trace: Optional[telemetry.QueryTrace] = None):
         self.var_table = var_table
         self.proj = proj
         self.rows = rows  # (n, n_proj) int32 codes
         self.root = root
-        self.pool = pool  # per-query buffer arena (counters survive drain)
+        self.pool = pool  # buffer arena (may be Engine-shared and warm)
+        # pool counters bracketing this execution: profile()/pool_delta()
+        # report this query's contribution, not the arena's lifetime
+        # totals — and the end snapshot is frozen here so later queries on
+        # the same warm arena can't leak into this result's report
+        self.pool_base = pool_base
+        self.pool_final: Optional[Dict[str, int]] = (
+            dict(pool.stats()) if pool is not None else None
+        )
+        self.trace = trace  # QueryTrace, or None with telemetry disabled
 
     @property
     def n_rows(self) -> int:
@@ -501,8 +538,24 @@ class QueryResult:
             )
         return out
 
-    def profile(self) -> str:
-        return profile_tree(self.root, self.var_table, pool=self.pool)
+    def pool_delta(self) -> Dict[str, int]:
+        """This query's pool counters (end-of-execution snapshot minus the
+        pre-execution one)."""
+        if self.pool_final is None:
+            return {}
+        from repro.core.profiler import _pool_delta
+
+        return _pool_delta(self.pool_final, self.pool_base)
+
+    def profile(self, analyze: bool = False) -> str:
+        return profile_tree(self.root, self.var_table,
+                            pool=self.pool_final,
+                            pool_base=self.pool_base, analyze=analyze)
+
+    def explain_analyze(self) -> str:
+        """EXPLAIN ANALYZE report: per-operator actual vs planner-estimated
+        rows with MISEST flags at q-error >= profiler.QERROR_FLAG."""
+        return self.profile(analyze=True)
 
 
 class Engine:
@@ -518,6 +571,14 @@ class Engine:
             dictionary=store.dict,
             join_strategy=self.cfg.join_strategy,
             sip=self.cfg.sip,
+        )
+        # Engine-owned warm arena (DESIGN.md §2.3/§13): shared across this
+        # Engine's queries so repeated traffic skips cold-start allocations.
+        # Per-query attribution comes from pool_base snapshots, not resets.
+        self.pool: Optional[BatchPool] = (
+            BatchPool(self.cfg.pool_max_per_bucket)
+            if self.cfg.pool_buffers and self.cfg.engine != "legacy"
+            else None
         )
 
     def plan_fingerprint(self) -> str:
@@ -535,14 +596,34 @@ class Engine:
         return self.planner.plan(node)
 
     def execute_plan(
-        self, phys: PL.Phys, var_table: Optional[A.VarTable] = None
+        self, phys: PL.Phys, var_table: Optional[A.VarTable] = None,
+        trace: Optional[telemetry.QueryTrace] = None,
     ) -> QueryResult:
-        translator = Translator(self.store, self.cfg)
+        if trace is None and self.cfg.telemetry:
+            trace = telemetry.QueryTrace()
+        if trace is None:
+            return self._run_plan(phys, var_table, None)
+        with telemetry.trace_query(trace=trace):
+            return self._run_plan(phys, var_table, trace)
+
+    def _run_plan(
+        self, phys: PL.Phys, var_table: Optional[A.VarTable],
+        trace: Optional[telemetry.QueryTrace],
+    ) -> QueryResult:
+        pool = self.pool
+        pool_base = dict(pool.stats()) if pool is not None else None
+        t0 = time.perf_counter()
+        translator = Translator(self.store, self.cfg, pool=pool)
         op = translator.translate(phys)
+        if trace is not None:
+            trace.add_span("translate", "query", t0, time.perf_counter() - t0)
         pool = translator.pool
+        if pool_base is None and pool is not None:
+            pool_base = {}  # translator-local arena: delta == absolute
         proj = tuple(
             phys_v for phys_v in PL.phys_vars(phys)
         )
+        t0 = time.perf_counter()
         if isinstance(op, LOP.RowOperator):
             rows = op.drain()
             arr = np.full((len(rows), len(proj)), NULL_ID, dtype=np.int32)
@@ -570,15 +651,56 @@ class Engine:
                 if blocks
                 else np.zeros((0, len(proj)), dtype=np.int32)
             )
-        if pool is not None:
-            pool.drain()  # return arena memory; counters remain readable
-        return QueryResult(var_table or A.VarTable(), proj, arr, op, pool)
+        if pool is not None and pool is not self.pool:
+            # translator-local arena: return its memory now. The Engine's
+            # shared pool stays warm — its recycled buffers (bounded by
+            # max_per_bucket per shape) seed the next query.
+            pool.drain()
+        if trace is not None:
+            trace.add_span("execute", "query", t0, time.perf_counter() - t0,
+                           rows=int(arr.shape[0]))
+            trace.add_operator_tree(op)
+        return QueryResult(var_table or A.VarTable(), proj, arr, op, pool,
+                           pool_base=pool_base, trace=trace)
 
     def execute(self, node_or_text: Union[str, A.PlanNode],
-                var_table: Optional[A.VarTable] = None) -> QueryResult:
+                var_table: Optional[A.VarTable] = None,
+                trace: Optional[telemetry.QueryTrace] = None) -> QueryResult:
+        if trace is None and self.cfg.telemetry:
+            label = (
+                " ".join(node_or_text.split())[:120]
+                if isinstance(node_or_text, str) else "query"
+            )
+            trace = telemetry.QueryTrace(label)
+        if trace is None:
+            if isinstance(node_or_text, str):
+                node, var_table = self.parse(node_or_text)
+            else:
+                node = node_or_text
+            return self._run_plan(self.plan(node), var_table, None)
+        with telemetry.trace_query(trace=trace):
+            if isinstance(node_or_text, str):
+                with trace.span("parse"):
+                    node, var_table = self.parse(node_or_text)
+            else:
+                node = node_or_text
+            with trace.span("plan"):
+                phys = self.plan(node)
+            return self._run_plan(phys, var_table, trace)
+
+    # -- EXPLAIN / EXPLAIN ANALYZE ------------------------------------------
+
+    def explain(self, node_or_text: Union[str, A.PlanNode],
+                var_table: Optional[A.VarTable] = None) -> str:
+        """The chosen physical plan (no execution)."""
         if isinstance(node_or_text, str):
             node, var_table = self.parse(node_or_text)
         else:
             node = node_or_text
-        phys = self.plan(node)
-        return self.execute_plan(phys, var_table)
+        return PL.explain(self.plan(node), var_table)
+
+    def explain_analyze(self, node_or_text: Union[str, A.PlanNode],
+                        var_table: Optional[A.VarTable] = None) -> str:
+        """Execute and render per-operator estimated vs actual rows with
+        misestimate flags (DESIGN.md §13)."""
+        return self.execute(node_or_text, var_table).explain_analyze()

@@ -26,6 +26,7 @@ class OpStats:
         "reset_calls",
         "wall_time",
         "rows_scanned",
+        "est_rows",
         "extra",
     )
 
@@ -39,6 +40,9 @@ class OpStats:
         self.reset_calls = 0
         self.wall_time = 0.0  # seconds spent inside this operator (self+children)
         self.rows_scanned = 0  # storage rows read (scans only; overfetch metric)
+        # planner cardinality estimate for this operator's Phys node, or
+        # None when lowering had no estimate (EXPLAIN ANALYZE input)
+        self.est_rows: Optional[float] = None
         # operator-specific counters (e.g. PathExpand frontier rounds /
         # dedup ratio); the profiler prints and aggregates them generically
         self.extra: dict = {}

@@ -4,13 +4,24 @@ One reason the paper picked vectorization over code generation is that the
 operator tree stays observable (§3.1). Both engines' operators carry
 OpStats; this walker prints results, batches, next/skip call counts, rows
 scanned from storage (the overfetch metric of §3.4) and wall-time shares.
+
+With ``analyze=True`` the report becomes EXPLAIN ANALYZE (DESIGN.md §13):
+each operator additionally prints the planner's cardinality estimate next
+to the actual row count, and flags misestimates whose q-error
+``max(est/actual, actual/est)`` reaches ``QERROR_FLAG`` — the feedback
+signal adaptive re-planning consumes.
 """
 
 from __future__ import annotations
 
-from typing import List
+from typing import List, Optional
 
 from repro.core.algebra import VarTable
+
+# q-error at or above this flags the operator as misestimated (the
+# conventional "order of magnitude within 4x" threshold from the
+# cardinality-estimation literature)
+QERROR_FLAG = 4.0
 
 
 def _fmt_count(n: float) -> str:
@@ -31,13 +42,45 @@ def _fmt_bytes(n: float) -> str:
     return f"{n:.1f}GB"
 
 
-def profile_tree(root, var_table: VarTable = None, pool=None) -> str:
+def _fmt_extra(v) -> str:
+    """Extra-counter values: large float counts go through the K/M/B
+    formatter like ints; small floats (ratios, milliseconds) print at 2
+    decimals instead of full repr precision."""
+    if isinstance(v, float):
+        return _fmt_count(v) if abs(v) >= 1e3 else f"{v:.2f}"
+    return _fmt_count(v)
+
+
+def q_error(est: float, actual: float) -> float:
+    """Cardinality q-error: max(est/actual, actual/est), both clamped to
+    >= 1 so zero-row operators don't divide by zero (q=1 is a perfect
+    estimate)."""
+    e = max(float(est), 1.0)
+    a = max(float(actual), 1.0)
+    return max(e / a, a / e)
+
+
+def _pool_delta(pool, pool_base: Optional[dict]) -> dict:
+    """Pool counters attributable to this query: current stats minus the
+    pre-execution snapshot (a shared Engine's pool accumulates across
+    queries; without the baseline the second report includes the first
+    query's allocations). ``pool`` may be a live BatchPool or an
+    already-frozen stats dict (QueryResult snapshots at end of query so
+    later queries on the same arena can't leak into the report)."""
+    s = pool.stats() if hasattr(pool, "stats") else dict(pool)
+    if not pool_base:
+        return s
+    return {k: v - pool_base.get(k, 0) for k, v in s.items()}
+
+
+def profile_tree(root, var_table: VarTable = None, pool=None,
+                 pool_base: Optional[dict] = None, analyze: bool = False) -> str:
     total = max(root.stats.wall_time, 1e-12)
     lines: List[str] = []
     if pool is not None:
         # arena report (DESIGN.md §2.3): steady-state allocations should be
         # O(plan depth) — `alloc` counts fresh buffers, `reuse` recycled ones
-        s = pool.stats()
+        s = _pool_delta(pool, pool_base)
         lines.append(
             "pool: alloc: {alloc}, reuse: {reuse}, release: {release}, "
             "allocated: {ab}, copied: {cb}".format(
@@ -57,6 +100,11 @@ def profile_tree(root, var_table: VarTable = None, pool=None) -> str:
             for vid, name in enumerate(var_table.id_to_name):
                 detail = detail.replace(f"?v{vid}", f"?{name}")
         parts = [f"{s.name}{detail}", f"results: {_fmt_count(s.results)}"]
+        est = getattr(s, "est_rows", None)
+        if analyze and est is not None:
+            q = q_error(est, s.results)
+            flag = f" MISEST(q={q:.1f})" if q >= QERROR_FLAG else ""
+            parts.append(f"est: {_fmt_count(est)}{flag}")
         if s.batches:
             parts.append(f"batches: {_fmt_count(s.batches)}")
         parts.append(f"next: {_fmt_count(s.next_calls)}")
@@ -65,9 +113,7 @@ def profile_tree(root, var_table: VarTable = None, pool=None) -> str:
         if s.rows_scanned:
             parts.append(f"scanned: {_fmt_count(s.rows_scanned)}")
         for k, v in getattr(s, "extra", {}).items():
-            parts.append(
-                f"{k}: {v}" if isinstance(v, float) else f"{k}: {_fmt_count(v)}"
-            )
+            parts.append(f"{k}: {_fmt_extra(v)}")
         parts.append(f"wall: {100.0 * s.wall_time / total:.1f}%")
         lines.append(prefix + head + ", ".join(parts))
         kids = op.children()
@@ -79,8 +125,15 @@ def profile_tree(root, var_table: VarTable = None, pool=None) -> str:
     return "\n".join(lines)
 
 
-def collect_stats(root, pool=None) -> dict:
-    """Aggregate tree stats for benchmark reporting."""
+def collect_stats(root, pool=None, pool_base: Optional[dict] = None) -> dict:
+    """Aggregate tree stats for benchmark reporting.
+
+    Aggregation rules for per-operator ``extra`` counters: ``*_peak`` keys
+    take the max across operators, ``*_ratio`` keys are recomputed from
+    their aggregated numerator/denominator (never summed), everything else
+    is an additive count. ``pool_base`` subtracts a pre-execution
+    snapshot so shared-pool counters report this query's delta.
+    """
     agg = {
         "total_results": root.stats.results,
         "rows_scanned": 0,
@@ -89,14 +142,19 @@ def collect_stats(root, pool=None) -> dict:
         "operators": 0,
     }
     if pool is not None:
-        for k, v in pool.stats().items():
+        for k, v in _pool_delta(pool, pool_base).items():
             agg[f"pool_{k}"] = v
+    qmax = 0.0
 
     def walk(op):
+        nonlocal qmax
         agg["operators"] += 1
         agg["rows_scanned"] += op.stats.rows_scanned
         agg["next_calls"] += op.stats.next_calls
         agg["skip_calls"] += op.stats.skip_calls
+        est = getattr(op.stats, "est_rows", None)
+        if est is not None:
+            qmax = max(qmax, q_error(est, op.stats.results))
         for k, v in getattr(op.stats, "extra", {}).items():
             # per-operator counters (frontier rounds, dedup ratio, ...):
             # peaks aggregate by max, ratios are recomputed below, the
@@ -111,4 +169,6 @@ def collect_stats(root, pool=None) -> dict:
     walk(root)
     if agg.get("dedup_in"):
         agg["dedup_ratio"] = round(agg["dedup_out"] / agg["dedup_in"], 3)
+    if qmax:
+        agg["max_q_error"] = round(qmax, 2)
     return agg

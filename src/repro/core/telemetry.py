@@ -1,0 +1,297 @@
+"""Query-scoped telemetry (DESIGN.md §13).
+
+The paper chose vectorization over code generation because the operator
+tree stays observable (§3.1). This module makes that observability
+*query-scoped* instead of process-global, so a server interleaving many
+queries through one Engine can attribute every kernel dispatch, span and
+buffer to exactly one request:
+
+  KernelLedger   — dispatch counts and wall seconds keyed by kernel name
+                   and by (kernel, backend). One process-global instance
+                   backs ``kernels.ops.DISPATCH_COUNTS`` (its ``counts``
+                   Counter IS that object); one per-query instance lives
+                   on each QueryTrace.
+  QueryTrace     — span recorder for the query lifecycle (parse → plan →
+                   translate → execute), a per-query KernelLedger, and a
+                   per-dispatch kernel event log. Exports Chrome-trace
+                   JSON (``chrome-tracing`` / Perfetto ``traceEvents``
+                   format) so traces open directly in ui.perfetto.dev.
+  trace_query()  — contextvar scope installing a QueryTrace as the active
+                   attribution target. Kernel dispatches recorded while a
+                   trace is active land in BOTH the trace's ledger and
+                   the process-global one — the global ledger keeps its
+                   "since process start / last reset" semantics for
+                   existing callers, the scoped ledger gives exact
+                   per-query attribution even under interleaving.
+
+Only stdlib is imported here: ``kernels.ops`` imports this module, so it
+must never (transitively) import the kernels package.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import time
+from contextlib import contextmanager
+from contextvars import ContextVar
+from typing import Dict, List, Optional, Tuple
+
+
+class KernelLedger:
+    """Dispatch counts + wall-time for one attribution scope.
+
+    Wall times are *inclusive* per public kernel wrapper: ``hash_build``
+    internally dispatches ``radix_partition``, so both entries tick and
+    the build's seconds include the partition's (same convention as the
+    operator tree's self+children wall_time).
+    """
+
+    __slots__ = ("counts", "wall_s", "backend_counts", "backend_wall_s")
+
+    def __init__(self, counts: Optional[collections.Counter] = None) -> None:
+        # ``counts`` may be an externally owned Counter (kernels.ops keeps
+        # DISPATCH_COUNTS' identity by handing it in here)
+        self.counts: collections.Counter = (
+            collections.Counter() if counts is None else counts
+        )
+        self.wall_s: Dict[str, float] = collections.defaultdict(float)
+        self.backend_counts: collections.Counter = collections.Counter()
+        self.backend_wall_s: Dict[Tuple[str, str], float] = collections.defaultdict(
+            float
+        )
+
+    def record(self, name: str, backend: str, dt: float) -> None:
+        self.counts[name] += 1
+        self.wall_s[name] += dt
+        self.backend_counts[(name, backend)] += 1
+        self.backend_wall_s[(name, backend)] += dt
+
+    def merge(self, other: "KernelLedger") -> None:
+        """Accumulate another ledger (serving metrics aggregate request
+        ledgers into a server-lifetime one)."""
+        self.counts.update(other.counts)
+        for k, v in other.wall_s.items():
+            self.wall_s[k] += v
+        self.backend_counts.update(other.backend_counts)
+        for k, v in other.backend_wall_s.items():
+            self.backend_wall_s[k] += v
+
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    def total_wall_s(self) -> float:
+        return sum(self.wall_s.values())
+
+    def clear(self) -> None:
+        self.counts.clear()
+        self.wall_s.clear()
+        self.backend_counts.clear()
+        self.backend_wall_s.clear()
+
+    def snapshot(self) -> dict:
+        """JSON-able view: per-kernel counts/ms plus the per-backend
+        breakdown keyed ``kernel/backend``."""
+        return {
+            "dispatches": dict(self.counts),
+            "wall_ms": {k: round(v * 1e3, 4) for k, v in self.wall_s.items()},
+            "by_backend": {
+                f"{n}/{b}": c for (n, b), c in sorted(self.backend_counts.items())
+            },
+            "by_backend_wall_ms": {
+                f"{n}/{b}": round(v * 1e3, 4)
+                for (n, b), v in sorted(self.backend_wall_s.items())
+            },
+        }
+
+
+# process-global fallback ledger — kernels.ops aliases its ``counts`` as
+# DISPATCH_COUNTS, keeping the pre-§13 module API intact
+_GLOBAL_LEDGER = KernelLedger()
+
+_ACTIVE_TRACE: "ContextVar[Optional[QueryTrace]]" = ContextVar(
+    "repro_active_trace", default=None
+)
+
+
+def global_ledger() -> KernelLedger:
+    return _GLOBAL_LEDGER
+
+
+def current_trace() -> Optional["QueryTrace"]:
+    """The QueryTrace installed for the current context, if any."""
+    return _ACTIVE_TRACE.get()
+
+
+def record_dispatch(name: str, backend: str, t0: float, dt: float) -> None:
+    """Attribute one kernel dispatch: to the active query trace when one
+    is installed, and always to the process-global ledger."""
+    tr = _ACTIVE_TRACE.get()
+    if tr is not None:
+        tr.ledger.record(name, backend, dt)
+        if tr.kernel_events:
+            tr._kernels.append((name, backend, t0, dt))
+    _GLOBAL_LEDGER.record(name, backend, dt)
+
+
+@contextmanager
+def trace_query(label: str = "query", trace: Optional["QueryTrace"] = None):
+    """Install ``trace`` (or a fresh QueryTrace) as the active attribution
+    scope. ``trace=None`` with a falsy label yields None and installs
+    nothing — callers can pass a disabled trace straight through."""
+    tr = trace if trace is not None else QueryTrace(label)
+    token = _ACTIVE_TRACE.set(tr)
+    try:
+        yield tr
+    finally:
+        _ACTIVE_TRACE.reset(token)
+
+
+# Perfetto renders one horizontal lane per (pid, tid); we use three fixed
+# lanes: query-lifecycle spans, kernel dispatches, operator tree.
+_TID_QUERY, _TID_KERNELS, _TID_OPERATORS = 1, 2, 3
+
+
+class QueryTrace:
+    """Span + kernel-event recorder for one query execution."""
+
+    def __init__(self, label: str = "query", kernel_events: bool = True) -> None:
+        self.label = label
+        self.kernel_events = kernel_events
+        self.ledger = KernelLedger()
+        self.t0 = time.perf_counter()
+        # (name, category, start_s, dur_s, args) — start in perf_counter time
+        self.spans: List[Tuple[str, str, float, float, dict]] = []
+        # (kernel, backend, start_s, dur_s)
+        self._kernels: List[Tuple[str, str, float, float]] = []
+        # (label, depth, start_s, dur_s, args) — synthesized operator lane
+        self._operators: List[Tuple[str, float, float, dict]] = []
+
+    # -- recording ----------------------------------------------------------
+
+    @contextmanager
+    def span(self, name: str, cat: str = "query", **args):
+        t0 = time.perf_counter()
+        try:
+            yield self
+        finally:
+            self.spans.append((name, cat, t0, time.perf_counter() - t0, args))
+
+    def add_span(self, name: str, cat: str, t0: float, dur: float, **args) -> None:
+        """Record an externally timed span (perf_counter timebase)."""
+        self.spans.append((name, cat, t0, dur, args))
+
+    def span_bounds(self, name: str) -> Optional[Tuple[float, float]]:
+        for n, _cat, t0, dur, _a in self.spans:
+            if n == name:
+                return t0, dur
+        return None
+
+    def add_operator_tree(self, root, start: Optional[float] = None) -> None:
+        """Synthesize the operator lane from the tree's post-hoc OpStats:
+        each operator becomes one complete event whose duration is its
+        inclusive wall_time, children laid out sequentially inside the
+        parent's window (wall_time is self+children, so they nest)."""
+        if start is None:
+            bounds = self.span_bounds("execute")
+            start = bounds[0] if bounds else self.t0
+
+        def walk(op, t: float) -> None:
+            s = op.stats
+            args = {"results": s.results, "next_calls": s.next_calls}
+            if getattr(s, "est_rows", None) is not None:
+                args["est_rows"] = round(float(s.est_rows), 1)
+            self._operators.append((f"{s.name}{s.detail}", t, s.wall_time, args))
+            tc = t
+            for c in op.children():
+                walk(c, tc)
+                tc += c.stats.wall_time
+
+        walk(root, start)
+
+    # -- export -------------------------------------------------------------
+
+    def _us(self, t: float) -> float:
+        return (t - self.t0) * 1e6
+
+    def chrome_events(self) -> List[dict]:
+        ev: List[dict] = []
+        for tid, name in (
+            (_TID_QUERY, "query"),
+            (_TID_KERNELS, "kernels"),
+            (_TID_OPERATORS, "operators"),
+        ):
+            ev.append(
+                {
+                    "name": "thread_name",
+                    "ph": "M",
+                    "pid": 1,
+                    "tid": tid,
+                    "args": {"name": name},
+                }
+            )
+        for name, cat, t0, dur, args in self.spans:
+            ev.append(
+                {
+                    "name": name,
+                    "cat": cat,
+                    "ph": "X",
+                    "ts": self._us(t0),
+                    "dur": dur * 1e6,
+                    "pid": 1,
+                    "tid": _TID_QUERY,
+                    "args": dict(args),
+                }
+            )
+        for kname, backend, t0, dur in self._kernels:
+            ev.append(
+                {
+                    "name": kname,
+                    "cat": "kernel",
+                    "ph": "X",
+                    "ts": self._us(t0),
+                    "dur": dur * 1e6,
+                    "pid": 1,
+                    "tid": _TID_KERNELS,
+                    "args": {"backend": backend},
+                }
+            )
+        for label, t0, dur, args in self._operators:
+            ev.append(
+                {
+                    "name": label,
+                    "cat": "operator",
+                    "ph": "X",
+                    "ts": self._us(t0),
+                    "dur": dur * 1e6,
+                    "pid": 1,
+                    "tid": _TID_OPERATORS,
+                    "args": dict(args),
+                }
+            )
+        return ev
+
+    def to_chrome_trace(self) -> dict:
+        """The chrome://tracing / Perfetto ``traceEvents`` document."""
+        return {
+            "traceEvents": self.chrome_events(),
+            "displayTimeUnit": "ms",
+            "otherData": {"query": self.label},
+        }
+
+    def chrome_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_chrome_trace(), indent=indent)
+
+    def save_chrome_trace(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.chrome_json())
+
+    def summary(self) -> dict:
+        """Compact JSON-able digest: span durations + the kernel ledger."""
+        return {
+            "query": self.label,
+            "spans_ms": {
+                name: round(dur * 1e3, 4) for name, _c, _t, dur, _a in self.spans
+            },
+            "kernels": self.ledger.snapshot(),
+        }

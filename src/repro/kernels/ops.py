@@ -12,48 +12,85 @@ Select globally with REPRO_KERNEL_BACKEND or per call with backend=...
 
 from __future__ import annotations
 
-import collections
+import functools
+import inspect
 import os
+import time
 from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core import vecops
 
 _DEFAULT = os.environ.get("REPRO_KERNEL_BACKEND", "numpy")
 
-# process-wide dispatch ledger: every public wrapper below counts one entry
+# Process-wide dispatch ledger: every public wrapper below counts one entry
 # per call under its kernel name. Observability for tests and benchmarks —
 # e.g. a grouped query must show segment_reduce > 0 or the "vectorized
 # grouping" claim is hollow (tests/test_aggregate.py pins this).
-DISPATCH_COUNTS: "collections.Counter[str]" = collections.Counter()
+#
+# Since DESIGN.md §13 this Counter is the ``counts`` table of the
+# process-global telemetry.KernelLedger. It ALWAYS accumulates; when a
+# query-scoped trace is active (telemetry.trace_query), each dispatch is
+# additionally attributed — with per-dispatch wall time, by kernel name
+# and backend — to that trace's own ledger, so interleaved queries on one
+# server never misattribute each other's kernel work.
+DISPATCH_COUNTS = telemetry.global_ledger().counts
 
 
 def dispatch_count(name: Optional[str] = None) -> int:
     """Total kernel dispatches (or for one kernel) since process start /
-    last reset."""
+    last reset — always the process-global view, unaffected by any active
+    query-scoped ledger."""
     if name is None:
         return sum(DISPATCH_COUNTS.values())
     return DISPATCH_COUNTS[name]
 
 
 def reset_dispatch_counts() -> None:
-    DISPATCH_COUNTS.clear()
+    telemetry.global_ledger().clear()
 
 
 def _backend(override: Optional[str]) -> str:
     return override or _DEFAULT
 
 
+def _ledgered(fn):
+    """Instrument a public kernel wrapper: one ledger entry (count + wall
+    seconds, keyed by kernel name and resolved backend) per call, routed
+    through telemetry.record_dispatch — the active query trace if one is
+    installed, always the process-global ledger. Wall time is inclusive:
+    wrappers that internally dispatch other wrappers (hash_build →
+    radix_partition) tick both entries, exactly as the pre-§13 counters
+    did."""
+    bidx = list(inspect.signature(fn).parameters).index("backend")
+    name = fn.__name__
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        be = kwargs.get("backend")
+        if be is None and len(args) > bidx:
+            be = args[bidx]
+        be = be or _DEFAULT
+        t0 = time.perf_counter()
+        try:
+            return fn(*args, **kwargs)
+        finally:
+            telemetry.record_dispatch(name, be, t0, time.perf_counter() - t0)
+
+    return wrapper
+
+
 # -- join_expand ---------------------------------------------------------------
 
 
+@_ledgered
 def join_expand(
     lstarts, llens, rstarts, rlens, cum, base: int, count: int,
     backend: Optional[str] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     be = _backend(backend)
-    DISPATCH_COUNTS["join_expand"] += 1
     if be == "numpy":
         return vecops.expand_cross(lstarts, llens, rstarts, rlens, cum, base, count)
     if be == "jax":
@@ -98,6 +135,7 @@ def join_expand(
 # -- gather_emit ---------------------------------------------------------------
 
 
+@_ledgered
 def gather_emit(
     lcols,
     rcols,
@@ -115,7 +153,6 @@ def gather_emit(
     (ri == -1), and fold secondary-key equality ``pairs`` into the validity
     mask — one dispatch per output block instead of per column."""
     be = _backend(backend)
-    DISPATCH_COUNTS["gather_emit"] += 1
     lsel, rsel, pairs = tuple(lsel), tuple(rsel), tuple(pairs)
     if be == "numpy":
         return vecops.gather_emit(lcols, rcols, li, ri, lsel, rsel, pairs,
@@ -172,9 +209,9 @@ def gather_emit(
 # -- sorted_search ---------------------------------------------------------------
 
 
+@_ledgered
 def sorted_search(keys, queries, side: str = "left", backend: Optional[str] = None):
     be = _backend(backend)
-    DISPATCH_COUNTS["sorted_search"] += 1
     if be == "numpy":
         return vecops.sorted_search(keys, queries, side)
     if be == "jax":
@@ -191,6 +228,7 @@ def sorted_search(keys, queries, side: str = "left", backend: Optional[str] = No
 # -- frontier_dedup ---------------------------------------------------------------
 
 
+@_ledgered
 def frontier_dedup(
     cand_hi, cand_lo, vis_hi, vis_lo, backend: Optional[str] = None
 ) -> np.ndarray:
@@ -199,7 +237,6 @@ def frontier_dedup(
     first occurrence in the batch and absent from the sorted visited set
     (see vecops.frontier_dedup)."""
     be = _backend(backend)
-    DISPATCH_COUNTS["frontier_dedup"] += 1
     if be == "numpy":
         return vecops.frontier_dedup(cand_hi, cand_lo, vis_hi, vis_lo)
     cand_hi = np.asarray(cand_hi, dtype=np.int32)
@@ -220,6 +257,7 @@ def frontier_dedup(
 # -- segment aggregation ---------------------------------------------------------------
 
 
+@_ledgered
 def segment_reduce(keys, values, func: str, backend: Optional[str] = None,
                    seg=None):
     """(run_keys, per-run aggregates) over sorted keys. ``seg`` is the
@@ -227,7 +265,6 @@ def segment_reduce(keys, values, func: str, backend: Optional[str] = None,
     (see vecops.segment_reduce); the scan backends derive boundaries
     in-kernel and ignore it."""
     be = _backend(backend)
-    DISPATCH_COUNTS["segment_reduce"] += 1
     if be == "numpy":
         return vecops.segment_reduce(keys, values, func, seg)
     # jax / pallas: segmented scan then pick run ends
@@ -260,13 +297,13 @@ def segment_reduce(keys, values, func: str, backend: Optional[str] = None,
 # -- expression VM (DESIGN.md §9) -------------------------------------------
 
 
+@_ledgered
 def expr_eval(prog, icols, fcols, backend: Optional[str] = None):
     """Evaluate a compiled ExprProgram over an input block: (value, error)
     numpy arrays for the output register. The numpy path is the float64
     oracle; jax runs the jit'd float32 reference; pallas runs the fused
     kernel (whole program, one dispatch per batch)."""
     be = _backend(backend)
-    DISPATCH_COUNTS["expr_eval"] += 1
     icols = np.ascontiguousarray(icols, dtype=np.int32)
     if be == "numpy":
         from repro.core.exprs.vm import _interp
@@ -291,9 +328,9 @@ def expr_eval(prog, icols, fcols, backend: Optional[str] = None):
 # -- radix partition ---------------------------------------------------------------
 
 
+@_ledgered
 def radix_partition(keys, n_parts: int, backend: Optional[str] = None):
     be = _backend(backend)
-    DISPATCH_COUNTS["radix_partition"] += 1
     if be == "numpy":
         pid = vecops.hash_partition(np.asarray(keys), n_parts)
         return pid, vecops.partition_histogram(pid, n_parts)
@@ -320,6 +357,7 @@ def radix_partition(keys, n_parts: int, backend: Optional[str] = None):
 # where the Pallas path runs its own kernel (gather-free counting search).
 
 
+@_ledgered
 def hash_build(
     key_hi, key_lo, n_parts: int, backend: Optional[str] = None
 ) -> Tuple[np.ndarray, np.ndarray]:
@@ -328,7 +366,6 @@ def hash_build(
     partition-grouped, key-sorted position and ``part_starts`` is the
     (P+1,) prefix-sum of the partition histogram."""
     be = _backend(backend)
-    DISPATCH_COUNTS["hash_build"] += 1
     key_lo = np.asarray(key_lo, dtype=np.int32)
     mixed = vecops.mix_pair(key_hi, key_lo)
     pid, hist = radix_partition(mixed, n_parts, backend=be)
@@ -351,6 +388,7 @@ def hash_build(
     return order, part_starts
 
 
+@_ledgered
 def hash_probe(
     spid,
     skey_hi,
@@ -369,7 +407,6 @@ def hash_probe(
     through consecutive probe batches so build-side derivations (the
     global composite) are computed once, not per batch."""
     be = _backend(backend)
-    DISPATCH_COUNTS["hash_probe"] += 1
     skey_lo = np.asarray(skey_lo, dtype=np.int32)
     qkey_lo = np.asarray(qkey_lo, dtype=np.int32)
     if len(skey_lo) == 0 or len(qkey_lo) == 0:
@@ -406,6 +443,7 @@ def hash_probe(
 # -- bloom filter: SIP prefilters (DESIGN.md §12) ----------------------------------
 
 
+@_ledgered
 def bloom_build(
     keys, n_words: Optional[int] = None, backend: Optional[str] = None
 ) -> Tuple[np.ndarray, int, int]:
@@ -413,7 +451,6 @@ def bloom_build(
     min/max code range of the build keys — the payload of a SipFilter.
     ``n_words`` defaults to vecops.bloom_n_words(len(keys))."""
     be = _backend(backend)
-    DISPATCH_COUNTS["bloom_build"] += 1
     keys = np.ascontiguousarray(keys, dtype=np.int32)
     if n_words is None:
         n_words = vecops.bloom_n_words(len(keys))
@@ -431,10 +468,10 @@ def bloom_build(
     raise ValueError(be)
 
 
+@_ledgered
 def bloom_probe(words, queries, backend: Optional[str] = None) -> np.ndarray:
     """(C,) bool membership mask over ``queries`` — no false negatives."""
     be = _backend(backend)
-    DISPATCH_COUNTS["bloom_probe"] += 1
     queries = np.ascontiguousarray(queries, dtype=np.int32)
     if be == "numpy":
         return vecops.bloom_probe(words, queries)

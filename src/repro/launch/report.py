@@ -1,7 +1,19 @@
 """Report generators: experiments/dryrun/*.json -> roofline markdown
-tables for EXPERIMENTS.md, and BENCH_PR*.json -> engine tables including
+tables for EXPERIMENTS.md, BENCH_PR*.json -> engine tables including
 the property-path frontier metrics (rounds, dedup ratio, pool traffic)
-emitted by the §8 subsystem (``--bench BENCH_PR2.json``)."""
+emitted by the §8 subsystem (``--bench BENCH_PR2.json``), and the query
+telemetry report (DESIGN.md §13): ``--query q6`` / ``--sparql '...'``
+runs one query on a generated workload store and prints the whole
+observability surface in one place — EXPLAIN, EXPLAIN ANALYZE (actual
+vs estimated rows, MISEST flags at q-error >= 4), lifecycle span
+timings, the per-query kernel attribution table from the scoped
+KernelLedger, and optionally the Perfetto-loadable Chrome-trace JSON
+(``--trace out.json``). The structures printed are the same ones
+benchmarks/run.py's telemetry smoke and serve.metrics consume.
+
+    PYTHONPATH=src python -m repro.launch.report --query q6 --trace q6.json
+    PYTHONPATH=src python -m repro.launch.report --sparql 'SELECT ?a { ... }'
+"""
 
 from __future__ import annotations
 
@@ -9,6 +21,7 @@ import argparse
 import glob
 import json
 import os
+import sys
 from typing import Dict, List
 
 
@@ -119,13 +132,99 @@ def path_metrics_table(bench_json: str) -> str:
     return "\n".join(rows)
 
 
+def kernel_table(ledger) -> str:
+    """Fixed-width per-kernel attribution table from a KernelLedger
+    (dispatch counts + wall-ms by kernel and backend, DESIGN.md §13)."""
+    rows = []
+    for (name, backend), count in sorted(ledger.backend_counts.items()):
+        wall_ms = ledger.backend_wall_s.get((name, backend), 0.0) * 1e3
+        rows.append((name, backend, count, wall_ms))
+    if not rows:
+        return "  (no kernel dispatches recorded)"
+    total_ms = sum(r[3] for r in rows) or 1e-9
+    lines = [f"  {'kernel':<18} {'backend':<8} {'calls':>7} "
+             f"{'wall_ms':>9} {'share':>6}"]
+    for name, backend, count, wall_ms in rows:
+        lines.append(f"  {name:<18} {backend:<8} {count:>7} "
+                     f"{wall_ms:>9.3f} {wall_ms / total_ms:>5.1%}")
+    lines.append(f"  {'total':<18} {'':<8} {sum(r[2] for r in rows):>7} "
+                 f"{total_ms:>9.3f}")
+    return "\n".join(lines)
+
+
+def span_table(trace) -> str:
+    lines = []
+    for name, _cat, _t0, dur, args in trace.spans:
+        extra = f"  {args}" if args else ""
+        lines.append(f"  {name:<12} {dur * 1e3:>9.3f} ms{extra}")
+    return "\n".join(lines) if lines else "  (no spans)"
+
+
+def query_report(args, parser) -> int:
+    """The --query/--sparql mode: one query, full telemetry surface."""
+    from repro.core import Engine, EngineConfig
+    from repro.data import LSQB_QUERIES, generate_social_graph
+
+    if args.sparql:
+        query, label = args.sparql, "adhoc"
+    else:
+        if args.query not in LSQB_QUERIES:
+            parser.error(f"unknown LSQB query {args.query!r} "
+                         f"(have: {', '.join(sorted(LSQB_QUERIES))})")
+        query, label = LSQB_QUERIES[args.query], args.query
+
+    store, meta = generate_social_graph(scale=args.scale)
+    engine = Engine(store, EngineConfig(engine=args.engine))
+    res = engine.execute(query)
+    trace = res.trace
+
+    if args.json:
+        doc = trace.summary()
+        doc["pool"] = res.pool_delta()
+        doc["rows"] = res.n_rows
+        print(json.dumps(doc, indent=2))
+    else:
+        print(f"query {label} on {meta['n_triples']} triples "
+              f"({args.engine} engine): {res.n_rows} rows\n")
+        print("plan (EXPLAIN):")
+        print(engine.explain(query))
+        print("\noperators (EXPLAIN ANALYZE):")
+        print(res.explain_analyze())
+        print("\nlifecycle spans:")
+        print(span_table(trace))
+        print("\nkernel attribution:")
+        print(kernel_table(trace.ledger))
+        if res.pool_delta():
+            print("\npool delta:", res.pool_delta())
+
+    if args.trace:
+        trace.save_chrome_trace(args.trace)
+        print(f"\nwrote {args.trace} — open in ui.perfetto.dev",
+              file=sys.stderr)
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--mesh", default="single")
     ap.add_argument("--bench", default=None, metavar="BENCH_JSON",
                     help="print the property-path metrics table instead")
+    ap.add_argument("--query", default=None,
+                    help="telemetry report for an LSQB query (q1..q9)")
+    ap.add_argument("--sparql", default=None,
+                    help="telemetry report for raw SPARQL text")
+    ap.add_argument("--scale", type=float, default=0.05,
+                    help="social-graph scale factor for --query/--sparql")
+    ap.add_argument("--engine", default="barq",
+                    choices=("barq", "mixed", "legacy"))
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the query's Chrome-trace JSON here")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the query trace summary as JSON")
     args = ap.parse_args()
+    if args.query or args.sparql:
+        raise SystemExit(query_report(args, ap))
     if args.bench:
         print(path_metrics_table(args.bench))
         return

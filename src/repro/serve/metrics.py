@@ -1,0 +1,160 @@
+"""Serving metrics registry (DESIGN.md §13).
+
+Production serving needs aggregate observability on top of per-query
+traces: latency percentiles over a sliding window, throughput, plan-cache
+effectiveness, and where kernel time went across the whole request mix.
+``MetricsRegistry`` is that aggregation point — ``QueryServer`` feeds it
+one observation per request (latency, rows, the request's scoped
+``KernelLedger``, and its pool-counter delta) and exports the whole thing
+as JSON for dashboards / the benchmark reports.
+
+Only stdlib is imported (collections, json, time) plus the telemetry
+module — percentiles are computed by interpolation over a sorted copy of
+the window, so this stays importable anywhere.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+import time
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core.telemetry import KernelLedger
+
+
+def _percentile(sorted_vals: List[float], p: float) -> float:
+    """Linear-interpolated percentile of an already-sorted list (matches
+    numpy.percentile's default method; no numpy dependency here)."""
+    if not sorted_vals:
+        return 0.0
+    if len(sorted_vals) == 1:
+        return sorted_vals[0]
+    rank = (p / 100.0) * (len(sorted_vals) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(sorted_vals) - 1)
+    frac = rank - lo
+    return sorted_vals[lo] * (1.0 - frac) + sorted_vals[hi] * frac
+
+
+class SlidingWindow:
+    """Bounded window of (timestamp, value) observations.
+
+    Percentiles are over the last ``maxlen`` observations; rates (QPS) are
+    over the observations that fall inside the trailing ``window_s``
+    seconds, so an idle server's QPS decays to zero instead of reporting
+    its lifetime average."""
+
+    def __init__(self, maxlen: int = 1024) -> None:
+        self._obs: Deque[Tuple[float, float]] = collections.deque(maxlen=maxlen)
+
+    def add(self, value: float, ts: Optional[float] = None) -> None:
+        self._obs.append((time.monotonic() if ts is None else ts, value))
+
+    def __len__(self) -> int:
+        return len(self._obs)
+
+    def values(self) -> List[float]:
+        return [v for _t, v in self._obs]
+
+    def percentile(self, p: float) -> float:
+        return _percentile(sorted(self.values()), p)
+
+    def mean(self) -> float:
+        vals = self.values()
+        return sum(vals) / len(vals) if vals else 0.0
+
+    def rate(self, window_s: float = 60.0, now: Optional[float] = None) -> float:
+        """Observations per second over the trailing ``window_s``."""
+        if not self._obs:
+            return 0.0
+        now = time.monotonic() if now is None else now
+        cutoff = now - window_s
+        n = sum(1 for t, _v in self._obs if t >= cutoff)
+        if n == 0:
+            return 0.0
+        span = max(now - max(self._obs[0][0], cutoff), 1e-9)
+        return n / span
+
+
+class MetricsRegistry:
+    """Server-lifetime aggregation of per-request telemetry."""
+
+    def __init__(self, window: int = 1024) -> None:
+        self.latencies = SlidingWindow(window)
+        self.n_requests = 0
+        self.n_rows = 0
+        self.n_errors = 0
+        self.plan_cache_hits = 0
+        self.plan_cache_misses = 0
+        # cumulative kernel attribution across all observed requests
+        self.kernels = KernelLedger()
+        # summed per-request pool deltas (allocations, reuses, ...)
+        self.pool: collections.Counter = collections.Counter()
+        self.started = time.monotonic()
+
+    # -- feeding ------------------------------------------------------------
+
+    def observe_plan_cache(self, hit: bool) -> None:
+        if hit:
+            self.plan_cache_hits += 1
+        else:
+            self.plan_cache_misses += 1
+
+    def observe_request(
+        self,
+        latency_s: float,
+        n_rows: int = 0,
+        ledger: Optional[KernelLedger] = None,
+        pool_delta: Optional[Dict[str, int]] = None,
+        error: bool = False,
+        ts: Optional[float] = None,
+    ) -> None:
+        self.n_requests += 1
+        self.n_rows += int(n_rows)
+        if error:
+            self.n_errors += 1
+        self.latencies.add(float(latency_s), ts=ts)
+        if ledger is not None:
+            self.kernels.merge(ledger)
+        if pool_delta:
+            self.pool.update(pool_delta)
+
+    # -- reading ------------------------------------------------------------
+
+    def qps(self, window_s: float = 60.0) -> float:
+        return self.latencies.rate(window_s)
+
+    def plan_cache_hit_rate(self) -> float:
+        n = self.plan_cache_hits + self.plan_cache_misses
+        return self.plan_cache_hits / n if n else 0.0
+
+    def snapshot(self, window_s: float = 60.0) -> dict:
+        """JSON-able registry state: request/latency stats over the sliding
+        window, plan-cache effectiveness, kernel and pool attribution."""
+        return {
+            "uptime_s": round(time.monotonic() - self.started, 3),
+            "requests": {
+                "count": self.n_requests,
+                "rows": self.n_rows,
+                "errors": self.n_errors,
+                "qps": round(self.qps(window_s), 3),
+                "mean_ms": round(self.latencies.mean() * 1e3, 4),
+                "p50_ms": round(self.latencies.percentile(50) * 1e3, 4),
+                "p99_ms": round(self.latencies.percentile(99) * 1e3, 4),
+            },
+            "plan_cache": {
+                "hits": self.plan_cache_hits,
+                "misses": self.plan_cache_misses,
+                "hit_rate": round(self.plan_cache_hit_rate(), 4),
+            },
+            "kernels": self.kernels.snapshot(),
+            "pool": dict(self.pool),
+        }
+
+    def to_json(self, indent: Optional[int] = None, window_s: float = 60.0) -> str:
+        return json.dumps(self.snapshot(window_s), indent=indent)
+
+    def save(self, path: str, window_s: float = 60.0) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json(indent=2, window_s=window_s))

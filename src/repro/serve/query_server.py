@@ -6,6 +6,13 @@ a shared Engine with per-request latency accounting and a reusable plan
 cache keyed by the query template. The adaptive batch sizer inside the
 engine is the paper's §3.4 mechanism; this layer adds the serving loop,
 workload mix, and percentile reporting the evaluation section uses.
+
+Every request runs inside its own QueryTrace (DESIGN.md §13), so kernel
+dispatches and pool counters are attributed to exactly one request even
+though all requests share one Engine (and its warm buffer arena). The
+per-request ledgers and pool deltas aggregate into ``self.metrics`` — a
+``MetricsRegistry`` with sliding-window percentiles, QPS, plan-cache
+hit/miss, and JSON export.
 """
 
 from __future__ import annotations
@@ -20,6 +27,8 @@ import numpy as np
 from repro.core import Engine, EngineConfig, QuadStore
 from repro.core import algebra as A
 from repro.core import planner as PL
+from repro.core import telemetry
+from repro.serve.metrics import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -27,6 +36,12 @@ class RequestResult:
     query_id: str
     n_rows: int
     latency_s: float
+    # per-request attribution (None/empty when engine telemetry is off)
+    trace: Optional[telemetry.QueryTrace] = None
+    kernel_dispatches: int = 0
+    kernel_wall_s: float = 0.0
+    pool_delta: Dict[str, int] = dataclasses.field(default_factory=dict)
+    plan_cache_hit: bool = False
 
 
 class QueryServer:
@@ -34,6 +49,7 @@ class QueryServer:
         self.store = store
         self.engine = Engine(store, cfg or EngineConfig())
         self._plan_cache: Dict[str, Tuple[PL.Phys, A.VarTable]] = {}
+        self.metrics = MetricsRegistry()
 
     def _plan_for(self, text: str) -> Tuple[PL.Phys, A.VarTable]:
         # cache key is a hash of the query text itself — the caller's
@@ -46,6 +62,7 @@ class QueryServer:
             f"{self.engine.plan_fingerprint()}\n{text}".encode()
         ).hexdigest()
         hit = self._plan_cache.get(key)
+        self.metrics.observe_plan_cache(hit is not None)
         if hit is None:
             node, vt = self.engine.parse(text)
             hit = (self.engine.plan(node), vt)
@@ -54,9 +71,41 @@ class QueryServer:
 
     def execute(self, key: str, text: str) -> RequestResult:
         t0 = time.perf_counter()
+        misses_before = self.metrics.plan_cache_misses
         phys, vt = self._plan_for(text)
         res = self.engine.execute_plan(phys, vt)
-        return RequestResult(key, res.n_rows, time.perf_counter() - t0)
+        latency = time.perf_counter() - t0
+        tr = res.trace
+        pool_delta = res.pool_delta()
+        self.metrics.observe_request(
+            latency,
+            n_rows=res.n_rows,
+            ledger=tr.ledger if tr is not None else None,
+            pool_delta=pool_delta,
+        )
+        return RequestResult(
+            key,
+            res.n_rows,
+            latency,
+            trace=tr,
+            kernel_dispatches=tr.ledger.total() if tr is not None else 0,
+            kernel_wall_s=tr.ledger.total_wall_s() if tr is not None else 0.0,
+            pool_delta=pool_delta,
+            plan_cache_hit=self.metrics.plan_cache_misses == misses_before,
+        )
+
+    def explain_analyze(self, text: str) -> str:
+        """EXPLAIN ANALYZE through the server's plan cache (counts as a
+        cache touch but not as a served request in the latency window)."""
+        phys, vt = self._plan_for(text)
+        return self.engine.execute_plan(phys, vt).explain_analyze()
+
+    def metrics_snapshot(self, window_s: float = 60.0) -> dict:
+        return self.metrics.snapshot(window_s)
+
+    def metrics_json(self, indent: Optional[int] = 2,
+                     window_s: float = 60.0) -> str:
+        return self.metrics.to_json(indent=indent, window_s=window_s)
 
     def run_workload(
         self, requests: List[Tuple[str, str]], warmup: int = 0
@@ -72,4 +121,11 @@ class QueryServer:
             "mean_ms": float(lats.mean() * 1e3),
             "p50_ms": float(np.percentile(lats, 50) * 1e3),
             "p99_ms": float(np.percentile(lats, 99) * 1e3),
+            "kernel_dispatches": int(sum(r.kernel_dispatches for r in results)),
+            "kernel_wall_ms": float(
+                sum(r.kernel_wall_s for r in results) * 1e3
+            ),
+            "plan_cache_hit_rate": float(
+                sum(r.plan_cache_hit for r in results) / max(len(results), 1)
+            ),
         }

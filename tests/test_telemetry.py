@@ -1,0 +1,440 @@
+"""Query-scoped telemetry (DESIGN.md §13): scoped kernel ledger exactness
+under interleaving, EXPLAIN ANALYZE est-vs-actual plumbing across all
+three engines, Chrome-trace export structure, collect_stats aggregation
+rules, pool-delta attribution on a shared Engine, profiler formatting,
+and the serving metrics registry."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import Engine, EngineConfig, QuadStore, telemetry
+from repro.core.profiler import (
+    _fmt_extra,
+    collect_stats,
+    profile_tree,
+    q_error,
+)
+from repro.kernels import ops as KOPS
+
+
+def _chain_store(n=60):
+    store = QuadStore()
+    for i in range(n):
+        store.add(f":p{i}", ":knows", f":p{(i * 7 + 1) % n}")
+        store.add(f":p{i}", ":age", 20 + i % 30)
+    return store.build()
+
+
+# ---------------------------------------------------------------------------
+# scoped kernel ledger
+# ---------------------------------------------------------------------------
+
+
+def test_global_ledger_compat_semantics():
+    """DISPATCH_COUNTS / dispatch_count / reset keep their pre-§13 meaning:
+    process-global, reset-able, and the Counter object identity is the
+    global ledger's counts."""
+    assert KOPS.DISPATCH_COUNTS is telemetry.global_ledger().counts
+    KOPS.reset_dispatch_counts()
+    assert KOPS.dispatch_count("sorted_search") == 0
+    keys = np.arange(100, dtype=np.int64)
+    KOPS.sorted_search(keys, np.array([5, 50], dtype=np.int64))
+    assert KOPS.dispatch_count("sorted_search") == 1
+    assert KOPS.dispatch_count() >= 1
+    # wall-time attribution landed too, keyed by kernel and backend
+    led = telemetry.global_ledger()
+    assert led.wall_s["sorted_search"] > 0
+    assert led.backend_counts[("sorted_search", "numpy")] == 1
+    KOPS.reset_dispatch_counts()
+    assert KOPS.dispatch_count() == 0
+    assert not led.wall_s
+
+
+def test_nested_dispatches_tick_both():
+    """hash_build internally dispatches radix_partition: both count (the
+    pinned pre-§13 behavior), and build wall-time includes partition's."""
+    KOPS.reset_dispatch_counts()
+    hi = np.zeros(64, dtype=np.uint64)
+    lo = np.arange(64, dtype=np.uint64)
+    with telemetry.trace_query("nested") as tr:
+        KOPS.hash_build(hi, lo, 4)
+    for led in (tr.ledger, telemetry.global_ledger()):
+        assert led.counts["hash_build"] == 1
+        assert led.counts["radix_partition"] == 1
+        assert led.wall_s["hash_build"] >= led.wall_s["radix_partition"]
+
+
+def test_interleaved_queries_attribute_exactly():
+    """The acceptance pin: two queries interleaved batch-by-batch through
+    one process attribute every kernel dispatch to the right trace, and
+    the global ledger sees the sum."""
+    store = _chain_store()
+    q = "SELECT ?a ?b { ?a :knows ?b . ?b :age ?x . FILTER(?x > 25) }"
+    cfg = EngineConfig(engine="barq", initial_batch=32, max_batch=32,
+                       adaptive_batching=False, telemetry=False)
+
+    def build_tree():
+        from repro.core.executor import Translator
+
+        eng = Engine(store, cfg)
+        node, vt = eng.parse(q)
+        return Translator(store, eng.cfg).translate(eng.plan(node))
+
+    # solo run: the expected per-query dispatch profile
+    KOPS.reset_dispatch_counts()
+    solo = build_tree()
+    with telemetry.trace_query("solo") as tr_solo:
+        while solo.next_batch() is not None:
+            pass
+    expected = dict(tr_solo.ledger.counts)
+    assert expected, "workload dispatched no kernels"
+
+    # interleaved: alternate next_batch between two trees, each call under
+    # its own trace context
+    KOPS.reset_dispatch_counts()
+    op_a, op_b = build_tree(), build_tree()
+    tr_a, tr_b = telemetry.QueryTrace("qa"), telemetry.QueryTrace("qb")
+    done_a = done_b = False
+    while not (done_a and done_b):
+        if not done_a:
+            with telemetry.trace_query(trace=tr_a):
+                done_a = op_a.next_batch() is None
+        if not done_b:
+            with telemetry.trace_query(trace=tr_b):
+                done_b = op_b.next_batch() is None
+    assert dict(tr_a.ledger.counts) == expected
+    assert dict(tr_b.ledger.counts) == expected
+    # global = exact sum of both queries
+    for name, c in expected.items():
+        assert KOPS.dispatch_count(name) == 2 * c
+    # wall attribution is per-query, not shared
+    assert tr_a.ledger.total_wall_s() > 0
+    assert tr_b.ledger.total_wall_s() > 0
+
+
+def test_trace_context_does_not_leak():
+    KOPS.reset_dispatch_counts()
+    with telemetry.trace_query("scoped") as tr:
+        assert telemetry.current_trace() is tr
+    assert telemetry.current_trace() is None
+    KOPS.sorted_search(np.arange(8, dtype=np.int64),
+                       np.array([3], dtype=np.int64))
+    assert tr.ledger.counts["sorted_search"] == 0  # outside the scope
+    assert KOPS.dispatch_count("sorted_search") == 1
+
+
+# ---------------------------------------------------------------------------
+# EXPLAIN ANALYZE
+# ---------------------------------------------------------------------------
+
+
+def test_q_error():
+    assert q_error(10, 10) == 1.0
+    assert q_error(100, 10) == 10.0
+    assert q_error(10, 100) == 10.0
+    assert q_error(0, 0) == 1.0  # clamped, no div-by-zero
+    assert q_error(0, 8) == 8.0
+
+
+@pytest.mark.parametrize("engine", ["barq", "mixed", "legacy"])
+def test_explain_analyze_est_vs_actual(engine):
+    """est_rows flows planner -> Phys -> OpStats -> report in every
+    engine; the COUNT(*) aggregate's 10%-of-child estimate vs its actual
+    single output row forces a flagged misestimate."""
+    store = _chain_store()
+    eng = Engine(store, EngineConfig(engine=engine))
+    res = eng.execute("SELECT (COUNT(*) AS ?c) { ?a :knows ?b }")
+    assert res.n_rows == 1
+
+    # stats got stamped on the tree
+    ests = []
+
+    def walk(op):
+        if op.stats.est_rows is not None:
+            ests.append(op.stats.est_rows)
+        for c in op.children():
+            walk(c)
+
+    walk(res.root)
+    assert ests, "no operator received an estimate"
+
+    report = res.explain_analyze()
+    assert "est:" in report
+    assert "MISEST" in report  # est ~6 vs actual 1 -> q >= 4
+    # plain profile() hides the analyze columns
+    assert "MISEST" not in res.profile()
+    # Engine.explain_analyze() is the one-shot text API
+    assert "est:" in eng.explain_analyze("SELECT ?a { ?a :age ?x }")
+
+
+def test_collect_stats_q_error_and_rules():
+    """Aggregation rules: *_peak -> max, *_ratio -> recomputed (never
+    summed), additive default; max_q_error summarizes est quality."""
+    from repro.core.operators.base import BatchOperator
+
+    class Stub(BatchOperator):
+        def __init__(self, name, children=(), **extra):
+            super().__init__(name)
+            self._kids = list(children)
+            self.stats.extra.update(extra)
+
+        def children(self):
+            return self._kids
+
+    leaf1 = Stub("L1", frontier_peak=10, dedup_in=100, dedup_out=50,
+                 dedup_ratio=0.5, rounds=3)
+    leaf2 = Stub("L2", frontier_peak=40, dedup_in=100, dedup_out=25,
+                 dedup_ratio=0.25, rounds=2)
+    root = Stub("R", children=[leaf1, leaf2])
+    root.stats.results = 7
+    root.stats.est_rows = 70.0  # q = 10
+
+    agg = collect_stats(root)
+    assert agg["frontier_peak"] == 40  # max, not 50
+    assert agg["rounds"] == 5  # additive
+    assert agg["dedup_ratio"] == 0.375  # 75/200 recomputed, not 0.75
+    assert agg["max_q_error"] == 10.0
+    assert agg["operators"] == 3
+
+
+def test_collect_stats_pool_base_delta():
+    from repro.core.batch import BatchPool
+    from repro.core.operators.base import BatchOperator
+
+    class Leaf(BatchOperator):
+        def __init__(self):
+            super().__init__("Leaf")
+
+    pool = BatchPool()
+    pool.acquire(2, 32)
+    base = dict(pool.stats())
+    pool.acquire(2, 64)
+    agg = collect_stats(Leaf(), pool=pool, pool_base=base)
+    assert agg["pool_allocations"] == 1  # second acquire only
+
+
+# ---------------------------------------------------------------------------
+# pool attribution on a shared Engine
+# ---------------------------------------------------------------------------
+
+
+def test_shared_engine_pool_delta_per_query():
+    """Satellite fix: the second query's report must not include the first
+    query's allocations. The Engine-owned pool stays warm, so the repeat
+    run allocates nothing fresh and the delta proves it."""
+    store = _chain_store()
+    eng = Engine(store, EngineConfig(engine="barq"))
+    q = "SELECT ?a ?b { ?a :knows ?b . ?b :age ?x . FILTER(?x > 25) }"
+    r1 = eng.execute(q)
+    r2 = eng.execute(q)
+    assert r1.pool is r2.pool  # one warm arena
+    d1, d2 = r1.pool_delta(), r2.pool_delta()
+    assert d1["allocations"] > 0
+    assert d2["allocations"] == 0  # warm pool: all reuse on the repeat
+    assert d2["reuses"] > 0
+    assert d1["releases"] == d2["releases"]  # same query, same traffic
+    # deltas partition the cumulative counters exactly
+    cum = r2.pool.stats()
+    for k in cum:
+        assert d1[k] + d2[k] == cum[k], k
+    # and the profile header prints the delta, not the cumulative
+    line1 = r1.profile().splitlines()[0]
+    line2 = r2.profile().splitlines()[0]
+    assert line1.startswith("pool:") and line2.startswith("pool:")
+    assert "alloc: 0" in line2
+
+
+def test_fresh_engine_first_query_delta_is_absolute():
+    store = _chain_store()
+    r = Engine(store, EngineConfig(engine="barq")).execute(
+        "SELECT ?a { ?a :age ?x }")
+    assert r.pool_delta() == r.pool.stats()
+
+
+# ---------------------------------------------------------------------------
+# trace spans + Chrome-trace export
+# ---------------------------------------------------------------------------
+
+
+def test_query_trace_spans_and_chrome_export(tmp_path):
+    store = _chain_store()
+    res = Engine(store, EngineConfig(engine="barq")).execute(
+        "SELECT ?a ?b { ?a :knows ?b . ?b :age ?x }")
+    tr = res.trace
+    assert tr is not None
+    assert [s[0] for s in tr.spans] == ["parse", "plan", "translate",
+                                        "execute"]
+    assert all(s[3] >= 0 for s in tr.spans)
+    assert tr.ledger.total() > 0
+
+    path = tmp_path / "trace.json"
+    tr.save_chrome_trace(str(path))
+    doc = json.loads(path.read_text())
+    # Perfetto's Chrome-trace contract: traceEvents with ph/ts/dur/pid/tid
+    assert isinstance(doc["traceEvents"], list) and doc["traceEvents"]
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in metas} == {"query", "kernels",
+                                                 "operators"}
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert xs and all(
+        {"name", "ts", "dur", "pid", "tid"} <= set(e) for e in xs)
+    assert all(e["dur"] >= 0 for e in xs)
+    cats = {e.get("cat") for e in xs}
+    assert {"query", "kernel", "operator"} <= cats
+    # operator lane durations nest inside the execute span
+    exec_span = next(e for e in xs if e["name"] == "execute")
+    op_events = [e for e in xs if e.get("cat") == "operator"]
+    root_ev = max(op_events, key=lambda e: e["dur"])
+    assert root_ev["dur"] <= exec_span["dur"] * 1.5 + 1e3
+
+    summ = tr.summary()
+    assert summ["spans_ms"]["execute"] > 0
+    assert summ["kernels"]["dispatches"]
+
+
+def test_telemetry_off_skips_tracing():
+    store = _chain_store()
+    res = Engine(store, EngineConfig(engine="barq", telemetry=False)).execute(
+        "SELECT ?a { ?a :age ?x }")
+    assert res.trace is None
+    assert res.pool_delta()  # pool attribution still works
+
+
+# ---------------------------------------------------------------------------
+# profiler formatting (satellite fix)
+# ---------------------------------------------------------------------------
+
+
+def test_profiler_float_formatting():
+    assert _fmt_extra(3.141592653589793) == "3.14"
+    assert _fmt_extra(0.5) == "0.50"
+    assert _fmt_extra(123456.0) == "123.5K"  # large float -> _fmt_count
+    assert _fmt_extra(42) == "42"
+    assert _fmt_extra(2_000_000) == "2.0M"
+
+    from repro.core.operators.base import BatchOperator
+
+    class Leaf(BatchOperator):
+        def __init__(self):
+            super().__init__("Leaf")
+            self.stats.extra["seg_ms"] = 3.141592653589793
+            self.stats.extra["big_float"] = 123456.0
+
+    out = profile_tree(Leaf())
+    assert "seg_ms: 3.14" in out
+    assert "big_float: 123.5K" in out
+    assert "3.141592653589793" not in out
+
+
+# ---------------------------------------------------------------------------
+# serving metrics
+# ---------------------------------------------------------------------------
+
+
+def test_sliding_window_percentiles_match_numpy():
+    from repro.serve.metrics import SlidingWindow
+
+    rng = np.random.RandomState(7)
+    vals = rng.exponential(10.0, 200)
+    w = SlidingWindow(maxlen=1024)
+    for v in vals:
+        w.add(float(v), ts=0.0)
+    for p in (0, 25, 50, 90, 99, 100):
+        assert w.percentile(p) == pytest.approx(np.percentile(vals, p))
+    assert w.mean() == pytest.approx(vals.mean())
+    # bounded window keeps only the newest maxlen observations
+    w2 = SlidingWindow(maxlen=10)
+    for i in range(100):
+        w2.add(float(i), ts=float(i))
+    assert len(w2) == 10 and min(w2.values()) == 90.0
+
+
+def test_sliding_window_rate_decays():
+    from repro.serve.metrics import SlidingWindow
+
+    w = SlidingWindow()
+    for i in range(10):
+        w.add(1.0, ts=100.0 + i)
+    assert w.rate(window_s=60, now=110.0) == pytest.approx(1.0, rel=0.3)
+    assert w.rate(window_s=60, now=1000.0) == 0.0  # idle: decays to zero
+
+
+def test_metrics_registry_aggregation():
+    from repro.serve.metrics import MetricsRegistry
+
+    reg = MetricsRegistry()
+    led = telemetry.KernelLedger()
+    led.record("join_expand", "numpy", 0.002)
+    led.record("gather_emit", "pallas", 0.001)
+    reg.observe_request(0.010, n_rows=5, ledger=led,
+                        pool_delta={"allocations": 3}, ts=0.0)
+    reg.observe_request(0.020, n_rows=2, ledger=led,
+                        pool_delta={"allocations": 1}, ts=0.0)
+    reg.observe_plan_cache(False)
+    reg.observe_plan_cache(True)
+    reg.observe_plan_cache(True)
+
+    snap = reg.snapshot()
+    assert snap["requests"]["count"] == 2
+    assert snap["requests"]["rows"] == 7
+    assert snap["requests"]["p99_ms"] >= snap["requests"]["p50_ms"] > 0
+    assert snap["plan_cache"] == {"hits": 2, "misses": 1, "hit_rate": 0.6667}
+    assert snap["kernels"]["dispatches"] == {"join_expand": 2,
+                                             "gather_emit": 2}
+    assert snap["kernels"]["by_backend"]["gather_emit/pallas"] == 2
+    assert snap["pool"]["allocations"] == 4
+    json.loads(reg.to_json())  # JSON-able end to end
+
+
+def test_query_server_per_request_attribution():
+    """Each request's RequestResult carries its own kernel/pool deltas;
+    the registry aggregates them exactly."""
+    from repro.serve.query_server import QueryServer
+
+    store = _chain_store()
+    srv = QueryServer(store, EngineConfig(engine="barq"))
+    q1 = "SELECT ?a ?b { ?a :knows ?b . ?b :age ?x . FILTER(?x > 25) }"
+    q2 = "SELECT ?a { ?a :age ?x }"
+
+    r1 = srv.execute("q1", q1)
+    r2 = srv.execute("q2", q2)
+    r3 = srv.execute("q1", q1)
+
+    assert not r1.plan_cache_hit and not r2.plan_cache_hit
+    assert r3.plan_cache_hit
+    assert r1.kernel_dispatches > 0
+    assert r2.kernel_dispatches == 0  # single-scan query: no kernels
+    # same plan re-run attributes the same kernel profile
+    assert dict(r3.trace.ledger.counts) == dict(r1.trace.ledger.counts)
+    assert r3.pool_delta["allocations"] == 0  # warm arena on the repeat
+
+    snap = srv.metrics_snapshot()
+    assert snap["requests"]["count"] == 3
+    assert snap["plan_cache"]["hits"] == 1
+    assert snap["plan_cache"]["misses"] == 2
+    total = r1.kernel_dispatches + r2.kernel_dispatches + r3.kernel_dispatches
+    assert sum(snap["kernels"]["dispatches"].values()) == total
+    json.loads(srv.metrics_json())
+
+    # EXPLAIN ANALYZE through the server reuses the cached plan
+    misses = srv.metrics.plan_cache_misses
+    report = srv.explain_analyze(q1)
+    assert "est:" in report
+    assert srv.metrics.plan_cache_misses == misses
+
+
+def test_run_workload_keeps_pinned_keys_and_adds_attribution(tiny_store):
+    from repro.serve.query_server import QueryServer
+
+    srv = QueryServer(tiny_store, EngineConfig(engine="barq"))
+    reqs = [("a", "SELECT ?a ?b { ?a :knows ?b }"),
+            ("b", "SELECT ?p { ?p :interest :tag0 }")] * 3
+    stats = srv.run_workload(reqs, warmup=2)
+    for key in ("n_requests", "total_rows", "qps", "mean_ms", "p50_ms",
+                "p99_ms"):
+        assert key in stats  # pre-§13 consumers keep working
+    assert stats["n_requests"] == 4
+    assert stats["plan_cache_hit_rate"] == 1.0  # warmed both templates
+    assert stats["kernel_dispatches"] >= 0
