@@ -12,15 +12,22 @@ test:
 	$(PYTHON) -m pytest -q
 
 # the smoke also runs the telemetry end-to-end (EXPLAIN ANALYZE on an
-# LSQB query + Chrome-trace/metrics JSON export) and leaves the artifacts
-# under artifacts/ for CI to upload
+# LSQB query + Chrome-trace/metrics JSON export, plus the §14 workload
+# surface: format-validated OpenMetrics exposition, workload-repository
+# JSONL round-trip, feedback-loop convergence, and an induced flight
+# capture under artifacts/flight/) and leaves the artifacts under
+# artifacts/ for CI to upload
 smoke:
 	mkdir -p artifacts
 	$(PYTHON) -m benchmarks.run --fast --suite ops \
 	  --json artifacts/bench_ops.json --trace-out artifacts/lsqb_q6.trace.json
 
 # static gate: newest committed BENCH_PR*.json vs the most recent prior
-# file reporting the same metric on the same workload; fails beyond 1.15x
+# file reporting the same metric on the same workload; fails beyond 1.15x.
+# A paired pre-PR baseline in the current file's 'before' section (same
+# row, same box/session) supersedes the prior-PR number for that metric.
+# Also caps self-reported overhead*=X% derived tokens (telemetry tracing,
+# feedback recording) at 5% absolute
 regression:
 	$(PYTHON) -m benchmarks.check_regression
 

@@ -598,6 +598,84 @@ def bench_sip(n=200_000, reps=3):
     }
 
 
+def bench_feedback_loop(scale=0.05, reps=5):
+    """Cardinality-feedback payoff + recording cost (DESIGN.md §14).
+
+    Payoff: LSQB q6 (the paper's motivating query — its intermediate
+    join blowup is exactly what independence-assumption estimators get
+    wrong) runs twice on one apply-mode engine. Run 1 plans cold and
+    misestimates past the MISEST bar; run 2 re-plans with the observed
+    per-node cardinalities and its worst q-error must collapse to <= 2.
+
+    Cost: the same query under ``observe`` (record actuals, never read
+    them) vs ``off``, interleaved best-of-N like the §13 telemetry bench
+    — the recording path is one post-drain tree walk plus EWMA updates,
+    so it must stay in the telemetry-overhead noise class (<5%).
+
+    Also asserts ``off`` is a true no-op: its EXPLAIN output is
+    byte-identical to a default-config engine's."""
+    from repro.core import Engine, EngineConfig
+    from repro.core.profiler import collect_stats
+    from repro.data import LSQB_QUERIES, generate_social_graph
+
+    store, meta = generate_social_graph(scale=scale)
+    q = LSQB_QUERIES["q6"]
+
+    eng = Engine(store, EngineConfig(engine="barq",
+                                     cardinality_feedback="apply"))
+    t0 = time.perf_counter()
+    r1 = eng.execute(q)
+    t1 = time.perf_counter() - t0
+    q_run1 = collect_stats(r1.root).get("max_q_error", 1.0)
+    t0 = time.perf_counter()
+    r2 = eng.execute(q)
+    t2 = time.perf_counter() - t0
+    q_run2 = collect_stats(r2.root).get("max_q_error", 1.0)
+    assert r1.n_rows == r2.n_rows, "feedback re-plan changed the answer"
+    assert q_run1 >= 4.0, (
+        f"workload no longer misestimates cold (q={q_run1:.1f}); "
+        f"the payoff case needs a MISEST-grade query")
+    assert q_run2 <= 2.0, (
+        f"feedback did not converge: run-2 max_q_error={q_run2:.2f} > 2")
+
+    # off must be a byte-level no-op vs a default engine
+    plan_off = Engine(store, EngineConfig(
+        engine="barq", cardinality_feedback="off")).explain(q)
+    plan_default = Engine(store, EngineConfig(engine="barq")).explain(q)
+    assert plan_off == plan_default, "cardinality_feedback=off changed plans"
+
+    # recording overhead: observe vs off, interleaved best-of-N
+    best_off = best_obs = float("inf")
+    for rep in range(reps + 1):  # rep 0 = warmup
+        e_off = Engine(store, EngineConfig(engine="barq",
+                                           cardinality_feedback="off"))
+        t0 = time.perf_counter()
+        r_off = e_off.execute(q)
+        dt_off = time.perf_counter() - t0
+
+        e_obs = Engine(store, EngineConfig(engine="barq",
+                                           cardinality_feedback="observe"))
+        t0 = time.perf_counter()
+        r_obs = e_obs.execute(q)
+        dt_obs = time.perf_counter() - t0
+
+        assert r_obs.n_rows == r_off.n_rows
+        if rep > 0:
+            best_off = min(best_off, dt_off)
+            best_obs = min(best_obs, dt_obs)
+
+    return {
+        "rows": r1.n_rows,
+        "n_triples": meta["n_triples"],
+        "q_run1": q_run1,
+        "q_run2": q_run2,
+        "t_run1": t1,
+        "t_run2": t2,
+        "t_off": best_off,
+        "t_observe": best_obs,
+    }
+
+
 def run(seed: int = 0, fast: bool = False) -> str:
     """``fast`` is the CI smoke mode: tiny sizes so kernel regressions in
     the path subsystem fail the gate quickly without benchmark-scale cost."""
@@ -658,6 +736,23 @@ def run(seed: int = 0, fast: bool = False) -> str:
               f"overhead_vs_off={overhead_pct:.1f}%")
     suite.add("hash_join_telemetry_off", t_toff * 1e6,
               f"tuples_out={o_t};global ledger only")
+
+    # cardinality-feedback suite (DESIGN.md §14): LSQB q6 twice on one
+    # apply-mode engine (run 2 re-plans from observed cardinalities and
+    # must land at q-error <= 2), plus observe-vs-off recording overhead
+    # on the same query. Off-mode byte-identity and the q-error bars are
+    # asserted inside the bench at both scales.
+    fb = bench_feedback_loop(scale=0.02 if fast else 0.05)
+    suite.add("feedback_q6_apply_run1", fb["t_run1"] * 1e6,
+              f"rows={fb['rows']};max_q_error={fb['q_run1']:.1f};cold plan")
+    suite.add("feedback_q6_apply_run2", fb["t_run2"] * 1e6,
+              f"rows={fb['rows']};max_q_error={fb['q_run2']:.2f};"
+              f"replanned from observed cardinalities")
+    fb_overhead = (fb["t_observe"] - fb["t_off"]) / fb["t_off"] * 100.0
+    suite.add("feedback_q6_observe", fb["t_observe"] * 1e6,
+              f"rows={fb['rows']};overhead_vs_off={fb_overhead:.1f}%")
+    suite.add("feedback_q6_off", fb["t_off"] * 1e6,
+              f"rows={fb['rows']};no recording")
     if not fast:
         assert overhead_pct < 5.0, (
             f"acceptance: telemetry overhead {overhead_pct:.1f}% >= 5%")

@@ -12,10 +12,26 @@ groups=, pairs=, selected=, n=). Rows whose signature changed are reported
 as skipped, not compared — a gate that screams every time a workload is
 retuned trains people to ignore it.
 
+Prior-PR numbers were recorded on whatever machine state that PR's author
+had; wall-clock drifts across boxes and across months. When the current
+file's ``before`` section carries a row with the same (suite, name) and the
+same workload signature, that row is a *paired* baseline — the pre-PR code
+re-measured on the same machine in the same session — and it supersedes the
+prior-PR file for that metric (reported as "vs <file> (paired before)").
+A paired baseline cannot hide a real regression: it is the same workload on
+the same box, just without the PR's diff applied.
+
+Beyond the cross-PR ratio check, rows that self-report a relative cost in
+their ``derived`` field (tokens named ``overhead*`` with a ``%`` value —
+the §13 telemetry-tracing and §14 feedback-recording benches) are gated
+against an absolute cap (default 5%): observability that taxes the hot
+path more than that is a regression even if it is "new" this PR and has
+no prior row to compare against.
+
 Usage:
     python -m benchmarks.check_regression            # newest BENCH_PR*.json
     python -m benchmarks.check_regression --current BENCH_PR6.json
-    python -m benchmarks.check_regression --threshold 1.15
+    python -m benchmarks.check_regression --threshold 1.15 --overhead-cap 5
 """
 
 from __future__ import annotations
@@ -51,19 +67,41 @@ def _workload_sig(derived: str) -> Tuple[Tuple[str, str], ...]:
     return tuple(sorted(sig))
 
 
-def _after_rows(path: str) -> Dict[Tuple[str, str], dict]:
-    """(suite, metric_name) -> row, from a bench file's 'after' section."""
+def _section_rows(path: str, section: str) -> Dict[Tuple[str, str], dict]:
+    """(suite, metric_name) -> row, from one section of a bench file."""
     with open(path) as f:
         data = json.load(f)
     rows: Dict[Tuple[str, str], dict] = {}
-    for suite, entries in data.get("after", {}).items():
+    for suite, entries in data.get(section, {}).items():
         for row in entries:
             rows[(suite, row["name"])] = row
     return rows
 
 
+def _after_rows(path: str) -> Dict[Tuple[str, str], dict]:
+    return _section_rows(path, "after")
+
+
+def _overhead_tokens(derived: str) -> Dict[str, float]:
+    """``overhead*=X%`` tokens from a derived field — self-reported
+    relative costs the absolute cap applies to."""
+    out: Dict[str, float] = {}
+    for tok in str(derived).split(";"):
+        if "=" not in tok:
+            continue
+        k, v = tok.split("=", 1)
+        k, v = k.strip(), v.strip()
+        if k.startswith("overhead") and v.endswith("%"):
+            try:
+                out[k] = float(v[:-1])
+            except ValueError:
+                continue
+    return out
+
+
 def check(
-    current_path: str, threshold: float = 1.15, root: str = REPO_ROOT
+    current_path: str, threshold: float = 1.15, root: str = REPO_ROOT,
+    overhead_cap: float = 5.0,
 ) -> int:
     """Returns the number of regressions (0 = gate passes)."""
     current_pr = _pr_number(current_path)
@@ -86,6 +124,16 @@ def check(
     for p in priors:
         for key, row in _after_rows(p).items():
             baseline.setdefault(key, (row, os.path.basename(p)))
+
+    # paired same-machine baselines from the current file's 'before'
+    # section take precedence over older files (matching signature only)
+    cur_name = os.path.basename(current_path)
+    for key, brow in _section_rows(current_path, "before").items():
+        crow = current.get(key)
+        if crow is not None and _workload_sig(
+            brow.get("derived", "")
+        ) == _workload_sig(crow.get("derived", "")):
+            baseline[key] = (brow, f"{cur_name} (paired before)")
 
     regressions, compared, skipped = 0, 0, 0
     for key, row in sorted(current.items()):
@@ -110,8 +158,23 @@ def check(
         if ratio > threshold:
             regressions += 1
 
+    # absolute cap on self-reported overhead percentages (no prior needed)
+    overhead_checked = 0
+    for key, row in sorted(current.items()):
+        for tok, pct in _overhead_tokens(row.get("derived", "")).items():
+            overhead_checked += 1
+            over = pct > overhead_cap
+            tag = "REGRESSION" if over else "ok"
+            print(
+                f"{tag:>10}  {key[0]}/{key[1]}: {tok}={pct:.1f}% "
+                f"(cap {overhead_cap:.1f}%)"
+            )
+            if over:
+                regressions += 1
+
     print(
         f"\n{compared} compared, {skipped} skipped (workload changed), "
+        f"{overhead_checked} overhead token(s) capped at {overhead_cap:.1f}%, "
         f"{regressions} regression(s) beyond {threshold:.2f}x"
     )
     return regressions
@@ -125,6 +188,8 @@ def main(argv: Optional[list] = None) -> int:
         help="bench file for this PR (default: highest-numbered BENCH_PR*.json)",
     )
     ap.add_argument("--threshold", type=float, default=1.15)
+    ap.add_argument("--overhead-cap", type=float, default=5.0,
+                    help="absolute cap (%%) on overhead*= derived tokens")
     args = ap.parse_args(argv)
 
     current = args.current
@@ -139,7 +204,8 @@ def main(argv: Optional[list] = None) -> int:
     elif not os.path.isabs(current):
         current = os.path.join(REPO_ROOT, current)
     print(f"current: {os.path.basename(current)}")
-    return 1 if check(current, args.threshold) else 0
+    return 1 if check(current, args.threshold,
+                      overhead_cap=args.overhead_cap) else 0
 
 
 if __name__ == "__main__":

@@ -17,13 +17,21 @@ With ``--trace-out <path>`` an end-to-end telemetry smoke runs after the
 suites: one LSQB query executes under EXPLAIN ANALYZE (report printed),
 its QueryTrace is written as Chrome-trace JSON (loadable in Perfetto),
 and a small served workload's metrics registry is written next to it as
-``<path>.metrics.json`` — CI uploads both as artifacts.
+``<path>.metrics.json`` — CI uploads both as artifacts. The smoke also
+exercises the PR 8 workload-history surface (DESIGN.md §14): the served
+workload runs under ``cardinality_feedback="apply"`` with a flight
+recorder attached, a misestimating query's first run must trigger a
+q-error flight capture (bundle under ``artifacts/flight/``), the
+OpenMetrics exposition is written as ``<path>.metrics.prom`` and passes
+``validate_openmetrics``, and the workload repository JSONL round-trips
+through save/load as ``<path>.workload.jsonl``.
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 from typing import Dict, List
 
@@ -60,12 +68,67 @@ def telemetry_smoke(trace_out: str, fast: bool = True) -> None:
     assert all("ph" in ev and "pid" in ev for ev in doc["traceEvents"])
     print(f"# wrote {trace_out} ({len(doc['traceEvents'])} events)")
 
-    server = QueryServer(store, EngineConfig(engine="barq"))
+    from repro.serve.flight_recorder import FlightRecorder
+    from repro.serve.metrics import validate_openmetrics
+    from repro.serve.workload_repo import WorkloadRepository
+
+    # served workload under cardinality feedback with a flight recorder:
+    # q6's first run misestimates badly enough (planner has no history)
+    # that the q-error trigger must capture a bundle (DESIGN.md §14)
+    flight = FlightRecorder(out_dir="artifacts/flight", q_error_threshold=16.0)
+    server = QueryServer(
+        store,
+        EngineConfig(engine="barq", cardinality_feedback="apply"),
+        flight=flight,
+    )
     reqs = [("q1", LSQB_QUERIES["q1"]), ("q6", LSQB_QUERIES["q6"])] * 3
     server.run_workload(reqs, warmup=2)
     metrics_out = trace_out + ".metrics.json"
     server.metrics.save(metrics_out)
     print(f"# wrote {metrics_out}")
+
+    assert flight.n_captures >= 1, "flight recorder captured no outlier"
+    bundle_dir = sorted(
+        os.path.join("artifacts/flight", p)
+        for p in os.listdir("artifacts/flight")
+    )[-1]
+    for fname in ("trace.json", "explain.txt", "meta.json"):
+        assert os.path.exists(os.path.join(bundle_dir, fname)), (
+            f"missing {fname} in bundle"
+        )
+    with open(os.path.join(bundle_dir, "meta.json")) as fh:
+        meta_doc = json.load(fh)
+    assert meta_doc["reasons"], "capture bundle records no trigger reason"
+    print(f"# flight capture: {bundle_dir} (reasons: {meta_doc['reasons']})")
+
+    # the repeated q6 must have re-planned with observed cardinalities:
+    # a fresh run's worst plan-node q-error collapses vs the cold first run
+    r_warm = server.execute("q6-warm", LSQB_QUERIES["q6"])
+    assert r_warm.max_q_error <= 4.0, (
+        f"feedback did not converge: warm q6 max_q_error={r_warm.max_q_error}"
+    )
+    print(f"# feedback loop: warm q6 max_q_error={r_warm.max_q_error:.2f} "
+          f"(cold run triggered the capture above)")
+
+    prom_out = trace_out + ".metrics.prom"
+    exposition = server.openmetrics()
+    families = validate_openmetrics(exposition)
+    with open(prom_out, "w") as fh:
+        fh.write(exposition)
+    print(f"# wrote {prom_out} ({len(families)} metric families, "
+          f"format-validated)")
+
+    workload_out = trace_out + ".workload.jsonl"
+    n_saved = server.workload.save(workload_out)
+    reloaded = WorkloadRepository()
+    n_loaded = reloaded.load(workload_out)
+    assert n_loaded == n_saved, "workload JSONL did not round-trip"
+    assert len(reloaded.feedback.snapshot()) == len(
+        server.workload.feedback.snapshot()
+    ), "feedback store did not round-trip"
+    print(f"# wrote {workload_out} ({n_saved} fingerprints, "
+          f"{len(reloaded.feedback.snapshot())} feedback entries, "
+          f"reload-verified)")
 
 
 def main() -> None:

@@ -96,6 +96,11 @@ class EngineConfig:
     # (spans + scoped kernel ledger + operator lane). Cheap enough to be
     # on by default; False skips trace creation entirely
     telemetry: bool = True
+    # cardinality feedback (DESIGN.md §14): "off" = no history, "observe" =
+    # record per-node actuals into the feedback store without touching
+    # plans, "apply" = planner overrides estimates with observed history
+    # (repeated misestimated queries re-plan with real cardinalities)
+    cardinality_feedback: str = "off"
 
 
 class Translator:
@@ -150,11 +155,15 @@ class Translator:
 
     def _build(self, n: PL.Phys) -> AnyOp:
         """Lower one Phys node, stamping the planner's cardinality estimate
-        onto the produced operator's stats (EXPLAIN ANALYZE input)."""
+        (+ its source) and node fingerprint onto the produced operator's
+        stats (EXPLAIN ANALYZE / feedback-recording input)."""
         op = self._build_node(n)
         est = getattr(n, "est_rows", 0.0)
         if est and op.stats.est_rows is None:
             op.stats.est_rows = float(est)
+            op.stats.est_source = getattr(n, "est_source", "stats")
+        if op.stats.node_fp is None:
+            op.stats.node_fp = getattr(n, "fp", "") or None
         return op
 
     def _build_node(self, n: PL.Phys) -> AnyOp:
@@ -358,6 +367,9 @@ class Translator:
         est = getattr(n, "est_rows", 0.0)
         if est and op.stats.est_rows is None:
             op.stats.est_rows = float(est)
+            op.stats.est_source = getattr(n, "est_source", "stats")
+        if op.stats.node_fp is None:
+            op.stats.node_fp = getattr(n, "fp", "") or None
         return op
 
     def _row_node(self, n: PL.Phys) -> LOP.RowOperator:
@@ -561,16 +573,30 @@ class QueryResult:
 class Engine:
     """Public API: Engine(store).execute(plan | sparql_text)."""
 
-    def __init__(self, store: QuadStore, cfg: Optional[EngineConfig] = None):
+    def __init__(self, store: QuadStore, cfg: Optional[EngineConfig] = None,
+                 feedback: Optional[telemetry.CardinalityFeedback] = None):
         self.store = store
         self.cfg = cfg or EngineConfig()
         self.stats = GraphStats(store)
+        mode = self.cfg.cardinality_feedback or "off"
+        assert mode in ("off", "observe", "apply"), mode
+        # cardinality feedback store (DESIGN.md §14): caller-shared (the
+        # serving layer hands in its WorkloadRepository's store) or
+        # Engine-owned. "observe" records without applying; "apply" also
+        # hands it to the planner.
+        self.feedback: Optional[telemetry.CardinalityFeedback] = None
+        if mode != "off":
+            self.feedback = (
+                feedback if feedback is not None
+                else telemetry.CardinalityFeedback()
+            )
         self.planner = PL.Planner(
             self.stats,
             barq_enabled=self.cfg.engine != "legacy",
             dictionary=store.dict,
             join_strategy=self.cfg.join_strategy,
             sip=self.cfg.sip,
+            feedback=self.feedback if mode == "apply" else None,
         )
         # Engine-owned warm arena (DESIGN.md §2.3/§13): shared across this
         # Engine's queries so repeated traffic skips cold-start allocations.
@@ -584,8 +610,14 @@ class Engine:
     def plan_fingerprint(self) -> str:
         """Identity of every config knob that changes plan shape. Plan
         caches keyed on query text alone serve a stale shape after a
-        config change — fold this in (see serve.query_server)."""
-        return f"{self.cfg.engine}|{self.cfg.join_strategy}|{self.cfg.sip}"
+        config change — fold this in (see serve.query_server). Under
+        ``cardinality_feedback="apply"`` the feedback store's version is
+        folded in too: new observations must invalidate cached plans, or
+        a repeated query would never re-plan against its history."""
+        base = f"{self.cfg.engine}|{self.cfg.join_strategy}|{self.cfg.sip}"
+        if self.cfg.cardinality_feedback == "apply" and self.feedback is not None:
+            base += f"|fb{self.feedback.version}"
+        return base
 
     def parse(self, text: str) -> Tuple[A.PlanNode, A.VarTable]:
         from repro.core.parser import parse_query
@@ -660,8 +692,27 @@ class Engine:
             trace.add_span("execute", "query", t0, time.perf_counter() - t0,
                            rows=int(arr.shape[0]))
             trace.add_operator_tree(op)
+        if self.feedback is not None:
+            self._record_actuals(op)
         return QueryResult(var_table or A.VarTable(), proj, arr, op, pool,
                            pool_base=pool_base, trace=trace)
+
+    def _record_actuals(self, root: AnyOp) -> None:
+        """Feed the drained tree's actual output rows into the feedback
+        store, keyed by node fingerprint. Pass-through chains (Sort over
+        Scan, ...) share one fingerprint — record it once, from the
+        topmost operator (identical counts by construction)."""
+        seen = set()
+
+        def walk(op) -> None:
+            fp = op.stats.node_fp
+            if fp and fp not in seen:
+                seen.add(fp)
+                self.feedback.record(fp, op.stats.results)
+            for c in op.children():
+                walk(c)
+
+        walk(root)
 
     def execute(self, node_or_text: Union[str, A.PlanNode],
                 var_table: Optional[A.VarTable] = None,

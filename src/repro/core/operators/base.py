@@ -27,6 +27,8 @@ class OpStats:
         "wall_time",
         "rows_scanned",
         "est_rows",
+        "est_source",
+        "node_fp",
         "extra",
     )
 
@@ -43,6 +45,13 @@ class OpStats:
         # planner cardinality estimate for this operator's Phys node, or
         # None when lowering had no estimate (EXPLAIN ANALYZE input)
         self.est_rows: Optional[float] = None
+        # where the estimate came from: "stats" (cost model) or "feedback"
+        # (observed-cardinality override, DESIGN.md §14)
+        self.est_source: str = "stats"
+        # the Phys node's stable fingerprint (planner), or None for
+        # programmatically built trees / adapters — the key the executor
+        # records actual cardinalities under
+        self.node_fp: Optional[str] = None
         # operator-specific counters (e.g. PathExpand frontier rounds /
         # dedup ratio); the profiler prints and aggregates them generically
         self.extra: dict = {}

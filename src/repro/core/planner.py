@@ -22,10 +22,12 @@ BARQ).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
-from typing import List, Optional, Sequence, Tuple, Union as TUnion
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple, Union as TUnion
 
 from repro.core import algebra as A
+from repro.core import telemetry
 from repro.core.stats import GraphStats
 
 # ---------------------------------------------------------------------------
@@ -36,6 +38,19 @@ from repro.core.stats import GraphStats
 @dataclasses.dataclass
 class PhysNode:
     est_rows: float = dataclasses.field(default=0.0, init=False)
+    # where est_rows came from: "stats" (cost model) or "feedback"
+    # (observed-cardinality override, DESIGN.md §14)
+    est_source: str = dataclasses.field(default="stats", init=False, repr=False)
+    # stable node fingerprint (annotate_fingerprints): the key observed
+    # cardinalities are recorded and looked up under. Empty until computed.
+    fp: str = dataclasses.field(default="", init=False, repr=False)
+    # the set of source fingerprints this node's inner-join tree covers —
+    # inner joins hash the *unordered* union, so (A⋈B)⋈C and A⋈(C⋈B) and
+    # the hash/merge/lookup variants of the same logical join share one
+    # fingerprint (cardinality doesn't depend on order or strategy)
+    srcs: FrozenSet[str] = dataclasses.field(
+        default_factory=frozenset, init=False, repr=False
+    )
 
 
 @dataclasses.dataclass
@@ -281,6 +296,167 @@ def phys_sorted_by(n: Phys) -> Optional[int]:
 
 
 # ---------------------------------------------------------------------------
+# node fingerprints (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+# Every Phys node gets a stable fingerprint identifying *what it computes*
+# (not how): constants stay literal (cardinality depends on them), variables
+# canonicalize through the query's first-appearance map, and physical
+# details that can't change output cardinality — sort vars, seed sides,
+# join strategy, SIP annotations — are excluded. The executor records each
+# operator's actual row count under this key; the planner's feedback
+# override looks the same key up on the next plan of the same (or any
+# same-shaped) query.
+
+
+def _fp_hash(label: str) -> str:
+    return hashlib.sha256(label.encode()).hexdigest()[:16]
+
+
+def _fp_slot(sl, canon: Dict[int, int]) -> str:
+    if isinstance(sl, A.V):
+        return f"?{canon.get(sl.id, sl.id)}"
+    return f"K:{sl.term}"
+
+
+def _fp_expr(e, canon: Dict[int, int]) -> str:
+    if e is None:
+        return ""
+    if isinstance(e, A.VarRef):
+        return f"?{canon.get(e.var, e.var)}"
+    if isinstance(e, A.Lit):
+        return f"L:{e.value!r}"
+    if isinstance(e, A.Cmp):
+        return f"({_fp_expr(e.lhs, canon)}{e.op}{_fp_expr(e.rhs, canon)})"
+    if isinstance(e, A.Arith):
+        return f"({_fp_expr(e.lhs, canon)}{e.op}{_fp_expr(e.rhs, canon)})"
+    if isinstance(e, A.And):
+        return "and(" + ",".join(_fp_expr(t, canon) for t in e.terms) + ")"
+    if isinstance(e, A.Or):
+        return "or(" + ",".join(_fp_expr(t, canon) for t in e.terms) + ")"
+    if isinstance(e, A.Not):
+        return f"not({_fp_expr(e.term, canon)})"
+    if isinstance(e, A.Bound):
+        return f"bound(?{canon.get(e.var, e.var)})"
+    if isinstance(e, A.Func):
+        return f"{e.name}(" + ",".join(_fp_expr(a, canon) for a in e.args) + ")"
+    return type(e).__name__
+
+
+def _leaf_label(p, canon: Dict[int, int]) -> str:
+    """Fingerprint label for a BGP leaf (TriplePattern or PathPattern)."""
+    if isinstance(p, A.PathPattern):
+        from repro.core.paths.expr import path_repr
+
+        return (
+            f"path({_fp_slot(p.s, canon)},{path_repr(p.expr)},"
+            f"{_fp_slot(p.o, canon)})"
+        )
+    parts = [_fp_slot(p.s, canon), _fp_slot(p.p, canon), _fp_slot(p.o, canon)]
+    if p.g is not None:
+        parts.append(_fp_slot(p.g, canon))
+    if p.path:
+        parts.append(f"+{p.path}")
+    return f"scan({','.join(parts)})"
+
+
+def _srcs_label(srcs: FrozenSet[str]) -> str:
+    return ",".join(sorted(srcs))
+
+
+def _join_fp(
+    mode: str, post_filter, left: "Phys", right: "Phys", canon: Dict[int, int]
+) -> Tuple[str, FrozenSet[str]]:
+    """Fingerprint for a join over two (already-fingerprinted) subplans.
+    Plain inner joins hash the unordered union of source sets; everything
+    order-sensitive (semi/anti/left_outer, or a join condition) hashes the
+    ordered pair of source sets plus the condition."""
+    if mode == "inner" and post_filter is None:
+        srcs = left.srcs | right.srcs
+        return _fp_hash("join{" + _srcs_label(srcs) + "}"), srcs
+    label = (
+        f"{mode}[{_fp_expr(post_filter, canon)}]"
+        f"({_srcs_label(left.srcs)}|{_srcs_label(right.srcs)})"
+    )
+    fp = _fp_hash(label)
+    return fp, frozenset((fp,))
+
+
+# unary nodes that preserve their child's cardinality 1:1 share the child's
+# fingerprint — one observation covers the whole pass-through chain
+_PASS_THROUGH = (PSort, PProject, POrderBy, PExtend)
+
+
+def annotate_fingerprints(n: Phys, canon: Dict[int, int]) -> None:
+    """Bottom-up fingerprint computation over a physical plan. Idempotent:
+    nodes fingerprinted during planning (feedback consultation) keep their
+    values; only unset nodes are computed."""
+    if n.fp:
+        return
+    for fld in ("child", "left", "right", "probe", "build"):
+        c = getattr(n, fld, None)
+        if isinstance(c, PhysNode):
+            annotate_fingerprints(c, canon)
+    if isinstance(n, (PScan, PPathExpand, PPathScan)):
+        n.fp = _fp_hash(_leaf_label(n.pattern, canon))
+        n.srcs = frozenset((n.fp,))
+    elif isinstance(n, _PASS_THROUGH):
+        n.fp, n.srcs = n.child.fp, n.child.srcs
+    elif isinstance(n, PFilter):
+        # selections commute with inner joins, so a filter joins the
+        # source set as a pseudo-source atom: σ_E(A⋈B⋈C) and σ_E(A⋈B)⋈C
+        # fingerprint identically no matter where the planner placed it
+        n.srcs = n.child.srcs | frozenset((f"σ[{_fp_expr(n.expr, canon)}]",))
+        n.fp = _fp_hash("join{" + _srcs_label(n.srcs) + "}")
+    elif isinstance(n, PHaving):
+        n.fp = _fp_hash(
+            f"having[{_fp_expr(n.expr, canon)}]" + "{"
+            + _srcs_label(n.child.srcs) + "}"
+        )
+        n.srcs = frozenset((n.fp,))
+    elif isinstance(n, PDistinct):
+        n.fp = _fp_hash("distinct{" + _srcs_label(n.child.srcs) + "}")
+        n.srcs = frozenset((n.fp,))
+    elif isinstance(n, PGroup):
+        gv = ",".join(f"?{canon.get(v, v)}" for v in n.group_vars)
+        aggs = ";".join(
+            f"{'d' if a.distinct else ''}{a.func}"
+            f"({'*' if a.var is None else '?%s' % canon.get(a.var, a.var)})"
+            for a in n.aggs
+        )
+        n.fp = _fp_hash(
+            f"group[{gv}|{aggs}]" + "{" + _srcs_label(n.child.srcs) + "}"
+        )
+        n.srcs = frozenset((n.fp,))
+    elif isinstance(n, PSlice):
+        n.fp = _fp_hash(
+            f"slice[{n.limit}:{n.offset}]" + "{"
+            + _srcs_label(n.child.srcs) + "}"
+        )
+        n.srcs = frozenset((n.fp,))
+    elif isinstance(n, PMergeJoin):
+        n.fp, n.srcs = _join_fp(n.mode, n.post_filter, n.left, n.right, canon)
+    elif isinstance(n, PLookupJoin):
+        n.fp, n.srcs = _join_fp(n.mode, None, n.probe, n.build, canon)
+    elif isinstance(n, PHashJoin):
+        n.fp, n.srcs = _join_fp(n.mode, n.post_filter, n.probe, n.build, canon)
+    elif isinstance(n, PCross):
+        n.fp, n.srcs = _join_fp("inner", None, n.left, n.right, canon)
+    elif isinstance(n, PUnion):
+        n.fp = _fp_hash(
+            "union("
+            + "|".join(
+                sorted((_srcs_label(n.left.srcs), _srcs_label(n.right.srcs)))
+            )
+            + ")"
+        )
+        n.srcs = frozenset((n.fp,))
+    else:
+        n.fp = _fp_hash(type(n).__name__)
+        n.srcs = frozenset((n.fp,))
+
+
+# ---------------------------------------------------------------------------
 # planner
 # ---------------------------------------------------------------------------
 
@@ -305,10 +481,18 @@ class Planner:
         dictionary=None,
         join_strategy: Optional[str] = None,
         sip: Optional[str] = None,
+        feedback: Optional[telemetry.CardinalityFeedback] = None,
     ):
         assert join_strategy in (None, "hash", "merge")
         assert sip in (None, "on", "off")
         self.stats = stats
+        # observed-cardinality feedback store (DESIGN.md §14): when set,
+        # estimates at every choke point — leaf cards, join ordering, the
+        # generic binary-join estimate — prefer recorded actuals over the
+        # cost model, and a final pass stamps est_source="feedback"
+        self.feedback = feedback
+        # canonical var map of the query being planned (fingerprint input)
+        self._canon: Dict[int, int] = {}
         # sideways information passing (DESIGN.md §12): None = cost-gated
         # (push a prefilter when the build side looks selective), "on" =
         # always push where sound, "off" = never annotate
@@ -332,10 +516,34 @@ class Planner:
     # -- public -------------------------------------------------------------------
 
     def plan(self, node: A.PlanNode) -> Phys:
+        self._canon = telemetry.canonical_var_map(node)
         phys = self._plan(node)
         if self.sip != "off":
             self._sip_walk(phys)
+        annotate_fingerprints(phys, self._canon)
+        if self.feedback is not None:
+            self._apply_feedback(phys)
         return phys
+
+    def _apply_feedback(self, n: Phys) -> None:
+        """Final pass: override every node's estimate with its observed
+        cardinality where history exists, tagging the source so EXPLAIN
+        renders ``est=N(source=feedback)`` and EXPLAIN ANALYZE q-errors
+        reflect the history-corrected numbers."""
+        for fld in ("child", "left", "right", "probe", "build"):
+            c = getattr(n, fld, None)
+            if isinstance(c, PhysNode):
+                self._apply_feedback(c)
+        obs = self.feedback.lookup(n.fp)
+        if obs is not None:
+            n.est_rows = obs
+            n.est_source = "feedback"
+
+    def _feedback_est(self, fp: str, default: float) -> float:
+        if self.feedback is None:
+            return default
+        obs = self.feedback.lookup(fp)
+        return default if obs is None else obs
 
     def compile_expr(self, expr: A.Expr, mode: str):
         """ExprProgram for ``expr``; ``False`` (cached) when the expression
@@ -564,10 +772,17 @@ class Planner:
     def _pattern_card(self, p) -> float:
         """Cardinality for a BGP leaf: triple patterns from the index
         ranges, paths from the stats-based closure estimate (replacing the
-        old hard-coded 3-hop multiplier)."""
+        old hard-coded 3-hop multiplier). With a feedback store attached,
+        an observed actual for the same leaf fingerprint wins."""
         if isinstance(p, A.PathPattern):
-            return max(self.stats.path_cardinality(p), 0)
-        return max(self.stats.pattern_cardinality(p), 0)
+            est = max(self.stats.path_cardinality(p), 0)
+        else:
+            est = max(self.stats.pattern_cardinality(p), 0)
+        if self.feedback is None:
+            return est
+        return self._feedback_est(
+            _fp_hash(_leaf_label(self._normalize_pattern(p), self._canon)), est
+        )
 
     def _pattern_distinct(self, p, var: int) -> int:
         if isinstance(p, A.PathPattern):
@@ -655,6 +870,15 @@ class Planner:
         amplifying = est > 4 * max(left.est_rows, right.est_rows)
         if self.barq_enabled and amplifying:
             est *= 0.5  # §4.2: amplifying merge joins are cheap under BARQ
+        if self.feedback is not None:
+            # observed cardinality for this join's source set (order- and
+            # strategy-insensitive) beats the containment estimate — and
+            # flows into the DP cost, so ordering re-plans under history
+            annotate_fingerprints(left, self._canon)
+            annotate_fingerprints(right, self._canon)
+            est = self._feedback_est(
+                _join_fp("inner", None, left, right, self._canon)[0], est
+            )
         ln = max(left.est_rows, 1.0)
         rn = max(right.est_rows, 1.0)
         l_sorted = phys_sorted_by(left) == jv
@@ -752,6 +976,15 @@ class Planner:
                 if self.barq_enabled and est > 4 * max(current.est_rows, cards[id(p)]):
                     # §4.2: amplifying merge joins are cheaper under BARQ
                     est *= 0.5
+                if self.feedback is not None:
+                    # history for (current ⋈ p)'s source set steers the
+                    # greedy pick just like it steers the DP
+                    annotate_fingerprints(current, self._canon)
+                    leaf_fp = _fp_hash(_leaf_label(p, self._canon))
+                    srcs = current.srcs | frozenset((leaf_fp,))
+                    est = self._feedback_est(
+                        _fp_hash("join{" + ",".join(sorted(srcs)) + "}"), est
+                    )
                 if best_est is None or est < best_est:
                     best, best_est, best_var = p, est, jv
             if best is None:
@@ -940,6 +1173,12 @@ class Planner:
                 break
         est = self._binary_join_estimate(left, right, jv, mode)
         join_mode = "anti" if mode == "not_exists" else mode
+        if self.feedback is not None:
+            annotate_fingerprints(left, self._canon)
+            annotate_fingerprints(right, self._canon)
+            est = self._feedback_est(
+                _join_fp(join_mode, expr, left, right, self._canon)[0], est
+            )
         if self._choose_join_strategy(left, right, jv, est) == "hash":
             out = PHashJoin(
                 left, right, tuple(shared), mode=join_mode, post_filter=expr,
@@ -966,6 +1205,16 @@ class Planner:
 def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) -> str:
     pad = "  " * indent
 
+    def estf(node) -> str:
+        # ``(source=feedback)`` marks history-overridden estimates; plans
+        # built without a feedback store render byte-identically to pre-§14
+        src = (
+            "(source=feedback)"
+            if getattr(node, "est_source", "stats") == "feedback"
+            else ""
+        )
+        return f"est={node.est_rows:.0f}{src}"
+
     def vname(v):
         return f"?{var_table.name(v)}" if var_table else f"?v{v}"
 
@@ -987,7 +1236,7 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
         t = []
         for sl in (n.pattern.s, n.pattern.p, n.pattern.o):
             t.append(vname(sl.id) if isinstance(sl, A.V) else str(sl.term))
-        return f"{pad}Scan({', '.join(t)}) est={n.est_rows:.0f}{sip_in(n)}"
+        return f"{pad}Scan({', '.join(t)}) {estf(n)}{sip_in(n)}"
     if isinstance(n, PPathExpand):
         from repro.core.paths.expr import path_repr
 
@@ -995,7 +1244,7 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
         o = vname(n.pattern.o.id) if isinstance(n.pattern.o, A.V) else str(n.pattern.o.term)
         return (
             f"{pad}PathExpand({s}, {path_repr(n.pattern.expr)}, {o}) "
-            f"[seed={n.seed_side}] est={n.est_rows:.0f}{sip_in(n)}"
+            f"[seed={n.seed_side}] {estf(n)}{sip_in(n)}"
         )
     if isinstance(n, PSort):
         return f"{pad}Sort({vname(n.var)})\n" + explain(n.child, var_table, indent + 1)
@@ -1003,14 +1252,14 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
         amp = " AMPLIFYING" if n.amplifying else ""
         return (
             f"{pad}MergeJoin({vname(n.var)}, {n.mode}){amp} "
-            f"est={n.est_rows:.0f}{sip_out(n)}\n"
+            f"{estf(n)}{sip_out(n)}\n"
             + explain(n.left, var_table, indent + 1)
             + "\n"
             + explain(n.right, var_table, indent + 1)
         )
     if isinstance(n, PLookupJoin):
         return (
-            f"{pad}LookupJoin({vname(n.var)}, {n.mode}) est={n.est_rows:.0f}\n"
+            f"{pad}LookupJoin({vname(n.var)}, {n.mode}) {estf(n)}\n"
             + explain(n.probe, var_table, indent + 1)
             + "\n"
             + explain(n.build, var_table, indent + 1)
@@ -1018,22 +1267,22 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
     if isinstance(n, PHashJoin):
         keys = ", ".join(vname(k) for k in n.keys) if n.keys else "<const>"
         return (
-            f"{pad}HashJoin({keys}, {n.mode}) est={n.est_rows:.0f}{sip_out(n)}\n"
+            f"{pad}HashJoin({keys}, {n.mode}) {estf(n)}{sip_out(n)}\n"
             + explain(n.probe, var_table, indent + 1)
             + "\n"
             + explain(n.build, var_table, indent + 1)
         )
     if isinstance(n, PCross):
         return (
-            f"{pad}Cross est={n.est_rows:.0f}\n"
+            f"{pad}Cross {estf(n)}\n"
             + explain(n.left, var_table, indent + 1)
             + "\n"
             + explain(n.right, var_table, indent + 1)
         )
     if isinstance(n, PFilter):
-        return f"{pad}Filter est={n.est_rows:.0f}\n" + explain(n.child, var_table, indent + 1)
+        return f"{pad}Filter {estf(n)}\n" + explain(n.child, var_table, indent + 1)
     if isinstance(n, PHaving):
-        return f"{pad}Having est={n.est_rows:.0f}\n" + explain(n.child, var_table, indent + 1)
+        return f"{pad}Having {estf(n)}\n" + explain(n.child, var_table, indent + 1)
     if isinstance(n, PExtend):
         return f"{pad}Bind({vname(n.var)})\n" + explain(n.child, var_table, indent + 1)
     if isinstance(n, PProject):

@@ -104,7 +104,12 @@ def profile_tree(root, var_table: VarTable = None, pool=None,
         if analyze and est is not None:
             q = q_error(est, s.results)
             flag = f" MISEST(q={q:.1f})" if q >= QERROR_FLAG else ""
-            parts.append(f"est: {_fmt_count(est)}{flag}")
+            src = (
+                "(source=feedback)"
+                if getattr(s, "est_source", "stats") == "feedback"
+                else ""
+            )
+            parts.append(f"est: {_fmt_count(est)}{src}{flag}")
         if s.batches:
             parts.append(f"batches: {_fmt_count(s.batches)}")
         parts.append(f"next: {_fmt_count(s.next_calls)}")

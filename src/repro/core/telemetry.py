@@ -24,13 +24,31 @@ buffer to exactly one request:
                    existing callers, the scoped ledger gives exact
                    per-query attribution even under interleaving.
 
-Only stdlib is imported here: ``kernels.ops`` imports this module, so it
-must never (transitively) import the kernels package.
+PR 8 adds the workload-history primitives (DESIGN.md §14):
+
+  query_fingerprint()    — canonical sha256 template key over the parsed
+                           algebra: literals and instantiated entity
+                           constants normalize to typed placeholders,
+                           variables to first-appearance indices, so the
+                           template instances of BSBM-style traffic share
+                           one key regardless of spelling.
+  CardinalityFeedback    — per-plan-node observed cardinalities keyed by
+                           the planner's stable node fingerprint. The
+                           executor records actual row counts after each
+                           drain; the planner (EngineConfig.
+                           cardinality_feedback="apply") overrides its
+                           estimates with the observed history.
+
+Only stdlib is imported here at module scope: ``kernels.ops`` imports
+this module, so it must never (transitively) import the kernels package.
+The fingerprint walkers lazily import ``repro.core.algebra`` inside the
+function bodies for the same reason.
 """
 
 from __future__ import annotations
 
 import collections
+import hashlib
 import json
 import time
 from contextlib import contextmanager
@@ -295,3 +313,263 @@ class QueryTrace:
             },
             "kernels": self.ledger.snapshot(),
         }
+
+
+# ---------------------------------------------------------------------------
+# query fingerprinting (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+# Term classification for placeholder normalization. Terms are
+# str | int | float (repro.core.dictionary.Term): quoted strings are RDF
+# literals, everything else stringy is an IRI/prefixed name.
+
+
+def _term_class(term) -> str:
+    if isinstance(term, bool) or isinstance(term, (int, float)):
+        return "<num>"
+    if isinstance(term, str) and term.startswith('"'):
+        return "<str>"
+    return "<iri>"
+
+
+def canonical_var_map(node) -> Dict[int, int]:
+    """Variable id -> canonical index by first appearance in a pre-order
+    walk of the logical algebra. Two spellings of the same template get
+    identical maps, so fingerprints (template and node) are independent
+    of parser-assigned variable ids."""
+    order: Dict[int, int] = {}
+
+    def visit(vid: int) -> None:
+        if vid not in order:
+            order[vid] = len(order)
+
+    for tok in _algebra_tokens(node, canon=None, on_var=visit):
+        pass
+    return order
+
+
+def _algebra_tokens(node, canon: Optional[Dict[int, int]], on_var=None):
+    """Token stream over the logical algebra: structure tags, canonical
+    variables, kept IRI constants in predicate position, and typed
+    placeholders for instantiated constants. ``canon=None`` emits raw var
+    ids (used while *building* the canonical map); ``on_var`` observes
+    every variable in pre-order."""
+    from repro.core import algebra as A
+
+    def var_tok(vid: int) -> str:
+        if on_var is not None:
+            on_var(vid)
+        return f"?{vid if canon is None else canon.get(vid, vid)}"
+
+    def slot_tok(sl, keep: bool) -> str:
+        if isinstance(sl, A.V):
+            return var_tok(sl.id)
+        return f"K:{sl.term}" if keep else _term_class(sl.term)
+
+    def expr_toks(e):
+        if e is None:
+            return
+        if isinstance(e, A.VarRef):
+            yield var_tok(e.var)
+        elif isinstance(e, A.Lit):
+            yield _term_class(e.value)
+        elif isinstance(e, A.Cmp):
+            yield f"cmp:{e.op}("
+            yield from expr_toks(e.lhs)
+            yield from expr_toks(e.rhs)
+            yield ")"
+        elif isinstance(e, A.Arith):
+            yield f"arith:{e.op}("
+            yield from expr_toks(e.lhs)
+            yield from expr_toks(e.rhs)
+            yield ")"
+        elif isinstance(e, (A.And, A.Or)):
+            yield ("and(" if isinstance(e, A.And) else "or(")
+            for t in e.terms:
+                yield from expr_toks(t)
+            yield ")"
+        elif isinstance(e, A.Not):
+            yield "not("
+            yield from expr_toks(e.term)
+            yield ")"
+        elif isinstance(e, A.Bound):
+            yield f"bound({var_tok(e.var)})"
+        elif isinstance(e, A.Func):
+            yield f"func:{e.name}("
+            for a in e.args:
+                yield from expr_toks(a)
+            yield ")"
+        else:
+            yield f"expr:{type(e).__name__}"
+
+    def pattern_toks(p):
+        if isinstance(p, A.PathPattern):
+            from repro.core.paths.expr import path_repr
+
+            yield "PATH("
+            yield slot_tok(p.s, keep=False)
+            yield path_repr(p.expr)
+            yield slot_tok(p.o, keep=False)
+            yield ")"
+            return
+        yield "TP("
+        yield slot_tok(p.s, keep=False)
+        # the predicate defines the template's structure; subjects and
+        # objects are the instantiated entities that vary per instance
+        yield slot_tok(p.p, keep=True)
+        yield slot_tok(p.o, keep=False)
+        if p.g is not None:
+            yield slot_tok(p.g, keep=True)
+        if p.path:
+            yield f"path:{p.path}"
+        yield ")"
+
+    def walk(n):
+        if isinstance(n, A.BGP):
+            yield "BGP("
+            for p in n.patterns:
+                yield from pattern_toks(p)
+            yield ")"
+        elif isinstance(n, A.Filter):
+            yield "FILTER("
+            yield from expr_toks(n.expr)
+            yield from walk(n.child)
+            yield ")"
+        elif isinstance(n, (A.Join, A.Minus, A.NotExists, A.Union)):
+            yield f"{type(n).__name__.upper()}("
+            yield from walk(n.left)
+            yield from walk(n.right)
+            yield ")"
+        elif isinstance(n, A.LeftJoin):
+            yield "LEFTJOIN("
+            yield from walk(n.left)
+            yield from walk(n.right)
+            yield from expr_toks(n.expr)
+            yield ")"
+        elif isinstance(n, A.Extend):
+            yield f"BIND({var_tok(n.var)}"
+            yield from expr_toks(n.expr)
+            yield from walk(n.child)
+            yield ")"
+        elif isinstance(n, A.Project):
+            yield "PROJECT("
+            for v in n.vars:
+                yield var_tok(v)
+            yield from walk(n.child)
+            yield ")"
+        elif isinstance(n, A.Distinct):
+            yield "DISTINCT("
+            yield from walk(n.child)
+            yield ")"
+        elif isinstance(n, A.GroupAgg):
+            yield "GROUP("
+            for v in n.group_vars:
+                yield var_tok(v)
+            for a in n.aggs:
+                mod = "distinct " if a.distinct else ""
+                av = var_tok(a.var) if a.var is not None else "*"
+                yield f"agg:{mod}{a.func}({av})->{var_tok(a.out)}"
+            yield from walk(n.child)
+            yield from expr_toks(n.having)
+            yield ")"
+        elif isinstance(n, A.OrderBy):
+            yield "ORDERBY("
+            for k in n.keys:
+                yield f"{var_tok(k.var)}:{'asc' if k.ascending else 'desc'}"
+            yield from walk(n.child)
+            yield ")"
+        elif isinstance(n, A.Slice):
+            yield f"SLICE({n.limit}:{n.offset}"
+            yield from walk(n.child)
+            yield ")"
+        else:
+            yield f"NODE:{type(n).__name__}"
+
+    yield from walk(node)
+
+
+def query_fingerprint(node) -> str:
+    """Canonical sha256 template key over a parsed logical plan: literals
+    and instantiated subject/object constants become typed placeholders,
+    variables become first-appearance indices, whitespace never enters.
+    Instances of one query template share a fingerprint."""
+    canon = canonical_var_map(node)
+    toks = list(_algebra_tokens(node, canon=canon))
+    return hashlib.sha256("\x1f".join(toks).encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# cardinality feedback store (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+
+class CardinalityFeedback:
+    """Observed per-plan-node cardinalities keyed by the planner's stable
+    node fingerprint (planner.annotate_fingerprints).
+
+    The executor records each operator's actual output rows after a full
+    drain; estimates decay toward recent observations through an EWMA so
+    data drift is tracked without unbounded history. ``version`` bumps on
+    every record — plan caches fold it into their key under
+    ``cardinality_feedback="apply"`` so a repeated query re-plans against
+    fresh history instead of serving the stale shape.
+
+    Lives in core (stdlib-only) because the Planner consults it; the
+    serving layer's WorkloadRepository owns and persists one."""
+
+    __slots__ = ("alpha", "max_entries", "version", "_obs")
+
+    def __init__(self, alpha: float = 0.5, max_entries: int = 4096) -> None:
+        self.alpha = alpha
+        self.max_entries = max_entries
+        self.version = 0
+        # node_fp -> [ewma_rows, n_observations]
+        self._obs: Dict[str, List[float]] = {}
+
+    def __len__(self) -> int:
+        return len(self._obs)
+
+    def record(self, node_fp: str, actual_rows: float) -> None:
+        if not node_fp:
+            return
+        e = self._obs.get(node_fp)
+        if e is None:
+            if len(self._obs) >= self.max_entries:
+                # bounded store: evict the least-observed fingerprint
+                drop = min(self._obs, key=lambda k: self._obs[k][1])
+                del self._obs[drop]
+            self._obs[node_fp] = [float(actual_rows), 1]
+        else:
+            e[0] += self.alpha * (float(actual_rows) - e[0])
+            e[1] += 1
+        self.version += 1
+
+    def lookup(self, node_fp: str) -> Optional[float]:
+        e = self._obs.get(node_fp)
+        return e[0] if e is not None else None
+
+    def observations(self, node_fp: str) -> int:
+        e = self._obs.get(node_fp)
+        return int(e[1]) if e is not None else 0
+
+    def snapshot(self) -> dict:
+        """JSON-able state: {node_fp: [ewma_rows, n]}."""
+        return {k: [round(v[0], 3), int(v[1])] for k, v in self._obs.items()}
+
+    def merge(self, state: Dict[str, List[float]]) -> None:
+        """Merge a persisted snapshot: existing entries combine by
+        observation-count-weighted average (load order must not matter
+        more than sample counts do)."""
+        for fp, (rows, n) in state.items():
+            n = max(int(n), 1)
+            e = self._obs.get(fp)
+            if e is None:
+                if len(self._obs) >= self.max_entries:
+                    drop = min(self._obs, key=lambda k: self._obs[k][1])
+                    del self._obs[drop]
+                self._obs[fp] = [float(rows), n]
+            else:
+                tot = e[1] + n
+                e[0] = (e[0] * e[1] + float(rows) * n) / tot
+                e[1] = tot
+            self.version += 1

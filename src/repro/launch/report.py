@@ -11,8 +11,17 @@ KernelLedger, and optionally the Perfetto-loadable Chrome-trace JSON
 (``--trace out.json``). The structures printed are the same ones
 benchmarks/run.py's telemetry smoke and serve.metrics consume.
 
+PR 8 adds the engine-free workload views (DESIGN.md §14): ``--metrics
+saved_registry.json`` pretty-prints a saved MetricsRegistry snapshot
+(request/latency/plan-cache/kernel/pool tables), and ``--workload-report
+workload.jsonl`` renders a saved WorkloadRepository — top fingerprints by
+total wall time, the q-error leaderboard, and the regression list. Both
+read files only; no store is built and no engine runs.
+
     PYTHONPATH=src python -m repro.launch.report --query q6 --trace q6.json
     PYTHONPATH=src python -m repro.launch.report --sparql 'SELECT ?a { ... }'
+    PYTHONPATH=src python -m repro.launch.report --metrics metrics.json
+    PYTHONPATH=src python -m repro.launch.report --workload-report wl.jsonl
 """
 
 from __future__ import annotations
@@ -160,6 +169,97 @@ def span_table(trace) -> str:
     return "\n".join(lines) if lines else "  (no spans)"
 
 
+def metrics_report(path: str) -> str:
+    """Pretty-print a saved MetricsRegistry snapshot (``registry.save()``
+    output or a server's ``metrics_snapshot()`` JSON) as fixed-width
+    tables. File-only: no engine, no store."""
+    with open(path) as f:
+        snap = json.load(f)
+    lines: List[str] = []
+    req = snap.get("requests", {})
+    lines.append(f"uptime: {snap.get('uptime_s', 0):.1f}s   "
+                 f"requests: {req.get('count', 0)}   "
+                 f"rows: {req.get('rows', 0)}   "
+                 f"errors: {req.get('errors', 0)}   "
+                 f"qps: {req.get('qps', 0)}")
+    lines.append(f"latency: mean {req.get('mean_ms', 0):.3f} ms   "
+                 f"p50 {req.get('p50_ms', 0):.3f} ms   "
+                 f"p99 {req.get('p99_ms', 0):.3f} ms")
+    pc = snap.get("plan_cache", {})
+    lines.append(f"plan cache: {pc.get('hits', 0)} hits / "
+                 f"{pc.get('misses', 0)} misses "
+                 f"(hit rate {pc.get('hit_rate', 0.0):.1%})")
+    hist = snap.get("latency_hist", {})
+    if hist.get("count"):
+        lines.append("\nlatency histogram (cumulative):")
+        for le, c in hist.get("buckets", {}).items():
+            if c:
+                lines.append(f"  le {le:>8}s {c:>8}")
+    by_backend = snap.get("kernels", {}).get("by_backend", {})
+    if by_backend:
+        wall = snap.get("kernels", {}).get("by_backend_wall_ms", {})
+        lines.append("\nkernel attribution:")
+        lines.append(f"  {'kernel/backend':<28} {'calls':>8} {'wall_ms':>10}")
+        for k, c in sorted(by_backend.items()):
+            lines.append(f"  {k:<28} {c:>8} {wall.get(k, 0.0):>10.3f}")
+    pool = snap.get("pool", {})
+    if pool:
+        lines.append("\npool events: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(pool.items())))
+    return "\n".join(lines)
+
+
+def workload_report(path: str, top_n: int = 15) -> str:
+    """Render a saved WorkloadRepository JSONL: top fingerprints by wall
+    time, the q-error leaderboard, and recent latency regressions. Loads
+    into a fresh repository (exercising the same merge path a restarted
+    server uses) — no engine runs."""
+    from repro.serve.workload_repo import WorkloadRepository
+
+    repo = WorkloadRepository()
+    n = repo.load(path)
+    lines: List[str] = [
+        f"workload repository: {n} fingerprints, "
+        f"{len(repo.feedback.snapshot())} feedback entries",
+    ]
+
+    def _ex(rec: dict) -> str:
+        ex = " ".join(str(rec.get("example", "")).split())
+        return ex[:46] + "…" if len(ex) > 47 else ex
+
+    lines.append("\ntop fingerprints by total wall time:")
+    lines.append(f"  {'fingerprint':<18} {'n':>6} {'wall_s':>9} "
+                 f"{'mean_ms':>9} {'p99_ms':>9} {'max_q':>7}  example")
+    for rec in repo.top_by_wall(top_n):
+        lines.append(
+            f"  {rec['fingerprint'][:16]:<18} {rec['n']:>6} "
+            f"{rec['wall_s']:>9.3f} {rec['mean_s'] * 1e3:>9.3f} "
+            f"{rec['p99_s'] * 1e3:>9.3f} {rec['max_q_error']:>7.2f}  "
+            f"{_ex(rec)}"
+        )
+    leaderboard = repo.qerror_leaderboard(top_n)
+    if leaderboard:
+        lines.append("\nq-error leaderboard (worst plan-node misestimate):")
+        lines.append(f"  {'fingerprint':<18} {'max_q':>8} {'n':>6}  example")
+        for rec in leaderboard:
+            lines.append(f"  {rec['fingerprint'][:16]:<18} "
+                         f"{rec['max_q_error']:>8.2f} {rec['n']:>6}  {_ex(rec)}")
+    if repo.regressions:
+        lines.append("\nlatency regressions (latest first):")
+        lines.append(f"  {'fingerprint':<18} {'latency_ms':>11} "
+                     f"{'baseline_p99_ms':>16} {'factor':>7}")
+        for rec in list(repo.regressions)[::-1]:
+            lines.append(
+                f"  {str(rec.get('fingerprint', ''))[:16]:<18} "
+                f"{rec.get('latency_s', 0.0) * 1e3:>11.3f} "
+                f"{rec.get('baseline_p99_s', 0.0) * 1e3:>16.3f} "
+                f"{rec.get('factor', 0.0):>7.2f}"
+            )
+    else:
+        lines.append("\nno latency regressions recorded")
+    return "\n".join(lines)
+
+
 def query_report(args, parser) -> int:
     """The --query/--sparql mode: one query, full telemetry surface."""
     from repro.core import Engine, EngineConfig
@@ -222,7 +322,17 @@ def main():
                     help="write the query's Chrome-trace JSON here")
     ap.add_argument("--json", action="store_true",
                     help="emit the query trace summary as JSON")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="pretty-print a saved MetricsRegistry JSON")
+    ap.add_argument("--workload-report", default=None, metavar="PATH",
+                    help="render a saved WorkloadRepository JSONL")
     args = ap.parse_args()
+    if args.metrics:
+        print(metrics_report(args.metrics))
+        return
+    if args.workload_report:
+        print(workload_report(args.workload_report))
+        return
     if args.query or args.sparql:
         raise SystemExit(query_report(args, ap))
     if args.bench:

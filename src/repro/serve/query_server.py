@@ -12,7 +12,17 @@ dispatches and pool counters are attributed to exactly one request even
 though all requests share one Engine (and its warm buffer arena). The
 per-request ledgers and pool deltas aggregate into ``self.metrics`` — a
 ``MetricsRegistry`` with sliding-window percentiles, QPS, plan-cache
-hit/miss, and JSON export.
+hit/miss, and JSON/OpenMetrics export.
+
+PR 8 threads workload history through the same path (DESIGN.md §14):
+each request is attributed to its canonical template fingerprint and
+recorded in a ``WorkloadRepository`` (latency/row histograms, kernel
+rollups, per-plan-node observed cardinalities, regression detection),
+and an optional ``FlightRecorder`` captures trace + EXPLAIN ANALYZE
+bundles for outlier requests. The engine shares the repository's
+``CardinalityFeedback`` store, so under
+``EngineConfig.cardinality_feedback="apply"`` a repeated query re-plans
+with the cardinalities its previous runs actually observed.
 """
 
 from __future__ import annotations
@@ -27,8 +37,11 @@ import numpy as np
 from repro.core import Engine, EngineConfig, QuadStore
 from repro.core import algebra as A
 from repro.core import planner as PL
+from repro.core import profiler
 from repro.core import telemetry
+from repro.serve.flight_recorder import FlightRecorder
 from repro.serve.metrics import MetricsRegistry
+from repro.serve.workload_repo import WorkloadRepository
 
 
 @dataclasses.dataclass
@@ -42,22 +55,40 @@ class RequestResult:
     kernel_wall_s: float = 0.0
     pool_delta: Dict[str, int] = dataclasses.field(default_factory=dict)
     plan_cache_hit: bool = False
+    # workload-history attribution (DESIGN.md §14)
+    fingerprint: str = ""
+    max_q_error: float = 0.0
+    regression: Optional[dict] = None
+    flight_bundle: Optional[str] = None
 
 
 class QueryServer:
-    def __init__(self, store: QuadStore, cfg: Optional[EngineConfig] = None):
+    def __init__(
+        self,
+        store: QuadStore,
+        cfg: Optional[EngineConfig] = None,
+        workload: Optional[WorkloadRepository] = None,
+        flight: Optional[FlightRecorder] = None,
+    ):
         self.store = store
-        self.engine = Engine(store, cfg or EngineConfig())
-        self._plan_cache: Dict[str, Tuple[PL.Phys, A.VarTable]] = {}
+        self.workload = workload if workload is not None else WorkloadRepository()
+        # the engine records per-plan-node actual cardinalities into the
+        # repository's feedback store; whether the planner *reads* them
+        # back is the engine's cardinality_feedback knob
+        self.engine = Engine(store, cfg or EngineConfig(),
+                             feedback=self.workload.feedback)
+        self.flight = flight
+        self._plan_cache: Dict[str, Tuple[PL.Phys, A.VarTable, str]] = {}
         self.metrics = MetricsRegistry()
 
-    def _plan_for(self, text: str) -> Tuple[PL.Phys, A.VarTable]:
+    def _plan_for(self, text: str) -> Tuple[PL.Phys, A.VarTable, str]:
         # cache key is a hash of the query text itself — the caller's
         # query_id is a reporting label only, so two different queries
         # sharing an id can never silently reuse the wrong cached plan.
         # The engine's plan fingerprint (join strategy, SIP mode, …) is
         # folded in too: swapping the engine config must not serve a plan
-        # shaped under the old knobs.
+        # shaped under the old knobs, and under feedback=apply it advances
+        # with the feedback store's version so new observations re-plan.
         key = hashlib.sha256(
             f"{self.engine.plan_fingerprint()}\n{text}".encode()
         ).hexdigest()
@@ -65,14 +96,14 @@ class QueryServer:
         self.metrics.observe_plan_cache(hit is not None)
         if hit is None:
             node, vt = self.engine.parse(text)
-            hit = (self.engine.plan(node), vt)
+            hit = (self.engine.plan(node), vt, telemetry.query_fingerprint(node))
             self._plan_cache[key] = hit
         return hit
 
     def execute(self, key: str, text: str) -> RequestResult:
         t0 = time.perf_counter()
         misses_before = self.metrics.plan_cache_misses
-        phys, vt = self._plan_for(text)
+        phys, vt, qfp = self._plan_for(text)
         res = self.engine.execute_plan(phys, vt)
         latency = time.perf_counter() - t0
         tr = res.trace
@@ -83,6 +114,29 @@ class QueryServer:
             ledger=tr.ledger if tr is not None else None,
             pool_delta=pool_delta,
         )
+        stats = profiler.collect_stats(res.root)
+        max_q = float(stats.get("max_q_error", 0.0))
+        obs = self.workload.observe(
+            qfp,
+            latency,
+            rows=res.n_rows,
+            ledger=tr.ledger if tr is not None else None,
+            max_q_error=max_q,
+            query_text=text,
+        )
+        bundle = None
+        if self.flight is not None:
+            bundle = self.flight.observe(
+                qfp,
+                latency,
+                baseline_p99_s=obs["baseline_p99_s"],
+                max_q_error=max_q,
+                trace=tr,
+                # rendered only if a trigger fires — EXPLAIN ANALYZE over
+                # the already-executed tree costs a walk, not a re-run
+                explain_fn=res.explain_analyze,
+                query_text=text,
+            )
         return RequestResult(
             key,
             res.n_rows,
@@ -92,20 +146,39 @@ class QueryServer:
             kernel_wall_s=tr.ledger.total_wall_s() if tr is not None else 0.0,
             pool_delta=pool_delta,
             plan_cache_hit=self.metrics.plan_cache_misses == misses_before,
+            fingerprint=qfp,
+            max_q_error=max_q,
+            regression=obs["regression"],
+            flight_bundle=bundle,
         )
 
     def explain_analyze(self, text: str) -> str:
         """EXPLAIN ANALYZE through the server's plan cache (counts as a
         cache touch but not as a served request in the latency window)."""
-        phys, vt = self._plan_for(text)
+        phys, vt, _qfp = self._plan_for(text)
         return self.engine.execute_plan(phys, vt).explain_analyze()
 
     def metrics_snapshot(self, window_s: float = 60.0) -> dict:
-        return self.metrics.snapshot(window_s)
+        snap = self.metrics.snapshot(window_s)
+        snap["workload"] = self.workload.snapshot()
+        # regressions at top level too: dashboards alert on this key
+        snap["regressions"] = list(self.workload.regressions)
+        if self.flight is not None:
+            snap["flight"] = self.flight.snapshot()
+        return snap
 
     def metrics_json(self, indent: Optional[int] = 2,
                      window_s: float = 60.0) -> str:
-        return self.metrics.to_json(indent=indent, window_s=window_s)
+        import json
+
+        return json.dumps(self.metrics_snapshot(window_s), indent=indent)
+
+    def openmetrics(self, window_s: float = 60.0, top_n: int = 20) -> str:
+        """OpenMetrics text exposition of the registry plus per-fingerprint
+        workload series (scrape endpoint body)."""
+        return self.metrics.to_openmetrics(
+            workload=self.workload, window_s=window_s, top_n=top_n
+        )
 
     def run_workload(
         self, requests: List[Tuple[str, str]], warmup: int = 0

@@ -444,7 +444,7 @@ def test_plan_cache_key_includes_config_fingerprint():
     server.engine = Engine(store, EngineConfig(sip="on"))
     server.execute("q", q)
     assert len(server._plan_cache) == 2
-    (k1, (p1, _)), (k2, (p2, _)) = sorted(server._plan_cache.items())
+    (k1, (p1, _, _)), (k2, (p2, _, _)) = sorted(server._plan_cache.items())
     texts = {PL.explain(p1), PL.explain(p2)}
     assert any("SipFilter(" in t for t in texts)
     assert any("SipFilter(" not in t for t in texts)

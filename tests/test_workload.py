@@ -1,0 +1,458 @@
+"""Workload-history observability (DESIGN.md §14): canonical query
+fingerprinting, plan-node fingerprints and the cardinality feedback
+store, the end-to-end feedback loop (repeated query loses its MISEST
+flags under ``cardinality_feedback="apply"``), the workload repository's
+histograms/persistence/regression detection, the flight recorder's
+triggers, the OpenMetrics exposition + validator, and the sliding-window
+edge cases the exporter depends on."""
+
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import Engine, EngineConfig, QuadStore, telemetry
+from repro.core.profiler import collect_stats
+from repro.core.telemetry import CardinalityFeedback, query_fingerprint
+from repro.serve.flight_recorder import FlightRecorder
+from repro.serve.metrics import (
+    LatencyHistogram,
+    MetricsRegistry,
+    SlidingWindow,
+    validate_openmetrics,
+)
+from repro.serve.workload_repo import WorkloadRepository
+
+
+def _chain_store(n=120):
+    store = QuadStore()
+    for i in range(n):
+        store.add(f":p{i}", ":knows", f":p{(i * 7 + 1) % n}")
+        store.add(f":p{i}", ":age", 20 + i % 30)
+        store.add(f":p{i}", ":interest", f":tag{i % 5}")
+    return store.build()
+
+
+def _parse(text):
+    store = _chain_store(12)
+    return Engine(store).parse(text)[0]
+
+
+# ---------------------------------------------------------------------------
+# template fingerprinting
+# ---------------------------------------------------------------------------
+
+
+def test_query_fingerprint_canonicalizes_vars_and_literals():
+    base = query_fingerprint(
+        _parse("SELECT ?a { ?a :age ?x . FILTER(?x > 25) }"))
+    # different variable names, whitespace, and literal values: same shape
+    assert base == query_fingerprint(
+        _parse("SELECT  ?person  { ?person :age ?n .  FILTER( ?n > 42 ) }"))
+    # different predicate: different shape
+    assert base != query_fingerprint(
+        _parse("SELECT ?a { ?a :knows ?x . FILTER(?x > 25) }"))
+    # different structure (no filter): different shape
+    assert base != query_fingerprint(_parse("SELECT ?a { ?a :age ?x }"))
+
+
+def test_query_fingerprint_distinguishes_join_shapes():
+    one_hop = query_fingerprint(_parse("SELECT ?a ?b { ?a :knows ?b }"))
+    two_hop = query_fingerprint(
+        _parse("SELECT ?a ?c { ?a :knows ?b . ?b :knows ?c }"))
+    assert one_hop != two_hop
+
+
+# ---------------------------------------------------------------------------
+# plan-node fingerprints + cardinality feedback store
+# ---------------------------------------------------------------------------
+
+
+def test_node_fingerprints_annotated_and_stable():
+    store = _chain_store(30)
+    eng = Engine(store)
+    node, _vt = eng.parse("SELECT ?a ?b { ?a :knows ?b . ?b :age ?x }")
+    p1 = eng.plan(node)
+    node2, _ = eng.parse("SELECT ?a ?b { ?a :knows ?b . ?b :age ?x }")
+    p2 = eng.plan(node2)
+
+    def fps(n, acc):
+        acc.add(n.fp)
+        for fld in ("child", "left", "right", "probe", "build"):
+            c = getattr(n, fld, None)
+            if hasattr(c, "fp"):
+                fps(c, acc)
+        return acc
+
+    s1, s2 = fps(p1, set()), fps(p2, set())
+    assert s1 == s2 and all(s1)  # same query -> same node fingerprints
+
+
+def test_cardinality_feedback_ewma_merge_eviction():
+    fb = CardinalityFeedback(alpha=0.5, max_entries=3)
+    fb.record("a", 100.0)
+    assert fb.lookup("a") == 100.0
+    fb.record("a", 200.0)  # EWMA: 0.5*200 + 0.5*100
+    assert fb.lookup("a") == pytest.approx(150.0)
+    assert fb.observations("a") == 2
+    assert fb.lookup("missing") is None
+
+    v0 = fb.version
+    fb.record("b", 10.0)
+    fb.record("c", 20.0)
+    fb.record("d", 30.0)  # over capacity: least-observed entry evicted
+    assert fb.version > v0
+    assert len(fb) == 3
+    assert fb.lookup("a") is not None  # most-observed survives
+
+    other = CardinalityFeedback()
+    other.merge(fb.snapshot())
+    assert other.lookup("a") == fb.lookup("a")
+    # count-weighted merge: 2 obs at 150 + 1 obs at 300 -> 200
+    third = CardinalityFeedback()
+    third.record("a", 300.0)
+    third.merge({"a": [150.0, 2]})
+    assert third.lookup("a") == pytest.approx(200.0)
+    assert third.observations("a") == 3
+
+
+# ---------------------------------------------------------------------------
+# end-to-end feedback loop
+# ---------------------------------------------------------------------------
+
+
+def _misest_query():
+    # chain join + filter: enough structure for the independence
+    # assumption to misestimate on the cyclic chain store
+    return ("SELECT ?a ?c { ?a :knows ?b . ?b :knows ?c . ?c :age ?x . "
+            "FILTER(?x > 25) }")
+
+
+def test_feedback_apply_overrides_estimates_and_shows_source():
+    store = _chain_store()
+    eng = Engine(store, EngineConfig(engine="barq",
+                                     cardinality_feedback="apply"))
+    q = _misest_query()
+    r1 = eng.execute(q)
+    q1 = collect_stats(r1.root).get("max_q_error", 1.0)
+    # second run re-plans with observed per-node cardinalities
+    r2 = eng.execute(q)
+    q2 = collect_stats(r2.root).get("max_q_error", 1.0)
+    assert r2.n_rows == r1.n_rows
+    assert q2 <= max(2.0, q1)  # never worse, and converged
+    assert q2 <= 2.0
+    assert "MISEST" not in r2.explain_analyze()
+    assert "(source=feedback)" in eng.explain(q)
+    assert "(source=feedback)" in r2.explain_analyze()
+
+
+def test_feedback_off_is_byte_identical_and_observe_changes_nothing():
+    store = _chain_store()
+    q = _misest_query()
+    default = Engine(store, EngineConfig(engine="barq"))
+    off = Engine(store, EngineConfig(engine="barq",
+                                     cardinality_feedback="off"))
+    obs = Engine(store, EngineConfig(engine="barq",
+                                     cardinality_feedback="observe"))
+    assert off.explain(q) == default.explain(q)
+    obs.execute(q)
+    # observe records but never reads: plans stay identical after runs
+    assert obs.explain(q) == default.explain(q)
+    assert len(obs.feedback) > 0  # ...but the store did fill
+    assert off.feedback is None
+
+
+def test_feedback_version_advances_plan_fingerprint_only_in_apply():
+    store = _chain_store()
+    q = _misest_query()
+    ap = Engine(store, EngineConfig(engine="barq",
+                                    cardinality_feedback="apply"))
+    fp0 = ap.plan_fingerprint()
+    ap.execute(q)
+    assert ap.plan_fingerprint() != fp0  # new observations -> new plans
+
+    obs = Engine(store, EngineConfig(engine="barq",
+                                     cardinality_feedback="observe"))
+    fp0 = obs.plan_fingerprint()
+    obs.execute(q)
+    assert obs.plan_fingerprint() == fp0  # observe never re-plans
+
+
+# ---------------------------------------------------------------------------
+# workload repository
+# ---------------------------------------------------------------------------
+
+
+def test_repository_accumulates_and_persists(tmp_path):
+    repo = WorkloadRepository()
+    led = telemetry.KernelLedger()
+    led.record("join_expand", "numpy", 0.002)
+    for i in range(5):
+        repo.observe("fp1", 0.010 + i * 1e-4, rows=100, ledger=led,
+                     max_q_error=3.0, query_text="SELECT ...")
+    repo.observe("fp2", 0.5, rows=1, max_q_error=40.0)
+    st = repo.get("fp1")
+    assert st.n == 5 and st.rows == 500
+    assert st.kernel_counts["join_expand"] == 5
+    assert st.max_q_error == 3.0
+    assert repo.qerror_leaderboard(5)[0]["fingerprint"] == "fp2"
+    assert repo.top_by_wall(1)[0]["fingerprint"] == "fp2"  # 0.5s dominates
+
+    path = str(tmp_path / "wl.jsonl")
+    repo.feedback.record("node-a", 123.0)
+    assert repo.save(path) == 2
+    fresh = WorkloadRepository()
+    assert fresh.load(path) == 2
+    assert fresh.get("fp1").n == 5
+    assert fresh.get("fp1").latency_hist == repo.get("fp1").latency_hist
+    assert fresh.feedback.lookup("node-a") == 123.0
+    # loading twice merges additively
+    fresh.load(path)
+    assert fresh.get("fp1").n == 10
+
+
+def test_repository_eviction_and_bound():
+    repo = WorkloadRepository(max_fingerprints=4)
+    for i in range(10):
+        repo.observe(f"fp{i}", 0.001, ts=float(i))
+    assert len(repo) == 4
+    assert repo.n_evicted == 6
+    assert repo.get("fp9") is not None  # most recent survives
+    assert repo.get("fp0") is None
+
+
+def test_repository_regression_detection():
+    repo = WorkloadRepository(regression_factor=2.0)
+    for i in range(20):
+        out = repo.observe("fp", 0.010, ts=float(i))
+        assert out["regression"] is None  # steady state: no alarms
+    out = repo.observe("fp", 0.100, ts=30.0)  # 10x the established p99
+    assert out["regression"] is not None
+    assert out["regression"]["factor"] >= 2.0
+    assert repo.regressions[-1]["fingerprint"] == "fp"
+    # a cold fingerprint can't regress: no baseline yet
+    out = repo.observe("cold-fp", 9.9)
+    assert out["regression"] is None
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+
+
+def test_flight_recorder_q_error_trigger(tmp_path):
+    fr = FlightRecorder(out_dir=str(tmp_path / "flight"),
+                        q_error_threshold=16.0)
+    tr = telemetry.QueryTrace("t")
+    bundle = fr.observe("fp", 0.01, max_q_error=100.0, trace=tr,
+                        explain_fn=lambda: "EXPLAIN TEXT",
+                        query_text="SELECT ...")
+    assert bundle is not None
+    assert sorted(os.listdir(bundle)) == ["explain.txt", "meta.json",
+                                          "trace.json"]
+    with open(os.path.join(bundle, "meta.json")) as f:
+        meta = json.load(f)
+    assert meta["reasons"] == ["q_error"]
+    assert meta["query"] == "SELECT ..."
+    with open(os.path.join(bundle, "explain.txt")) as f:
+        assert "EXPLAIN TEXT" in f.read()
+    # under threshold: ring only, no bundle
+    assert fr.observe("fp", 0.01, max_q_error=2.0) is None
+    assert fr.n_captures == 1
+
+
+def test_flight_recorder_latency_trigger_and_bounds(tmp_path):
+    fr = FlightRecorder(out_dir=str(tmp_path / "flight"),
+                        latency_factor=3.0, ring_size=4, max_captures=2)
+    # no baseline -> no latency trigger however slow
+    assert fr.observe("fp", 10.0, baseline_p99_s=0.0) is None
+    assert fr.observe("fp", 0.5, baseline_p99_s=0.01) is not None
+    assert fr.observe("fp", 0.5, baseline_p99_s=0.01) is not None
+    # capture budget exhausted: still ringing, no more disk
+    assert fr.observe("fp", 0.5, baseline_p99_s=0.01) is None
+    assert fr.n_captures == 2
+    for _ in range(10):
+        fr.observe("fp", 0.001)
+    assert len(fr.ring) == 4  # bounded ring
+    assert fr.snapshot()["observed"] == 14
+    assert all("trace" not in e for e in fr.snapshot()["ring"])
+
+
+# ---------------------------------------------------------------------------
+# server end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_server_feedback_loop_and_workload_surface(tmp_path):
+    from repro.serve.query_server import QueryServer
+
+    store = _chain_store()
+    fr = FlightRecorder(out_dir=str(tmp_path / "flight"),
+                        q_error_threshold=4.0)
+    srv = QueryServer(
+        store,
+        EngineConfig(engine="barq", cardinality_feedback="apply"),
+        flight=fr,
+    )
+    q = _misest_query()
+    r1 = srv.execute("q", q)
+    r2 = srv.execute("q", q)
+    assert r1.fingerprint == r2.fingerprint != ""
+    assert r2.n_rows == r1.n_rows
+    assert r2.max_q_error <= 2.0  # repeat re-planned from feedback
+    if r1.max_q_error >= 4.0:
+        assert r1.flight_bundle is not None  # cold misestimate captured
+
+    snap = srv.metrics_snapshot()
+    assert snap["workload"]["fingerprints"] == 1
+    assert snap["workload"]["top_by_wall"][0]["n"] == 2
+    assert snap["workload"]["feedback_entries"] > 0
+    assert "regressions" in snap
+    assert snap["flight"]["observed"] == 2
+
+    exposition = srv.openmetrics()
+    fams = validate_openmetrics(exposition)
+    assert "barq_fingerprint_requests" in fams
+    assert f'fingerprint="{r1.fingerprint}"' in exposition
+
+
+def test_server_observe_mode_keeps_plan_cache_hot():
+    from repro.serve.query_server import QueryServer
+
+    store = _chain_store()
+    srv = QueryServer(store, EngineConfig(
+        engine="barq", cardinality_feedback="observe"))
+    q = _misest_query()
+    srv.execute("q", q)
+    r2 = srv.execute("q", q)
+    assert r2.plan_cache_hit  # observe never invalidates cached plans
+
+
+# ---------------------------------------------------------------------------
+# metrics edge cases + exposition validation
+# ---------------------------------------------------------------------------
+
+
+def test_sliding_window_empty_and_single_sample():
+    w = SlidingWindow()
+    assert w.percentile(50) == 0.0
+    assert w.mean() == 0.0
+    assert w.rate() == 0.0
+    w.add(0.01, ts=100.0)
+    assert w.percentile(99) == 0.01
+    assert w.rate(window_s=60, now=100.0) == 0.0  # one sample: no rate
+    assert w.percentile(-5) == w.percentile(200) == 0.01  # clamped
+
+
+def test_metrics_registry_empty_snapshot_schema():
+    snap = MetricsRegistry().snapshot()
+    # pinned key schema: exporters and the report tool key into these
+    assert set(snap) == {"uptime_s", "requests", "plan_cache", "kernels",
+                         "pool", "latency_hist"}
+    assert set(snap["requests"]) == {"count", "rows", "errors", "qps",
+                                     "mean_ms", "p50_ms", "p99_ms"}
+    assert set(snap["plan_cache"]) == {"hits", "misses", "hit_rate"}
+    assert set(snap["latency_hist"]) == {"buckets", "sum", "count"}
+    # zero-traffic server: all-zero, never NaN/ZeroDivisionError
+    assert snap["requests"]["qps"] == 0.0
+    assert snap["requests"]["p99_ms"] == 0.0
+    assert snap["plan_cache"]["hit_rate"] == 0.0
+    json.dumps(snap)
+
+
+def test_latency_histogram_buckets_and_merge():
+    h = LatencyHistogram()
+    h.observe(0.0004)
+    h.observe(0.003)
+    h.observe(99.0)  # beyond last bound -> +Inf bucket
+    cum = dict(h.cumulative())
+    assert cum["0.0005"] == 1 and cum["0.005"] == 2 and cum["+Inf"] == 3
+    other = LatencyHistogram()
+    other.merge_snapshot(h.snapshot())
+    other.merge_snapshot(h.snapshot())
+    assert other.count == 6
+    assert dict(other.cumulative())["+Inf"] == 6
+    assert other.sum == pytest.approx(2 * h.sum)
+
+
+def test_validate_openmetrics_catches_tampering():
+    reg = MetricsRegistry()
+    reg.observe_request(0.01, n_rows=3)
+    text = reg.to_openmetrics()
+    assert "barq_requests" in validate_openmetrics(text)
+    for tamper, msg in [
+        (text.replace("# EOF\n", ""), "EOF"),
+        (text.replace("barq_requests_total", "barq_requests"), "_total"),
+        ("barq_orphan 1\n# EOF\n", "TYPE"),
+        (text + "# EOF\n", "exactly once"),
+        (text.replace("\nbarq_qps ", "\nbarq_qps_total "), "suffixed"),
+    ]:
+        with pytest.raises(ValueError, match=msg):
+            validate_openmetrics(tamper)
+    # histogram cumulativity: shrink a later bucket below an earlier one
+    broken = text.replace('le="+Inf"} ', 'le="+Inf"} -')
+    with pytest.raises(ValueError):
+        validate_openmetrics(broken)
+
+
+# ---------------------------------------------------------------------------
+# threaded trace isolation (contextvar scoping)
+# ---------------------------------------------------------------------------
+
+
+def test_trace_query_threads_do_not_leak_dispatches():
+    """Two threads tracing concurrently must each see only their own
+    kernel dispatches — the active trace is a contextvar, not a global."""
+    results = {}
+    barrier = threading.Barrier(2)
+
+    def worker(name, n_dispatches):
+        tr = telemetry.QueryTrace(name)
+        barrier.wait()
+        with telemetry.trace_query(trace=tr):
+            for _ in range(n_dispatches):
+                telemetry.record_dispatch(f"k_{name}", "numpy",
+                                          time.perf_counter(), 1e-6)
+                time.sleep(0.001)
+        results[name] = tr.ledger
+
+    t1 = threading.Thread(target=worker, args=("alpha", 7))
+    t2 = threading.Thread(target=worker, args=("beta", 11))
+    t1.start(); t2.start(); t1.join(); t2.join()
+
+    assert dict(results["alpha"].counts) == {"k_alpha": 7}
+    assert dict(results["beta"].counts) == {"k_beta": 11}
+
+
+# ---------------------------------------------------------------------------
+# report tooling
+# ---------------------------------------------------------------------------
+
+
+def test_report_metrics_and_workload_tables(tmp_path):
+    from repro.launch.report import metrics_report, workload_report
+
+    reg = MetricsRegistry()
+    led = telemetry.KernelLedger()
+    led.record("gather_emit", "numpy", 0.001)
+    reg.observe_request(0.01, n_rows=5, ledger=led,
+                        pool_delta={"allocations": 2})
+    reg.observe_plan_cache(True)
+    mpath = str(tmp_path / "metrics.json")
+    reg.save(mpath)
+    out = metrics_report(mpath)
+    assert "requests: 1" in out and "gather_emit/numpy" in out
+
+    repo = WorkloadRepository()
+    for i in range(20):
+        repo.observe("fp-slow", 0.02, rows=10, max_q_error=8.0,
+                     query_text="SELECT ?a { ?a :p ?b }", ts=float(i))
+    repo.observe("fp-slow", 0.2, ts=30.0)  # triggers a regression
+    wpath = str(tmp_path / "wl.jsonl")
+    repo.save(wpath)
+    out = workload_report(wpath)
+    assert "fp-slow" in out
+    assert "q-error leaderboard" in out
+    assert "latency regressions" in out
