@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test smoke bench regression
+.PHONY: check test smoke bench regression stress
 
 # tier-1 gate: full test suite + the operator microbenchmark suite as an
 # allocation/perf smoke test (see DESIGN.md §6) + the cross-PR benchmark
@@ -33,3 +33,12 @@ regression:
 
 bench:
 	$(PYTHON) -m benchmarks.run --json bench_results.json
+
+# low-memory stress gate (DESIGN.md §15): grace join under 10% of build
+# bytes, a skewed build that must recursively re-partition, and an
+# end-to-end engine query under EngineConfig.memory_budget — parity,
+# spill counters > 0, and empty-spill-dir lifecycle asserted; the
+# per-scenario spill statistics land in artifacts/ for CI to upload
+stress:
+	mkdir -p artifacts
+	$(PYTHON) -m benchmarks.spill_stress --json artifacts/spill_stress.json

@@ -7,6 +7,9 @@ rows in ~10% of query time; here we measure emission throughput directly."""
 from __future__ import annotations
 
 import argparse
+import os
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -205,6 +208,164 @@ def bench_hash_vs_sort_merge(rng, n=200_000, multi_key=False, reps=3,
             n_chk += 1
     assert got == row_out, "hash join != legacy row engine"
     return (out_h, dt_h), (out_m, dt_m), (n_chk, dt_r, oracle_n)
+
+
+def bench_grace_hash_join(rng, n=200_000, reps=3, oracle_n=None):
+    """The §15 out-of-core acceptance workload: the same unsorted 200k-row
+    high-cardinality join as ``hash_join_batch``, but the grace run gets a
+    memory budget of 25% of the build relation's bytes — both inputs fan
+    out to disk-backed partitions, the build loads one partition at a time,
+    and everything non-resident spills.  ``resident`` is the pre-PR
+    behavior (whole build hash-resident, ``memory_budget=None``) on the
+    identical data.  Asserted inside: resident/grace multiset parity,
+    exact parity vs the legacy row engine on an ``oracle_n`` slice,
+    spill counters > 0, and an empty spill dir afterwards (the take-frees-
+    eagerly file lifecycle)."""
+    from repro.core.legacy.operators import RowHashJoin
+    from repro.core.operators.base import close_tree
+    from repro.core.operators.hash_join import HashJoin
+
+    lv, rv, keys = (0, 1), (0, 2), (0,)
+    l = np.stack([rng.permutation(n) % (n // 2),
+                  rng.randint(0, 1000, n)]).astype(np.int32)
+    r = np.stack([rng.permutation(n) % (n // 2),
+                  rng.randint(0, 1000, n)]).astype(np.int32)
+    budget = max(int(r.nbytes) // 4, 4096)
+    spill_dir = tempfile.mkdtemp(prefix="barq-bench-grace-")
+    last: dict = {}
+
+    def make_resident():
+        pool = BatchPool()
+        return HashJoin(
+            MaterializedSource(lv, l, None, 4096, pool=pool),
+            MaterializedSource(rv, r, None, 4096, pool=pool),
+            keys, pool=pool,
+        )
+
+    def make_grace():
+        pool = BatchPool()
+        j = HashJoin(
+            MaterializedSource(lv, l, None, 4096, pool=pool),
+            MaterializedSource(rv, r, None, 4096, pool=pool),
+            keys, pool=pool, grace=True,
+            memory_budget=budget, spill_dir=spill_dir,
+        )
+        last["op"] = j
+        return j
+
+    try:
+        out_res, dt_res = _drain_timed(make_resident, reps)
+        out_g, dt_g = _drain_timed(make_grace, reps)
+        assert out_g == out_res, (out_g, out_res)
+        extra = dict(last["op"].stats.extra)
+        close_tree(last["op"])
+        assert extra.get("spill_files", 0) > 0, extra
+        assert extra.get("spill_bytes", 0) > 0, extra
+        leftovers = os.listdir(spill_dir)
+        assert not leftovers, f"grace join leaked spill files: {leftovers}"
+    finally:
+        shutil.rmtree(spill_dir, ignore_errors=True)
+
+    # legacy row-engine oracle on a slice: exact multiset parity through
+    # the full partition/spill/reload path (§15 acceptance)
+    oracle_n = n if oracle_n is None else min(oracle_n, n)
+    lo, ro = l[:, :oracle_n], r[:, :oracle_n]
+    o_budget = max(int(ro.nbytes) // 4, 2048)
+    o_dir = tempfile.mkdtemp(prefix="barq-bench-grace-oracle-")
+    try:
+        t0 = time.perf_counter()
+        j = RowHashJoin(
+            BatchToRow(MaterializedSource(lv, lo, None, 4096)),
+            BatchToRow(MaterializedSource(rv, ro, None, 4096)),
+            keys,
+        )
+        out_vars = tuple(dict.fromkeys(lv + rv))
+        row_out: dict = {}
+        while True:
+            rrow = j.next_row()
+            if rrow is None:
+                break
+            key = tuple(rrow[v] for v in out_vars)
+            row_out[key] = row_out.get(key, 0) + 1
+        dt_oracle = time.perf_counter() - t0
+
+        chk = HashJoin(
+            MaterializedSource(lv, lo, None, 4096),
+            MaterializedSource(rv, ro, None, 4096),
+            keys, grace=True, memory_budget=o_budget, spill_dir=o_dir,
+        )
+        got: dict = {}
+        while True:
+            b = chk.next_batch()
+            if b is None:
+                break
+            for rrow in b.compact().to_rows_array().tolist():
+                key = tuple(rrow)
+                got[key] = got.get(key, 0) + 1
+        close_tree(chk)
+        assert got == row_out, "grace hash join != legacy row engine"
+    finally:
+        shutil.rmtree(o_dir, ignore_errors=True)
+    return (out_res, dt_res), (out_g, dt_g), extra, (oracle_n, dt_oracle)
+
+
+def bench_partitioned_groupby(rng, n=200_000, n_keys=20_000, reps=3):
+    """Partitioned GROUP BY (§15) vs the resident SortGroupBy it falls back
+    from: same unsorted two-key aggregation workload, the partitioned run
+    under a budget of ~10% of the grouped columns' bytes.  Group outputs
+    are asserted equal as sorted multisets (each group lands in exactly
+    one partition, so per-partition aggregation is exact, not a merge of
+    partials) and the partitioned run must actually spill."""
+    from repro.core.operators.aggregate import PartitionedGroupBy
+    from repro.core.operators.base import close_tree
+
+    d, keys, k2, vals = _agg_workload(rng, n, n_keys)
+    perm = rng.permutation(n)  # unsorted: the shape the fallback pays for
+    cols = np.stack([keys[perm], k2[perm], vals[perm]])
+    budget = max(int(cols.nbytes) // 10, 4096)
+    spill_dir = tempfile.mkdtemp(prefix="barq-bench-pgroup-")
+    pool = BatchPool()
+    last: dict = {}
+
+    def make_resident():
+        src = MaterializedSource((0, 2, 1), cols, None, 4096)
+        return SortGroupBy(src, (0, 2), _AGG_SPECS, d, pool=pool)
+
+    def make_partitioned():
+        src = MaterializedSource((0, 2, 1), cols, None, 4096)
+        g = PartitionedGroupBy(
+            src, (0, 2), _AGG_SPECS, d, 4096, pool=pool,
+            memory_budget=budget, spill_dir=spill_dir, n_parts=16,
+        )
+        last["op"] = g
+        return g
+
+    def rows_of(make):
+        out = []
+        op = make()
+        while True:
+            b = op.next_batch()
+            if b is None:
+                break
+            c = b.compact()
+            out.extend(map(tuple, c.to_rows_array().tolist()))
+            c.release()
+        close_tree(op)
+        return sorted(out)
+
+    try:
+        out_res, dt_res = _drain_timed(make_resident, reps)
+        out_p, dt_p = _drain_timed(make_partitioned, reps)
+        extra = dict(last["op"].stats.extra)
+        assert out_p == out_res, (out_p, out_res)
+        assert extra.get("spill_files", 0) > 0, extra
+        assert rows_of(make_partitioned) == rows_of(make_resident), (
+            "partitioned group-by != resident SortGroupBy")
+        leftovers = os.listdir(spill_dir)
+        assert not leftovers, f"partitioned group-by leaked: {leftovers}"
+    finally:
+        shutil.rmtree(spill_dir, ignore_errors=True)
+    return (out_res, dt_res), (out_p, dt_p), extra
 
 
 def bench_telemetry_overhead(rng, n=200_000, reps=5):
@@ -724,6 +885,49 @@ def run(seed: int = 0, fast: bool = False) -> str:
               f"Mtps={(o_r + o_r2) / 1e6 / (t_r + t_r2):.3f}")
     if not fast:
         assert speedup >= 5.0, f"acceptance: hash vs sort+merge {speedup:.1f}x < 5x"
+
+    # out-of-core suite (DESIGN.md §15): grace hash join under a budget of
+    # 25% of the build bytes vs the resident build on identical data, and
+    # partitioned GROUP BY at ~10% of the grouped columns vs SortGroupBy.
+    # Parity (incl. the legacy row oracle for the join), spill counters > 0,
+    # and empty-spill-dir lifecycle are asserted inside both benches. The
+    # *_resident rows are the pre-PR paths re-measured on this box — the
+    # regression gate pairs them against the 'before' section so the budget
+    # gating added to HashJoin/SortGroupBy shows up if it taxes them. Both
+    # benches get dedicated rng streams (not the shared cursor) so a paired
+    # baseline can regenerate the byte-identical workload in isolation.
+    (o_gres, t_gres), (o_g, t_g), gex, (n_go, t_go) = bench_grace_hash_join(
+        np.random.RandomState(seed + 915), n=n_hj,
+        oracle_n=5_000 if fast else 20_000)
+    suite.add("grace_hash_join_resident", t_gres * 1e6,
+              f"tuples_out={o_gres};Mtps={o_gres / t_gres / 1e6:.1f};"
+              f"memory_budget=None")
+    suite.add("grace_hash_join_batch", t_g * 1e6,
+              f"tuples_out={o_g};Mtps={o_g / t_g / 1e6:.1f};"
+              f"spilled_mb={gex.get('spill_bytes', 0) / 1e6:.1f};"
+              f"spill_files={gex.get('spill_files', 0)};"
+              f"parts={gex.get('grace_partitions', 0)};"
+              f"slowdown_vs_resident={t_g / t_gres:.2f}x")
+    suite.add("grace_hash_join_row_oracle", t_go * 1e6,
+              f"rows={n_go};legacy row engine, exact multiset parity vs "
+              f"the spilling grace path asserted")
+    (o_gbres, t_gbres), (o_gb, t_gb), gbex = bench_partitioned_groupby(
+        np.random.RandomState(seed + 916), n=n_hj, n_keys=n_hj // 10)
+    suite.add("partitioned_groupby_resident", t_gbres * 1e6,
+              f"groups={o_gbres};Mtps={o_gbres / t_gbres / 1e6:.2f};"
+              f"single-argsort SortGroupBy, memory_budget=None")
+    suite.add("partitioned_groupby_batch", t_gb * 1e6,
+              f"groups={o_gb};"
+              f"spilled_mb={gbex.get('spill_bytes', 0) / 1e6:.1f};"
+              f"spill_files={gbex.get('spill_files', 0)};"
+              f"slowdown_vs_resident={t_gb / t_gbres:.2f}x")
+    if not fast:
+        # acceptance: out-of-core execution pays I/O, not blowup — the
+        # grace join stays within 8x of the fully-resident build even
+        # with the build side 4x over budget
+        grace_slowdown = t_g / t_gres
+        assert grace_slowdown < 8.0, (
+            f"acceptance: grace join {grace_slowdown:.1f}x >= 8x resident")
 
     # telemetry-overhead suite (DESIGN.md §13): same hash-join workload,
     # traced vs untraced drain. Acceptance: <5% on the full-size run

@@ -31,12 +31,14 @@ from repro.core.dictionary import Dictionary
 from repro.core.legacy import operators as LOP
 from repro.core.operators.adapters import BatchToRow, RowToBatch
 from repro.core.operators.aggregate import (
+    PartitionedDistinct,
+    PartitionedGroupBy,
     SortDistinct,
     SortGroupBy,
     StreamingDistinct,
     StreamingGroupBy,
 )
-from repro.core.operators.base import BatchOperator
+from repro.core.operators.base import BatchOperator, close_tree
 from repro.core.operators.cross import CrossJoin
 from repro.core.operators.lookup_join import LookupJoin
 from repro.core.operators.merge_join import MergeJoin
@@ -101,6 +103,16 @@ class EngineConfig:
     # plans, "apply" = planner overrides estimates with observed history
     # (repeated misestimated queries re-plan with real cardinalities)
     cardinality_feedback: str = "off"
+    # out-of-core execution (DESIGN.md §15): bytes of operator state a
+    # pipeline breaker may keep resident. None = unlimited (pre-§15
+    # behavior, plans byte-identical); set it and hash joins over budget
+    # go grace (partition + spill to spill_dir), group-by/distinct run
+    # partitioned.
+    memory_budget: Optional[int] = None
+    # mid-plan re-strategy (DESIGN.md §15): "on" defers order-insensitive
+    # merge joins' sort-vs-hash choice to runtime (post-drain misestimate
+    # check); "off" keeps the planner's static pick
+    adaptive_join: str = "off"
 
 
 class Translator:
@@ -201,6 +213,33 @@ class Translator:
                 self._to_batch(child), n.var, self.cfg.max_batch, pool=self.pool
             )
         if isinstance(n, PL.PMergeJoin):
+            if (
+                self.cfg.adaptive_join == "on"
+                and n.adaptive_ok
+                and not n.sip_exports
+                and isinstance(n.right, PL.PSort)
+                and n.right.var == n.var
+            ):
+                # mid-plan re-strategy (DESIGN.md §15): the planned Sort is
+                # a pipeline breaker, so defer sort-vs-hash until the build
+                # input's true cardinality is known. Only sound when no
+                # ancestor consumes this join's order (adaptive_ok) and no
+                # SIP export hangs off the build window.
+                from repro.core.operators.adaptive_join import AdaptiveMergeJoin
+
+                return AdaptiveMergeJoin(
+                    self._to_batch(self._build(n.left)),
+                    self._to_batch(self._build(n.right.child)),
+                    n.var,
+                    mode=n.mode,
+                    post_filter=n.post_filter,
+                    dictionary=self.store.dict,
+                    post_program=n.post_program,
+                    pool=self.pool,
+                    spill_dir=self.cfg.spill_dir,
+                    est_build=getattr(n.right, "est_rows", 0.0) or 0.0,
+                    memory_budget=self.cfg.memory_budget,
+                )
             left = self._to_batch(self._build(n.left))
             right = self._to_batch(self._build(n.right))
             # SIP export (DESIGN.md §12): the build window summarizes as a
@@ -242,6 +281,10 @@ class Translator:
                 sizer=self._join_sizer(),
                 pool=self.pool,
                 post_program=n.post_program,
+                memory_budget=self.cfg.memory_budget,
+                spill_dir=self.cfg.spill_dir,
+                grace=True if n.grace else None,
+                grace_parts=n.grace_parts,
             )
             # SIP export: reuse the materialized build layout as bloom keys
             for ann in n.sip_exports:
@@ -278,6 +321,13 @@ class Translator:
             bchild = self._to_batch(child)
             if n.streaming_var is not None and bchild.sorted_by() == n.streaming_var:
                 return StreamingDistinct(bchild, n.streaming_var)
+            if n.grace:
+                return PartitionedDistinct(
+                    bchild, self.cfg.max_batch, pool=self.pool,
+                    memory_budget=self.cfg.memory_budget,
+                    spill_dir=self.cfg.spill_dir,
+                    n_parts=n.grace_parts or 16,
+                )
             return SortDistinct(bchild, self.cfg.max_batch)
         if isinstance(n, PL.PGroup):
             child = self._build(n.child)
@@ -293,6 +343,14 @@ class Translator:
                         bchild, gv, n.aggs, self.store.dict,
                         self.cfg.max_batch, pool=self.pool,
                     )
+            if n.grace and n.group_vars:
+                return PartitionedGroupBy(
+                    bchild, n.group_vars, n.aggs, self.store.dict,
+                    self.cfg.max_batch, pool=self.pool,
+                    memory_budget=self.cfg.memory_budget,
+                    spill_dir=self.cfg.spill_dir,
+                    n_parts=n.grace_parts or 16,
+                )
             return SortGroupBy(
                 bchild, n.group_vars, n.aggs, self.store.dict,
                 self.cfg.max_batch, pool=self.pool,
@@ -590,6 +648,7 @@ class Engine:
                 feedback if feedback is not None
                 else telemetry.CardinalityFeedback()
             )
+        assert (self.cfg.adaptive_join or "off") in ("off", "on")
         self.planner = PL.Planner(
             self.stats,
             barq_enabled=self.cfg.engine != "legacy",
@@ -597,6 +656,8 @@ class Engine:
             join_strategy=self.cfg.join_strategy,
             sip=self.cfg.sip,
             feedback=self.feedback if mode == "apply" else None,
+            memory_budget=self.cfg.memory_budget,
+            adaptive_join=self.cfg.adaptive_join,
         )
         # Engine-owned warm arena (DESIGN.md §2.3/§13): shared across this
         # Engine's queries so repeated traffic skips cold-start allocations.
@@ -614,7 +675,10 @@ class Engine:
         ``cardinality_feedback="apply"`` the feedback store's version is
         folded in too: new observations must invalidate cached plans, or
         a repeated query would never re-plan against its history."""
-        base = f"{self.cfg.engine}|{self.cfg.join_strategy}|{self.cfg.sip}"
+        base = (
+            f"{self.cfg.engine}|{self.cfg.join_strategy}|{self.cfg.sip}"
+            f"|mb{self.cfg.memory_budget}|aj{self.cfg.adaptive_join}"
+        )
         if self.cfg.cardinality_feedback == "apply" and self.feedback is not None:
             base += f"|fb{self.feedback.version}"
         return base
@@ -656,33 +720,39 @@ class Engine:
             phys_v for phys_v in PL.phys_vars(phys)
         )
         t0 = time.perf_counter()
-        if isinstance(op, LOP.RowOperator):
-            rows = op.drain()
-            arr = np.full((len(rows), len(proj)), NULL_ID, dtype=np.int32)
-            for i, r in enumerate(rows):
-                for j, v in enumerate(proj):
-                    arr[i, j] = r.get(v, int(NULL_ID))
-        else:
-            # streaming drain: copy each batch's projection out, then give
-            # the buffers straight back to the arena — the release() side of
-            # the zero-copy pipeline (DESIGN.md §2.3)
-            blocks = []
-            while True:
-                b = op.next_batch()
-                if b is None:
-                    break
-                if not b.n_active:
-                    b.release()
-                    continue
-                cb = b.compact()
-                order = [cb.col_index(v) for v in proj]
-                blocks.append(cb.columns[order, : cb.n_rows].T)  # fancy-index copy
-                cb.release()
-            arr = (
-                np.concatenate(blocks, axis=0)
-                if blocks
-                else np.zeros((0, len(proj)), dtype=np.int32)
-            )
+        try:
+            if isinstance(op, LOP.RowOperator):
+                rows = op.drain()
+                arr = np.full((len(rows), len(proj)), NULL_ID, dtype=np.int32)
+                for i, r in enumerate(rows):
+                    for j, v in enumerate(proj):
+                        arr[i, j] = r.get(v, int(NULL_ID))
+            else:
+                # streaming drain: copy each batch's projection out, then give
+                # the buffers straight back to the arena — the release() side of
+                # the zero-copy pipeline (DESIGN.md §2.3)
+                blocks = []
+                while True:
+                    b = op.next_batch()
+                    if b is None:
+                        break
+                    if not b.n_active:
+                        b.release()
+                        continue
+                    cb = b.compact()
+                    order = [cb.col_index(v) for v in proj]
+                    blocks.append(cb.columns[order, : cb.n_rows].T)  # fancy-index copy
+                    cb.release()
+                arr = (
+                    np.concatenate(blocks, axis=0)
+                    if blocks
+                    else np.zeros((0, len(proj)), dtype=np.int32)
+                )
+        finally:
+            # operator teardown: drop spill files and window buffers even
+            # when the drain raised mid-query (DESIGN.md §15). Stats stay
+            # intact, so EXPLAIN ANALYZE / feedback below still work.
+            close_tree(op)
         if pool is not None and pool is not self.pool:
             # translator-local arena: return its memory now. The Engine's
             # shared pool stays warm — its recycled buffers (bounded by

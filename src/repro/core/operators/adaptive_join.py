@@ -1,0 +1,176 @@
+"""Mid-plan adaptive join re-strategy (DESIGN.md §15).
+
+The planner picks merge vs hash from *estimated* cardinalities. When the
+estimate on a merge join's build (right/sort) input is badly wrong —
+q-error at or past the profiler's MISEST threshold — the sort that makes
+merge viable can cost more than a hash build over the same rows.
+
+``AdaptiveMergeJoin`` defers that decision to the first ``next_batch()``
+call: the right input is a pipeline breaker either way (it feeds a Sort
+in the static plan), so we materialize it first, compare the actual row
+count against the planner's estimate, and only then instantiate the real
+join operator:
+
+  * estimate held up (or hash would not be cheaper) -> sort the block and
+    run the planned ``MergeJoin``;
+  * build blew past the estimate (q >= QERROR_FLAG) and a hash build is
+    cheaper than the sort -> run ``HashJoin`` with the already-
+    materialized block as the build side.  The probe (left) stream is
+    consumed as-is; its sort order is simply ignored.
+
+The planner only marks a merge join ``adaptive_ok`` when no ancestor
+depends on its output order (``Planner._mark_adaptive``), so the switch
+can never silently break a streaming group-by or merge-join parent.
+The decision is recorded in ``OpStats.extra`` (``adaptive_switches``,
+``adaptive_qerror``) and therefore shows up in EXPLAIN ANALYZE, the
+profiler tree, and serving metrics.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.batch import BatchPool, ColumnBatch
+from repro.core.operators.base import BatchOperator
+from repro.core.operators.hash_join import HashJoin
+from repro.core.operators.merge_join import MergeJoin
+from repro.core.operators.sort import MaterializedSource, materialize
+from repro.core.profiler import QERROR_FLAG, q_error
+
+# Mirrors the planner's cost model (planner._HASH_BUILD_FACTOR): hashing a
+# build row costs ~4x streaming it, a sort costs n*log2(n).
+_HASH_BUILD_FACTOR = 4.0
+
+
+class AdaptiveMergeJoin(BatchOperator):
+    """Planned merge join that may re-strategize to hash at runtime."""
+
+    def __init__(
+        self,
+        left: BatchOperator,
+        right: BatchOperator,  # UNSORTED build input (the planned Sort's child)
+        join_var: int,
+        mode: str = "inner",
+        post_filter=None,
+        dictionary=None,
+        post_program=None,
+        pool: Optional[BatchPool] = None,
+        spill_dir: Optional[str] = None,
+        est_build: float = 0.0,  # planner's est_rows for the right input
+        memory_budget: Optional[int] = None,
+    ) -> None:
+        assert mode in ("inner", "left_outer", "semi", "anti")
+        self.left = left
+        self.right = right
+        self.v = join_var
+        self.mode = mode
+        self.post_filter = post_filter
+        self.dictionary = dictionary
+        self.post_program = post_program
+        self.pool = pool
+        self.spill_dir = spill_dir
+        self.est_build = float(est_build)
+        self.memory_budget = memory_budget
+        self._inner: Optional[BatchOperator] = None
+
+        lv, rv = tuple(left.var_ids()), tuple(right.var_ids())
+        assert join_var in lv and join_var in rv
+        self._shared = tuple(x for x in lv if x in rv)
+        if mode in ("semi", "anti"):
+            self._out_vars: Tuple[int, ...] = lv
+        else:
+            self._out_vars = lv + tuple(x for x in rv if x not in lv)
+        super().__init__("AdaptiveJoin", f"(?v{join_var}) mode={mode}")
+
+    # -- metadata ---------------------------------------------------------------
+    def var_ids(self) -> Tuple[int, ...]:
+        return self._out_vars
+
+    def sorted_by(self) -> Optional[int]:
+        # Even when the merge branch wins, advertise no order: the planner
+        # only lowers to AdaptiveMergeJoin when no ancestor needs it, and a
+        # stable contract keeps parents from depending on the runtime coin.
+        return None
+
+    def children(self) -> List[BatchOperator]:
+        if self._inner is not None:
+            return [self._inner]
+        return [self.left, self.right]
+
+    # -- decision ---------------------------------------------------------------
+    def _decide(self) -> BatchOperator:
+        rvars, rcols = materialize(self.right)
+        actual = rcols.shape[1]
+        q = q_error(self.est_build, float(actual))
+        self.stats.extra["adaptive_qerror"] = round(q, 2)
+        # Only an *under*-estimate makes the planned sort more expensive
+        # than budgeted; over-estimates mean the sort is cheaper than
+        # planned and merge stays the right call.
+        sort_cost = actual * max(math.log2(actual), 1.0) if actual else 0.0
+        hash_cost = _HASH_BUILD_FACTOR * actual
+        switch = (
+            q >= QERROR_FLAG
+            and actual > self.est_build
+            and hash_cost < sort_cost
+        )
+        if switch:
+            self.stats.extra["adaptive_switches"] = 1
+            self.stats.detail = f"(?v{self.v}) mode={self.mode} -> hash q={q:.1f}"
+            build = MaterializedSource(
+                rvars, rcols, None, name="AdaptiveBuild", pool=self.pool
+            )
+            return HashJoin(
+                self.left,
+                build,
+                self._shared,
+                self.mode,
+                post_filter=self.post_filter,
+                dictionary=self.dictionary,
+                pool=self.pool,
+                post_program=self.post_program,
+                memory_budget=self.memory_budget,
+                spill_dir=self.spill_dir,
+            )
+        self.stats.extra["adaptive_switches"] = 0
+        self.stats.detail = f"(?v{self.v}) mode={self.mode} -> merge q={q:.1f}"
+        key = rcols[rvars.index(self.v)]
+        order = np.argsort(key, kind="stable")
+        src = MaterializedSource(
+            rvars, rcols[:, order], self.v, name="SortBuffer", pool=self.pool
+        )
+        return MergeJoin(
+            self.left,
+            src,
+            self.v,
+            self.mode,
+            post_filter=self.post_filter,
+            dictionary=self.dictionary,
+            spill_dir=self.spill_dir,
+            pool=self.pool,
+            post_program=self.post_program,
+        )
+
+    def _ensure(self) -> BatchOperator:
+        if self._inner is None:
+            self._inner = self._decide()
+        return self._inner
+
+    # -- execution --------------------------------------------------------------
+    def _next(self) -> Optional[ColumnBatch]:
+        return self._ensure().next_batch()
+
+    def _close(self) -> None:
+        # children() already routes close_tree into self._inner once the
+        # decision is made; nothing extra held at this level.
+        pass
+
+    def _reset(self) -> None:
+        if self._inner is not None:
+            self._inner.close()
+            self._inner = None
+        self.left.reset()
+        self.right.reset()
+        self.stats.detail = f"(?v{self.v}) mode={self.mode}"

@@ -52,6 +52,7 @@ from repro.core.batch import MAX_BATCH, NULL_ID, BatchPool, ColumnBatch
 from repro.core.dictionary import Dictionary
 from repro.core.operators.base import BatchOperator
 from repro.core.operators.sort import MaterializedSource, materialize
+from repro.core.partition import PartitionedRelation, partition_ids_multi
 from repro.kernels import ops
 
 _EMPTY_I32 = np.zeros(0, dtype=np.int32)
@@ -524,14 +525,22 @@ class SortGroupBy(BatchOperator):
             return np.concatenate(blocks, axis=1)
         return np.zeros((len(need), 0), dtype=np.int32)
 
-    def _ensure(self) -> BatchOperator:
-        if self._src is not None:
-            return self._src
+    def _need_vars(self) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
         avars = tuple(
             dict.fromkeys(a.var for a in self.aggs if a.var is not None)
         )
-        need = tuple(dict.fromkeys(self.group_vars + avars))
-        cols = self._drain_needed(need)
+        return tuple(dict.fromkeys(self.group_vars + avars)), avars
+
+    def _aggregate_block(
+        self, cols: np.ndarray, need: Tuple[int, ...], avars: Tuple[int, ...]
+    ) -> np.ndarray:
+        """Sort-based aggregation of one in-memory block: sort ONCE by the
+        packed composite key, assign dense gids, stream the runs through
+        StreamingGroupBy, and translate gids back to group-key values via
+        each group's first sorted row. Returns an (n_out_vars, n_groups)
+        block. Shared by the whole-input path below and the per-partition
+        path (PartitionedGroupBy): group keys never span partitions, so
+        per-partition blocks concatenate into the global result."""
         n = cols.shape[1]
         key_rows = cols[: 0] if not self.group_vars else cols[
             [need.index(v) for v in self.group_vars]
@@ -568,13 +577,23 @@ class SortGroupBy(BatchOperator):
         first_row = starts[gids] if n else np.zeros(0, dtype=np.int64)
         out_cols = [kr[first_row] for kr in key_rows]
         out_cols.extend(scols[1 + ai] for ai in range(len(self.aggs)))
-        block = (
+        for k, v in self._stream.stats.extra.items():
+            if k.endswith("_ms") or isinstance(v, (int, float)):
+                self.stats.extra[k] = self.stats.extra.get(k, 0) + v
+            else:
+                self.stats.extra[k] = v
+        return (
             np.stack(out_cols, axis=0).astype(np.int32)
             if out_cols
             else np.zeros((0, 0), dtype=np.int32)
         )
-        for k, v in self._stream.stats.extra.items():
-            self.stats.extra[k] = v
+
+    def _ensure(self) -> BatchOperator:
+        if self._src is not None:
+            return self._src
+        need, avars = self._need_vars()
+        cols = self._drain_needed(need)
+        block = self._aggregate_block(cols, need, avars)
         self._src = MaterializedSource(
             self.var_ids(), block, None, self.batch_size, name="GroupOut",
             pool=self.pool,
@@ -671,5 +690,173 @@ class SortDistinct(BatchOperator):
         return self._ensure().next_batch()
 
     def _reset(self) -> None:
+        self.child.reset()
+        self._src = None
+
+
+class PartitionedGroupBy(SortGroupBy):
+    """GROUP BY over the partitioned substrate (DESIGN.md §15): fan the
+    input out by group key into a budget/spill-aware PartitionedRelation,
+    then run the sort-based block aggregation one partition at a time.
+    Each group's rows land in exactly one partition (same key tuple ->
+    same partition id), so per-partition outputs concatenate into the
+    global result — the whole input is never sorted or resident at once,
+    unlike the parent's single-argsort path."""
+
+    def __init__(
+        self,
+        child: BatchOperator,
+        group_vars: Sequence[int],
+        aggs: Sequence[AggSpec],
+        dictionary: Dictionary,
+        batch_size: int = MAX_BATCH,
+        pool: Optional[BatchPool] = None,
+        backend: Optional[str] = None,
+        memory_budget: Optional[int] = None,
+        spill_dir: Optional[str] = None,
+        n_parts: int = 16,
+    ):
+        assert group_vars, "partitioned grouping needs group keys"
+        super().__init__(
+            child, group_vars, aggs, dictionary, batch_size, pool, backend
+        )
+        self.memory_budget = memory_budget
+        self.spill_dir = spill_dir
+        self.n_parts = max(2, n_parts)
+        self._rel: Optional[PartitionedRelation] = None
+        self.stats.name = "Group"
+        self.stats.detail = f"by={self.group_vars} (partitioned)"
+
+    def _partition_input(self, need: Tuple[int, ...]) -> PartitionedRelation:
+        rel = PartitionedRelation(
+            len(need), self.n_parts, self.spill_dir, self.memory_budget,
+            self.pool,
+        )
+        gidx = [need.index(v) for v in self.group_vars]
+        while True:
+            b = self.child.next_batch()
+            if b is None:
+                break
+            cb = b.compact()
+            if cb.n_rows:
+                cols = np.stack([cb.column(v) for v in need])
+                rel.append(cols, partition_ids_multi(cols[gidx], self.n_parts))
+            cb.release()
+        return rel
+
+    def _ensure(self) -> BatchOperator:
+        if self._src is not None:
+            return self._src
+        need, avars = self._need_vars()
+        self._rel = self._partition_input(need)
+        blocks = []
+        for p in range(self.n_parts):
+            part = self._rel.take(p)
+            if part.shape[1]:
+                blocks.append(self._aggregate_block(part, need, avars))
+        block = (
+            np.concatenate(blocks, axis=1)
+            if blocks
+            else np.zeros((len(self.var_ids()), 0), dtype=np.int32)
+        )
+        self.stats.extra["grace_partitions"] = self.n_parts
+        self.stats.extra["spill_bytes"] = self._rel.spill_bytes
+        self.stats.extra["spill_files"] = self._rel.spill_files
+        self._src = MaterializedSource(
+            self.var_ids(), block, None, self.batch_size, name="GroupOut",
+            pool=self.pool,
+        )
+        return self._src
+
+    def _close(self) -> None:
+        if self._rel is not None:
+            self._rel.close()
+
+    def _reset(self) -> None:
+        self._close()
+        self._rel = None
+        super()._reset()
+
+
+class PartitionedDistinct(BatchOperator):
+    """General DISTINCT over the partitioned substrate: fan rows out by
+    ALL visible columns, dedup each partition independently (identical
+    rows share a partition id by construction), and concatenate. Output
+    order is partition-major — never claimed sorted, unlike SortDistinct
+    whose np.unique output is globally ordered."""
+
+    def __init__(
+        self,
+        child: BatchOperator,
+        batch_size: int = MAX_BATCH,
+        pool: Optional[BatchPool] = None,
+        memory_budget: Optional[int] = None,
+        spill_dir: Optional[str] = None,
+        n_parts: int = 16,
+    ):
+        self.child = child
+        self.batch_size = batch_size
+        self.pool = pool
+        self.memory_budget = memory_budget
+        self.spill_dir = spill_dir
+        self.n_parts = max(2, n_parts)
+        self._rel: Optional[PartitionedRelation] = None
+        self._src: Optional[MaterializedSource] = None
+        super().__init__("Distinct", "(partitioned)")
+
+    def var_ids(self) -> Tuple[int, ...]:
+        return self.child.var_ids()
+
+    def children(self) -> List[BatchOperator]:
+        return [self.child]
+
+    def _ensure(self) -> MaterializedSource:
+        if self._src is not None:
+            return self._src
+        nv = len(self.var_ids())
+        self._rel = PartitionedRelation(
+            nv, self.n_parts, self.spill_dir, self.memory_budget, self.pool
+        )
+        vs = self.var_ids()
+        while True:
+            b = self.child.next_batch()
+            if b is None:
+                break
+            cb = b.compact()
+            if cb.n_rows:
+                cols = np.stack([cb.column(v) for v in vs])
+                self._rel.append(
+                    cols, partition_ids_multi(cols, self.n_parts)
+                )
+            cb.release()
+        blocks = []
+        for p in range(self.n_parts):
+            part = self._rel.take(p)
+            if part.shape[1]:
+                blocks.append(np.unique(part.T, axis=0).T)
+        uniq = (
+            np.concatenate(blocks, axis=1).astype(np.int32)
+            if blocks
+            else np.zeros((nv, 0), dtype=np.int32)
+        )
+        self.stats.extra["grace_partitions"] = self.n_parts
+        self.stats.extra["spill_bytes"] = self._rel.spill_bytes
+        self.stats.extra["spill_files"] = self._rel.spill_files
+        self._src = MaterializedSource(
+            vs, uniq, None, self.batch_size, name="DistinctBuffer",
+            pool=self.pool,
+        )
+        return self._src
+
+    def _next(self) -> Optional[ColumnBatch]:
+        return self._ensure().next_batch()
+
+    def _close(self) -> None:
+        if self._rel is not None:
+            self._rel.close()
+
+    def _reset(self) -> None:
+        self._close()
+        self._rel = None
         self.child.reset()
         self._src = None

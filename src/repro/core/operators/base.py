@@ -107,6 +107,18 @@ class BatchOperator:
     def children(self) -> List["BatchOperator"]:
         return []
 
+    # -- resource teardown -----------------------------------------------------
+
+    def close(self) -> None:
+        """Release external resources (spill files, mapped buffers) for this
+        operator and its whole subtree. Idempotent; stats survive — the
+        executor calls this in a ``finally`` so EXPLAIN ANALYZE still works
+        after a mid-query exception (the ISSUE-9 spill-leak fix)."""
+        close_tree(self)
+
+    def _close(self) -> None:
+        """Per-operator teardown hook — release disk/buffers only."""
+
     # -- implementation hooks ---------------------------------------------------
 
     def _next(self) -> Optional[ColumnBatch]:
@@ -128,3 +140,24 @@ class BatchOperator:
                 return out
             if b.n_active:
                 out.append(b)
+
+
+def close_tree(op) -> None:
+    """Walk an operator tree (batch or row; duck-typed on ``children``) and
+    invoke every ``_close`` hook. Exceptions from one hook don't stop the
+    walk — a failed unlink must not leak the rest of the tree's spills."""
+    stack = [op]
+    while stack:
+        o = stack.pop()
+        cl = getattr(o, "_close", None)
+        if cl is not None:
+            try:
+                cl()
+            except Exception:
+                pass
+        ch = getattr(o, "children", None)
+        if ch is not None:
+            try:
+                stack.extend(ch())
+            except Exception:
+                pass

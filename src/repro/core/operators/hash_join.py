@@ -45,6 +45,12 @@ from repro.core.expressions import eval_expr_mask
 from repro.core.exprs import eval_program_mask
 from repro.core.operators.base import BatchOperator
 from repro.core.operators.sort import materialize
+from repro.core.partition import (
+    PartitionedRelation,
+    next_pow2,
+    partition_ids_multi,
+    split_block,
+)
 from repro.kernels import ops as KOPS
 
 # target rows per partition: partitions around this size keep the within-
@@ -52,6 +58,16 @@ from repro.kernels import ops as KOPS
 # enough for the histogram kernel's one-hot reduction
 _PART_TARGET = 4096
 _MAX_PARTS = 1024
+
+# grace mode (DESIGN.md §15): default top-level fan-out when the planner
+# directed a grace build without sizing it, sub-fan-out per recursive
+# re-partition of a skewed bucket, and the recursion depth cap (4 hash
+# levels with distinct multipliers; a bucket still over budget at level 3
+# is one hot key and builds resident regardless)
+_GRACE_DEFAULT_PARTS = 32
+_GRACE_SUB_PARTS = 8
+_GRACE_MAX_LEVEL = 3
+_GRACE_PROBE_CHUNK = 4096
 
 
 def _n_parts_for(n_build: int) -> int:
@@ -75,6 +91,10 @@ class HashJoin(BatchOperator):
         post_program=None,  # compiled ExprProgram for post_filter (planner)
         backend: Optional[str] = None,  # kernel backend override (tests)
         n_parts: Optional[int] = None,
+        memory_budget: Optional[int] = None,  # bytes; None = resident only
+        spill_dir: Optional[str] = None,
+        grace: Optional[bool] = None,  # True = planner-directed grace build
+        grace_parts: int = 0,  # planner-chosen top-level fan-out (0 = auto)
     ) -> None:
         assert mode in ("inner", "left_outer", "semi", "anti")
         self.probe = probe
@@ -94,6 +114,10 @@ class HashJoin(BatchOperator):
         self.pool = pool
         self.backend = backend
         self._n_parts_cfg = n_parts
+        self.memory_budget = memory_budget
+        self.spill_dir = spill_dir
+        self.grace = grace
+        self.grace_parts = grace_parts
 
         pv, bv = tuple(probe.var_ids()), tuple(build.var_ids())
         self._pv, self._bv = pv, bv
@@ -123,6 +147,20 @@ class HashJoin(BatchOperator):
         self._hash_vars: Tuple[int, ...] = self.keys  # may shrink on overflow
         self._pair_vars: Tuple[int, ...] = self._extra_shared
 
+        # grace-mode state (DESIGN.md §15): both sides fanned out once by
+        # partition_ids_multi, then joined one partition at a time with the
+        # resident radix machinery above
+        self._grace_active = False
+        self._build_rel: Optional[PartitionedRelation] = None
+        self._probe_rel: Optional[PartitionedRelation] = None
+        self._probe_partitioned = False
+        # work stack of (build_block, probe_block, level) from recursive
+        # re-partitioning of skewed buckets; consumed before fresh take()s
+        self._grace_stack: List[Tuple[np.ndarray, np.ndarray, int]] = []
+        self._next_gp = 0
+        self._gp_cols: Optional[np.ndarray] = None  # current probe block
+        self._gp_off = 0
+
         # probe-side continuation state
         self._pending: Optional[Tuple] = None
         # (cb, matched) for left_outer runs that need per-row match tracking
@@ -143,7 +181,10 @@ class HashJoin(BatchOperator):
         # probe order is preserved: expansions walk probe rows in order and
         # plain left_outer NULL rows are emitted in place. Tracked
         # left_outer (join condition / pair fallback) queues its NULL rows
-        # after the batch's expansions, breaking the interleave.
+        # after the batch's expansions, breaking the interleave. Grace mode
+        # re-orders the probe side by partition, so it preserves nothing.
+        if self._grace_active or self.grace:
+            return None
         if self.mode == "left_outer" and self._needs_tracking():
             return None
         return self.probe.sorted_by()
@@ -162,6 +203,14 @@ class HashJoin(BatchOperator):
         if self._built:
             return
         t0 = perf_counter()
+        if self.grace and self.keys:
+            # planner-directed grace build: stream the build child straight
+            # into the partitioned relation — it is never fully resident
+            self._grace_build_stream()
+            self._built = True
+            self.stats.extra["hash_build_ms"] = round(
+                (perf_counter() - t0) * 1e3, 3)
+            return
         bvars, bcols = materialize(self.build)
         self._bv = bvars
         self._rsel = tuple(bvars.index(x) for x in self._build_out)
@@ -174,9 +223,38 @@ class HashJoin(BatchOperator):
             self.stats.extra["hash_build_ms"] = round(
                 (perf_counter() - t0) * 1e3, 3)
             return
-        kcols = bcols[[bvars.index(k) for k in self.keys]]
+        if (
+            self.memory_budget is not None
+            and bcols.nbytes > self.memory_budget
+            and self.probe.sorted_by() is None
+        ):
+            # runtime resident->grace switch: the planner sized this build
+            # as resident but actuals blew the budget. Only taken when no
+            # ancestor relies on probe order (unsorted probe), since grace
+            # re-orders emission by partition.
+            self._grace_switch_from_block(bcols)
+            self._built = True
+            self.stats.extra["hash_build_rows"] = n
+            self.stats.extra["hash_build_ms"] = round(
+                (perf_counter() - t0) * 1e3, 3)
+            return
+        self._build_resident(bcols)
+        self._built = True
+        self.stats.extra["hash_build_rows"] = n
+        self.stats.extra["hash_partitions"] = self._n_parts
+        self.stats.extra["hash_build_ms"] = round((perf_counter() - t0) * 1e3, 3)
+
+    def _build_resident(self, bcols: np.ndarray) -> None:
+        """Radix-build one in-memory block (full build side, or one grace
+        partition at a time). Resets the span/pair layout per block: a
+        multi-key span overflow in one grace partition must not leak its
+        primary-only fallback into the next."""
+        n = int(bcols.shape[1])
+        self._n_build = n
+        kcols = bcols[[self._bv.index(k) for k in self.keys]]
         self._spans = None
         self._hash_vars = self.keys
+        self._pair_vars = self._extra_shared
         if len(self.keys) > 1:
             # one sentinel slot per column (max+3) so clamped out-of-range
             # probe values can never collide with a real build key
@@ -187,13 +265,13 @@ class HashJoin(BatchOperator):
                 # gather_emit equality pairs
                 self._hash_vars = self.keys[:1]
                 self._pair_vars = self.keys[1:] + self._extra_shared
-                bh, bl = None, kcols[0]
+                bh, bl = None, np.ascontiguousarray(kcols[0])
             else:
                 self._spans = spans
                 bh = (packed >> 31).astype(np.int32)
                 bl = (packed & 0x7FFFFFFF).astype(np.int32)
         else:
-            bh, bl = None, kcols[0]
+            bh, bl = None, np.ascontiguousarray(kcols[0])
         self._n_parts = self._n_parts_cfg or _n_parts_for(n)
         order, part_starts = KOPS.hash_build(
             bh, bl, self._n_parts, backend=self.backend
@@ -206,10 +284,198 @@ class HashJoin(BatchOperator):
         self._skh = None if bh is None else bh[order]
         self._skl = bl[order]
         self._probe_cache = {}  # per-build composite cache (kernels.ops)
-        self._built = True
-        self.stats.extra["hash_build_rows"] = n
-        self.stats.extra["hash_partitions"] = self._n_parts
-        self.stats.extra["hash_build_ms"] = round((perf_counter() - t0) * 1e3, 3)
+
+    # -- grace phase (DESIGN.md §15) ---------------------------------------------
+
+    def _grace_fanout(self) -> int:
+        g = self.grace_parts or _GRACE_DEFAULT_PARTS
+        return max(2, next_pow2(g))
+
+    def _init_rels(self, n_parts: int) -> None:
+        half = None if self.memory_budget is None else max(
+            self.memory_budget // 2, 1
+        )
+        self._build_rel = PartitionedRelation(
+            len(self._bv), n_parts, self.spill_dir, half, self.pool
+        )
+        self._probe_rel = PartitionedRelation(
+            len(self._pv), n_parts, self.spill_dir, half, self.pool
+        )
+        self._next_gp = 0
+        self._grace_stack = []
+        self._gp_cols = None
+        self._gp_off = 0
+        self._probe_partitioned = False
+        self.stats.extra["grace_partitions"] = n_parts
+        self.stats.extra.setdefault("repartitions", 0)
+
+    def _grace_build_stream(self) -> None:
+        g = self._grace_fanout()
+        self._init_rels(g)
+        total = 0
+        while True:
+            b = self.build.next_batch()
+            if b is None:
+                break
+            cb = b.compact()
+            n = cb.n_rows
+            if n == 0:
+                cb.release()
+                continue
+            pids = partition_ids_multi(
+                [cb.column(k) for k in self.keys], g
+            )
+            cols = np.stack([cb.column(v) for v in self._bv])
+            self._build_rel.append(cols, pids)
+            total += n
+            cb.release()
+        self._grace_active = True
+        self.stats.extra["hash_build_rows"] = total
+        self._refresh_grace_stats()
+
+    def _grace_switch_from_block(self, bcols: np.ndarray) -> None:
+        # fan-out sized so an average partition fits in half the budget
+        # (the other half is headroom for the probe partitions)
+        g = min(
+            256,
+            max(2, next_pow2(
+                -(-int(bcols.nbytes) // max(self.memory_budget // 2, 1))
+            )),
+        )
+        self._init_rels(g)
+        pids = partition_ids_multi(
+            [bcols[self._bv.index(k)] for k in self.keys], g
+        )
+        self._build_rel.append(bcols, pids)
+        self._grace_active = True
+        self.stats.extra["adaptive_switches"] = 1
+        self.stats.detail += " grace"
+        self._refresh_grace_stats()
+
+    def _grace_partition_probe(self) -> None:
+        g = self._build_rel.n_parts
+        while True:
+            b = self.probe.next_batch()
+            if b is None:
+                break
+            cb = b.compact()
+            n = cb.n_rows
+            if n == 0:
+                cb.release()
+                continue
+            pids = partition_ids_multi(
+                [cb.column(k) for k in self.keys], g
+            )
+            cols = np.stack([cb.column(v) for v in self._pv])
+            self._probe_rel.append(cols, pids)
+            cb.release()
+        self._probe_partitioned = True
+        self._refresh_grace_stats()
+
+    def _refresh_grace_stats(self) -> None:
+        sb = sf = 0
+        for rel in (self._build_rel, self._probe_rel):
+            if rel is not None:
+                sb += rel.spill_bytes
+                sf += rel.spill_files
+        self.stats.extra["spill_bytes"] = sb
+        self.stats.extra["spill_files"] = sf
+
+    def _grace_next_probe(self) -> Optional[ColumnBatch]:
+        """Probe-side source while grace is active: chunks of the current
+        partition's probe block, advancing partitions in between. Returns
+        None when exhausted OR when leftovers were queued (the caller's
+        loop flushes them before asking again)."""
+        if not self._probe_partitioned:
+            self._grace_partition_probe()
+        while True:
+            if self._gp_cols is not None:
+                if self._gp_off < self._gp_cols.shape[1]:
+                    j = min(
+                        self._gp_off + _GRACE_PROBE_CHUNK,
+                        self._gp_cols.shape[1],
+                    )
+                    chunk = self._gp_cols[:, self._gp_off : j]
+                    self._gp_off = j
+                    return ColumnBatch.from_columns(
+                        self._pv,
+                        [chunk[i] for i in range(chunk.shape[0])],
+                        None,
+                        pool=self.pool,
+                    )
+                self._gp_cols = None
+            if self._leftovers:
+                return None  # flush NULL-extension leftovers first
+            if not self._grace_advance():
+                return None
+
+    def _grace_advance(self) -> bool:
+        """Move to the next joinable (build, probe) partition pair. Skewed
+        buckets over budget re-partition recursively with a fresh hash
+        multiplier per level instead of building an over-budget table."""
+        while True:
+            if self._grace_stack:
+                bblock, pblock, level = self._grace_stack.pop()
+            elif self._next_gp < self._build_rel.n_parts:
+                g = self._next_gp
+                self._next_gp += 1
+                bblock = self._build_rel.take(g)
+                pblock = self._probe_rel.take(g)
+                level = 0
+                self._refresh_grace_stats()
+            else:
+                return False
+            if pblock.shape[1] == 0:
+                continue
+            if bblock.shape[1] == 0:
+                # probe-only partition: inner/semi emit nothing; anti and
+                # left_outer NULL-extend every probe row via the leftovers
+                # path (build_out is empty for anti, so it emits as-is)
+                if self.mode in ("anti", "left_outer"):
+                    self._leftovers.append(np.ascontiguousarray(pblock))
+                    return True
+                continue
+            if (
+                self.memory_budget is not None
+                and bblock.nbytes > self.memory_budget
+                and level < _GRACE_MAX_LEVEL
+                and bblock.shape[1] > 1
+                and not self._all_keys_equal(bblock)
+            ):
+                self._grace_repartition(bblock, pblock, level)
+                continue
+            self._build_resident(bblock)
+            self._gp_cols = pblock
+            self._gp_off = 0
+            return True
+
+    def _all_keys_equal(self, bblock: np.ndarray) -> bool:
+        for k in self.keys:
+            c = bblock[self._bv.index(k)]
+            if c.shape[0] and not (c == c[0]).all():
+                return False
+        return True
+
+    def _grace_repartition(
+        self, bblock: np.ndarray, pblock: np.ndarray, level: int
+    ) -> None:
+        g2 = _GRACE_SUB_PARTS
+        b_pids = partition_ids_multi(
+            [bblock[self._bv.index(k)] for k in self.keys], g2, level + 1
+        )
+        p_pids = partition_ids_multi(
+            [pblock[self._pv.index(k)] for k in self.keys], g2, level + 1
+        )
+        bsubs = dict(split_block(bblock, b_pids, g2))
+        psubs = dict(split_block(pblock, p_pids, g2))
+        empty_b = np.empty((bblock.shape[0], 0), dtype=np.int32)
+        for p, psub in psubs.items():
+            self._grace_stack.append(
+                (bsubs.get(p, empty_b), psub, level + 1)
+            )
+        self.stats.extra["repartitions"] = (
+            self.stats.extra.get("repartitions", 0) + 1
+        )
 
     def sip_keys(self, var: int) -> np.ndarray:
         """Build-side key column for a SipFilter export (DESIGN.md §12).
@@ -222,6 +488,16 @@ class HashJoin(BatchOperator):
         self.stats.extra["sip_exports"] = (
             self.stats.extra.get("sip_exports", 0) + 1
         )
+        if self._grace_active:
+            # partitioned build: concatenate the key column across
+            # partitions (load without freeing — the grace drain still
+            # needs them). SIP gating means small builds, so this is rare.
+            j = self._bv.index(var)
+            parts = [
+                self._build_rel.load(p)[j]
+                for p in range(self._build_rel.n_parts)
+            ]
+            return np.ascontiguousarray(np.concatenate(parts))
         return np.ascontiguousarray(
             self._bcols[self._bv.index(var), : self._n_build]
         )
@@ -280,9 +556,16 @@ class HashJoin(BatchOperator):
                 continue
             if self._leftovers:
                 return self._emit_leftovers(cap)
-            pb = self.probe.next_batch()
-            if pb is None:
-                return None
+            if self._grace_active:
+                pb = self._grace_next_probe()
+                if pb is None:
+                    if self._leftovers:
+                        continue  # loop top flushes them
+                    return None
+            else:
+                pb = self.probe.next_batch()
+                if pb is None:
+                    return None
             cb = pb.compact()
             if cb.n_rows == 0:
                 cb.release()
@@ -473,6 +756,13 @@ class HashJoin(BatchOperator):
         self._skip_floor = (var, target)
         self.probe.skip(var, target)
 
+    def _close(self) -> None:
+        # grace spill teardown — reached via executor finally even when a
+        # mid-query exception aborts the drain (ISSUE-9 leak fix)
+        for rel in (self._build_rel, self._probe_rel):
+            if rel is not None:
+                rel.close()
+
     def _reset(self) -> None:
         self._drop_pending()
         self._skip_floor = None
@@ -486,3 +776,11 @@ class HashJoin(BatchOperator):
         self._spans = None
         self._hash_vars = self.keys
         self._pair_vars = self._extra_shared
+        self._close()
+        self._grace_active = False
+        self._build_rel = self._probe_rel = None
+        self._probe_partitioned = False
+        self._grace_stack = []
+        self._next_gp = 0
+        self._gp_cols = None
+        self._gp_off = 0

@@ -311,6 +311,12 @@ class MergeJoin(BatchOperator):
         if self.right.supports_skip():
             self.right.skip(self.v, target)
 
+    def _close(self) -> None:
+        # _Window.close is idempotent, so teardown after _reset (or a
+        # second close from an outer finally) is safe
+        self._lwin.close()
+        self._rwin.close()
+
     def _reset(self) -> None:
         self.left.reset()
         self.right.reset()

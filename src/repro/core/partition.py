@@ -1,0 +1,261 @@
+"""Partitioned-relation substrate: the radix layout as a first-class object.
+
+The radix-partitioned layout was grown three times over — inside the hash
+join build (``kernels/radix_partition.py`` via ``KOPS.hash_build``), inside
+the SIP exchange machinery, and implicitly in the sort-based aggregation
+paths. This module promotes it to an operator substrate (DESIGN.md §15):
+``PartitionedRelation`` holds rows fanned out by a partition hash, tracks a
+memory budget, and spills whole partitions to ``.npy`` temp files using the
+same mkstemp/np.save/unlink protocol as the merge join's ``_Window``
+(operators/merge_join.py) — generalized from "one buffer past a row
+threshold" to "largest partitions past a byte budget".
+
+Grace hash join (Kitsuregawa's scheme, the ROADMAP "out-of-core + adaptive
+(grace) hash joins" item) builds directly on it: both inputs are fanned out
+once by ``partition_ids``, non-resident partitions spill, and partitions are
+then joined one at a time — each small enough for the existing resident
+radix build. Skewed buckets that still exceed the budget re-partition
+recursively with a *different* hash multiplier per level, so a level-0
+collision pile-up cannot survive to level 1.
+
+Partition hashing deliberately uses multipliers disjoint from
+``vecops._HASH_MULT``/``_MIX_MULT``: inside each loaded grace partition the
+resident build runs ``KOPS.hash_build`` with the vecops family, and a
+correlated grace hash would funnel every partition's rows into a handful of
+internal buckets.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import telemetry, vecops
+
+# Per-recursion-level partition multipliers (Fibonacci-style odd constants,
+# murmur/xxhash finalizer family). Level k uses _LEVEL_MULTS[k % 4]; all are
+# distinct from vecops._HASH_MULT (0x9E3779B1 appears only at level 3, by
+# which point two prior fan-outs have decorrelated the key stream).
+_LEVEL_MULTS = (0xC2B2AE35, 0x27D4EB2F, 0x165667B1, 0x9E3779B1)
+
+_MULTI_FOLD_MULT = np.uint32(0x01000193)  # FNV-1a prime for column folding
+
+
+def partition_ids(
+    key_hi: Optional[np.ndarray],
+    key_lo: np.ndarray,
+    n_parts: int,
+    level: int = 0,
+) -> np.ndarray:
+    """Partition id per row from (hi, lo) packed key halves — the same
+    representation the hash join carries (``pack_group_keys`` output split
+    at bit 31). ``n_parts`` must be a power of two."""
+    mixed = vecops.mix_pair(key_hi, key_lo)
+    mult = np.uint32(_LEVEL_MULTS[level % len(_LEVEL_MULTS)])
+    h = (mixed.astype(np.int64, copy=False).astype(np.uint32) * mult) >> np.uint32(16)
+    return (h & np.uint32(n_parts - 1)).astype(np.int32)
+
+
+def partition_ids_multi(
+    cols: Sequence[np.ndarray], n_parts: int, level: int = 0
+) -> np.ndarray:
+    """Partition id from raw key columns (no span packing needed — equal
+    tuples land in the same partition; cross-tuple collisions only cost
+    balance, never correctness). Used by partitioned GROUP BY/DISTINCT
+    where group keys never went through ``pack_group_keys``."""
+    acc = cols[0].astype(np.uint32, copy=True)
+    for c in cols[1:]:
+        acc *= _MULTI_FOLD_MULT
+        acc ^= c.astype(np.uint32, copy=False)
+    mult = np.uint32(_LEVEL_MULTS[level % len(_LEVEL_MULTS)])
+    h = (acc * mult) >> np.uint32(16)
+    return (h & np.uint32(n_parts - 1)).astype(np.int32)
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class PartitionedRelation:
+    """Rows of an ``(n_vars, n)`` int32 relation fanned out into ``n_parts``
+    buckets, with a budget-driven spill lifecycle.
+
+    ``append`` scatters one block of rows by partition id (one stable
+    argsort + bincount boundary scan — the same single-pass radix discipline
+    as ``vecops.hash_build_order``). Each partition is a chunk list plus a
+    list of spill files; when resident bytes exceed ``budget_bytes`` the
+    largest resident partitions spill (mkstemp + np.save, mirroring
+    ``_Window._spill``) until residency is back under half the budget —
+    half, so steady-state appends don't thrash one spill per batch.
+
+    ``take(p)`` loads partition ``p`` (concatenating spill files + resident
+    chunks) and frees it immediately — grace consumers visit each partition
+    exactly once, so early unlink keeps peak disk at O(non-visited).
+    ``close()`` is idempotent and unlinks everything; operators route it
+    through their ``_close`` hook so executor teardown reaches it even when
+    a mid-query exception aborts the drain (the ISSUE-9 leak fix)."""
+
+    def __init__(
+        self,
+        n_vars: int,
+        n_parts: int,
+        spill_dir: Optional[str] = None,
+        budget_bytes: Optional[int] = None,
+        pool=None,
+    ):
+        self.n_vars = n_vars
+        self.n_parts = n_parts
+        self.spill_dir = spill_dir
+        self.budget_bytes = budget_bytes
+        self.pool = pool
+        self._chunks: List[List[np.ndarray]] = [[] for _ in range(n_parts)]
+        self._files: List[List[str]] = [[] for _ in range(n_parts)]
+        self.part_rows = np.zeros(n_parts, dtype=np.int64)
+        self._resident_bytes = 0
+        self._closed = False
+        # observability counters (flow into OpStats.extra / OpenMetrics)
+        self.spill_bytes = 0
+        self.spill_files = 0
+
+    # -- ingest ------------------------------------------------------------
+
+    def append(self, cols: np.ndarray, pids: np.ndarray) -> None:
+        """Scatter ``cols`` (n_vars, n) into partitions by ``pids``."""
+        n = cols.shape[1]
+        if n == 0:
+            return
+        order = np.argsort(pids, kind="stable")
+        sorted_pids = pids[order]
+        scattered = np.ascontiguousarray(cols[:, order])
+        counts = np.bincount(sorted_pids, minlength=self.n_parts)
+        starts = np.concatenate(([0], np.cumsum(counts)))
+        for p in np.nonzero(counts)[0]:
+            chunk = scattered[:, starts[p] : starts[p + 1]].copy()
+            self._chunks[p].append(chunk)
+            self.part_rows[p] += chunk.shape[1]
+            self._resident_bytes += chunk.nbytes
+        if self.pool is not None:
+            self.pool.bytes_copied += scattered.nbytes
+        self._maybe_spill()
+
+    def append_block(self, cols: np.ndarray, pids: np.ndarray) -> None:
+        """Alias kept for call-site readability: one-shot block fan-out."""
+        self.append(cols, pids)
+
+    # -- spill lifecycle ---------------------------------------------------
+
+    def _maybe_spill(self) -> None:
+        if (
+            self.budget_bytes is None
+            or self.spill_dir is None
+            or self._resident_bytes <= self.budget_bytes
+        ):
+            return
+        # spill largest-resident-first until under half the budget
+        target = self.budget_bytes // 2
+        sizes = [
+            (sum(c.nbytes for c in self._chunks[p]), p)
+            for p in range(self.n_parts)
+            if self._chunks[p]
+        ]
+        sizes.sort(reverse=True)
+        for nbytes, p in sizes:
+            if self._resident_bytes <= target:
+                break
+            self._spill_partition(p, nbytes)
+
+    def _spill_partition(self, p: int, nbytes: int) -> None:
+        t0 = time.perf_counter()
+        block = (
+            self._chunks[p][0]
+            if len(self._chunks[p]) == 1
+            else np.concatenate(self._chunks[p], axis=1)
+        )
+        fd, path = tempfile.mkstemp(suffix=".npy", dir=self.spill_dir)
+        os.close(fd)
+        np.save(path, block)
+        self._files[p].append(path)
+        self._chunks[p] = []
+        self._resident_bytes -= nbytes
+        self.spill_bytes += block.nbytes
+        self.spill_files += 1
+        telemetry.record_dispatch(
+            "partition_spill", "disk", t0, time.perf_counter() - t0
+        )
+
+    # -- consumption -------------------------------------------------------
+
+    def load(self, p: int) -> np.ndarray:
+        """Partition ``p`` as one (n_vars, rows) block (spilled + resident,
+        in append order). Does not free anything."""
+        blocks: List[np.ndarray] = []
+        for path in self._files[p]:
+            blocks.append(np.load(path))
+        blocks.extend(self._chunks[p])
+        if not blocks:
+            return np.empty((self.n_vars, 0), dtype=np.int32)
+        if len(blocks) == 1:
+            return np.ascontiguousarray(blocks[0])
+        return np.concatenate(blocks, axis=1)
+
+    def take(self, p: int) -> np.ndarray:
+        """``load(p)`` then free the partition (unlink its spill files)."""
+        block = self.load(p)
+        self._free_partition(p)
+        return block
+
+    def _free_partition(self, p: int) -> None:
+        for path in self._files[p]:
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+        self._files[p] = []
+        self._resident_bytes -= sum(c.nbytes for c in self._chunks[p])
+        self._chunks[p] = []
+
+    # -- teardown ----------------------------------------------------------
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._resident_bytes
+
+    @property
+    def total_rows(self) -> int:
+        return int(self.part_rows.sum())
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for p in range(self.n_parts):
+            self._free_partition(p)
+
+    def __del__(self):  # safety net; close() is the contract
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def split_block(
+    cols: np.ndarray, pids: np.ndarray, n_parts: int
+) -> List[Tuple[int, np.ndarray]]:
+    """One-shot fan-out of a block into ``[(pid, sub_block), ...]`` without
+    a PartitionedRelation — the recursive re-partition step of the grace
+    join, where sub-blocks are consumed immediately."""
+    order = np.argsort(pids, kind="stable")
+    scattered = np.ascontiguousarray(cols[:, order])
+    counts = np.bincount(pids[order], minlength=n_parts)
+    starts = np.concatenate(([0], np.cumsum(counts)))
+    return [
+        (int(p), scattered[:, starts[p] : starts[p + 1]])
+        for p in np.nonzero(counts)[0]
+    ]

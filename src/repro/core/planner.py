@@ -111,6 +111,11 @@ class PMergeJoin(PhysNode):
     # left-join condition compiled by the expression VM (planner-cached)
     post_program: Optional[object] = None
     sip_exports: Tuple[PSipFilter, ...] = ()
+    # mid-plan re-strategy eligibility (DESIGN.md §15): set by the planner
+    # only where no ancestor consumes this join's sort order, so the
+    # executor may lower an AdaptiveMergeJoin that switches merge->hash
+    # when the build-side actual blows the estimate. Fingerprint-neutral.
+    adaptive_ok: bool = dataclasses.field(default=False, compare=False)
 
 
 @dataclasses.dataclass
@@ -137,6 +142,13 @@ class PHashJoin(PhysNode):
     post_filter: Optional[A.Expr] = None
     post_program: Optional[object] = None
     sip_exports: Tuple[PSipFilter, ...] = ()
+    # partitioning as a tracked physical property (DESIGN.md §15): grace
+    # marks a budget-directed out-of-core build; grace_parts is the chosen
+    # top-level fan-out, exp_spill_bytes the costing-time spill expectation
+    # rendered by explain(). All fingerprint-neutral — strategy, not shape.
+    grace: bool = dataclasses.field(default=False, compare=False)
+    grace_parts: int = dataclasses.field(default=0, compare=False)
+    exp_spill_bytes: float = dataclasses.field(default=0.0, compare=False)
 
 
 @dataclasses.dataclass
@@ -172,6 +184,9 @@ class PProject(PhysNode):
 class PDistinct(PhysNode):
     child: "Phys"
     streaming_var: Optional[int]  # set => DISTINCT-via-skip applies
+    # budget-directed partitioned dedup (DESIGN.md §15)
+    grace: bool = dataclasses.field(default=False, compare=False)
+    grace_parts: int = dataclasses.field(default=0, compare=False)
 
 
 @dataclasses.dataclass
@@ -180,6 +195,9 @@ class PGroup(PhysNode):
     group_vars: Tuple[int, ...]
     aggs: Tuple[A.AggSpec, ...]
     streaming: bool  # single sorted group var
+    # budget-directed partitioned grouping (DESIGN.md §15)
+    grace: bool = dataclasses.field(default=False, compare=False)
+    grace_parts: int = dataclasses.field(default=0, compare=False)
 
 
 @dataclasses.dataclass
@@ -273,7 +291,10 @@ def phys_sorted_by(n: Phys) -> Optional[int]:
         # probe order survives; tracked left_outer (a join condition, or a
         # multi-key join whose packing may fall back to pair tracking)
         # emits its NULL-extended rows after each batch's expansions,
-        # breaking the interleave
+        # breaking the interleave. A grace build re-orders the probe side
+        # by partition, so it preserves nothing (DESIGN.md §15).
+        if n.grace:
+            return None
         if n.mode == "left_outer" and (
             n.post_filter is not None or len(n.keys) > 1
         ):
@@ -287,6 +308,10 @@ def phys_sorted_by(n: Phys) -> Optional[int]:
         sb = phys_sorted_by(n.child)
         return sb if sb in n.vars else None
     if isinstance(n, PDistinct):
+        if n.grace:
+            # partitioned dedup emits partition-major, never sorted —
+            # unlike SortDistinct whose np.unique output is ordered
+            return None
         return n.streaming_var or (
             phys_vars(n.child)[0] if len(phys_vars(n.child)) == 1 else None
         )
@@ -466,6 +491,9 @@ def annotate_fingerprints(n: Phys, canon: Dict[int, int]) -> None:
 # probe bookkeeping), a sort costs ~ n log2 n row moves. The constants only
 # need to be right about the crossover, not the absolute times.
 _HASH_BUILD_FACTOR = 4.0
+# extra per-row cost when an over-budget hash build must run as a grace
+# join (partition fan-out + spill I/O on both sides, DESIGN.md §15)
+_GRACE_SPILL_FACTOR = 2.0
 
 
 def _sort_cost(n: float) -> float:
@@ -482,10 +510,20 @@ class Planner:
         join_strategy: Optional[str] = None,
         sip: Optional[str] = None,
         feedback: Optional[telemetry.CardinalityFeedback] = None,
+        memory_budget: Optional[int] = None,
+        adaptive_join: Optional[str] = None,
     ):
         assert join_strategy in (None, "hash", "merge")
         assert sip in (None, "on", "off")
+        assert adaptive_join in (None, "on", "off")
         self.stats = stats
+        # partitioned substrate (DESIGN.md §15): bytes of working memory a
+        # single build/sort may assume resident. None disables every
+        # budget-aware decision — plans are byte-identical to pre-§15.
+        self.memory_budget = memory_budget
+        # "on" marks order-insensitive merge joins adaptive_ok so the
+        # executor can re-strategize merge->hash on observed misestimates
+        self.adaptive_join = adaptive_join
         # observed-cardinality feedback store (DESIGN.md §14): when set,
         # estimates at every choke point — leaf cards, join ordering, the
         # generic binary-join estimate — prefer recorded actuals over the
@@ -523,7 +561,104 @@ class Planner:
         annotate_fingerprints(phys, self._canon)
         if self.feedback is not None:
             self._apply_feedback(phys)
+        if self.memory_budget is not None:
+            # after feedback: budget decisions should see history-corrected
+            # cardinalities, not just the cost model's
+            self._budget_walk(phys)
+        if self.adaptive_join == "on":
+            self._mark_adaptive(phys, order_needed=False)
         return phys
+
+    # -- budget-aware physical properties (DESIGN.md §15) -----------------------
+
+    @staticmethod
+    def _est_bytes(n: Phys) -> float:
+        return max(n.est_rows, 0.0) * max(len(phys_vars(n)), 1) * 4.0
+
+    def _grace_parts_for(self, nbytes: float) -> int:
+        # average partition should fit half the budget (probe partitions
+        # share the other half); power of two, capped at 256
+        half = max(self.memory_budget // 2, 1)
+        p = 1
+        while p * half < nbytes and p < 256:
+            p *= 2
+        return max(p, 2)
+
+    def _budget_walk(self, n: Phys) -> None:
+        """Post-pass marking partitioning as a physical property: hash
+        builds whose estimated bytes exceed the budget become grace builds,
+        unsorted GROUP BY/DISTINCT over budget consume the partitioned
+        layout instead of the whole-input sort."""
+        for fld in ("child", "left", "right", "probe", "build"):
+            c = getattr(n, fld, None)
+            if isinstance(c, PhysNode):
+                self._budget_walk(c)
+        if isinstance(n, PHashJoin) and n.keys:
+            bb = self._est_bytes(n.build)
+            if bb > self.memory_budget:
+                n.grace = True
+                n.grace_parts = self._grace_parts_for(bb)
+                n.exp_spill_bytes = max(
+                    bb + self._est_bytes(n.probe) - self.memory_budget, 0.0
+                )
+        elif isinstance(n, PGroup) and n.group_vars:
+            if self._est_bytes(n.child) > self.memory_budget:
+                if n.streaming and isinstance(n.child, PSort):
+                    # the PSort existed only to force streaming grouping;
+                    # the partitioned path groups unsorted input directly
+                    n.child = n.child.child
+                    n.streaming = False
+                if not n.streaming:
+                    # naturally sorted streaming input needs no budget: it
+                    # reduces run-by-run without materializing
+                    n.grace = True
+                    n.grace_parts = self._grace_parts_for(
+                        self._est_bytes(n.child)
+                    )
+        elif isinstance(n, PDistinct) and n.streaming_var is None:
+            if self._est_bytes(n.child) > self.memory_budget:
+                n.grace = True
+                n.grace_parts = self._grace_parts_for(self._est_bytes(n.child))
+
+    def _mark_adaptive(self, n: Phys, order_needed: bool) -> None:
+        """Top-down order-sensitivity walk: a PMergeJoin is adaptive_ok
+        only when NO ancestor consumes its output order — switching
+        merge->hash mid-plan re-orders emission, so an order-consuming
+        parent (another merge join, a streaming group/distinct, ORDER BY
+        assumptions) must pin the strategy."""
+        if isinstance(n, PMergeJoin):
+            n.adaptive_ok = not order_needed
+            # both inputs feed a merge: their order is always consumed
+            self._mark_adaptive(n.left, True)
+            self._mark_adaptive(n.right, True)
+            return
+        if isinstance(n, (PSort, POrderBy)):
+            # a sort above re-establishes any order: children are free
+            self._mark_adaptive(n.child, False)
+            return
+        if isinstance(n, PGroup):
+            self._mark_adaptive(n.child, n.streaming)
+            return
+        if isinstance(n, PDistinct):
+            self._mark_adaptive(n.child, n.streaming_var is not None)
+            return
+        if isinstance(n, (PFilter, PHaving, PProject, PExtend, PSlice)):
+            self._mark_adaptive(n.child, order_needed)
+            return
+        if isinstance(n, (PHashJoin, PLookupJoin)):
+            # the probe side's order flows through; the build side is
+            # materialized wholesale, so its order never matters
+            self._mark_adaptive(n.probe, order_needed)
+            self._mark_adaptive(n.build, False)
+            return
+        if isinstance(n, (PCross, PUnion)):
+            self._mark_adaptive(n.left, False)
+            self._mark_adaptive(n.right, False)
+            return
+        for fld in ("child", "left", "right", "probe", "build"):
+            c = getattr(n, fld, None)
+            if isinstance(c, PhysNode):
+                self._mark_adaptive(c, True)  # unknown parent: be safe
 
     def _apply_feedback(self, n: Phys) -> None:
         """Final pass: override every node's estimate with its observed
@@ -897,6 +1032,13 @@ class Planner:
         if self.sip != "off" and self._sip_wanted(bn, pn):
             sip_f = max(min(d_p, d_b) / max(d_p, 1), 0.05)
         hash_cost = _HASH_BUILD_FACTOR * bn + pn * sip_f + est
+        if (
+            self.memory_budget is not None
+            and bn * max(len(phys_vars(build)), 1) * 4.0 > self.memory_budget
+        ):
+            # over-budget build goes grace: both sides pay a partition
+            # pass plus spill I/O (DESIGN.md §15 budget costing)
+            hash_cost += _GRACE_SPILL_FACTOR * (bn + pn)
         if self.join_strategy == "merge" or (
             self.join_strategy != "hash"
             and (l_sorted and r_sorted or merge_cost <= hash_cost)
@@ -1126,6 +1268,11 @@ class Planner:
         if not r_sorted:
             merge_cost += _sort_cost(rn)
         hash_cost = _HASH_BUILD_FACTOR * rn + ln + est
+        if (
+            self.memory_budget is not None
+            and rn * max(len(phys_vars(right)), 1) * 4.0 > self.memory_budget
+        ):
+            hash_cost += _GRACE_SPILL_FACTOR * (rn + ln)
         return "hash" if hash_cost < merge_cost else "merge"
 
     def _plan_binary_join(
@@ -1250,6 +1397,8 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
         return f"{pad}Sort({vname(n.var)})\n" + explain(n.child, var_table, indent + 1)
     if isinstance(n, PMergeJoin):
         amp = " AMPLIFYING" if n.amplifying else ""
+        if n.adaptive_ok:
+            amp += " adaptive"
         return (
             f"{pad}MergeJoin({vname(n.var)}, {n.mode}){amp} "
             f"{estf(n)}{sip_out(n)}\n"
@@ -1266,8 +1415,14 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
         )
     if isinstance(n, PHashJoin):
         keys = ", ".join(vname(k) for k in n.keys) if n.keys else "<const>"
+        grace = (
+            f" grace parts={n.grace_parts}"
+            f" spill≈{n.exp_spill_bytes / 1e6:.1f}MB"
+            if n.grace
+            else ""
+        )
         return (
-            f"{pad}HashJoin({keys}, {n.mode}) {estf(n)}{sip_out(n)}\n"
+            f"{pad}HashJoin({keys}, {n.mode}){grace} {estf(n)}{sip_out(n)}\n"
             + explain(n.probe, var_table, indent + 1)
             + "\n"
             + explain(n.build, var_table, indent + 1)
@@ -1288,10 +1443,16 @@ def explain(n: Phys, var_table: Optional[A.VarTable] = None, indent: int = 0) ->
     if isinstance(n, PProject):
         return f"{pad}Project\n" + explain(n.child, var_table, indent + 1)
     if isinstance(n, PDistinct):
-        kind = "streaming" if n.streaming_var is not None else "sort"
+        if n.grace:
+            kind = f"partitioned parts={n.grace_parts}"
+        else:
+            kind = "streaming" if n.streaming_var is not None else "sort"
         return f"{pad}Distinct[{kind}]\n" + explain(n.child, var_table, indent + 1)
     if isinstance(n, PGroup):
-        kind = "streaming" if n.streaming else "sort"
+        if n.grace:
+            kind = f"partitioned parts={n.grace_parts}"
+        else:
+            kind = "streaming" if n.streaming else "sort"
         return f"{pad}Group[{kind}]\n" + explain(n.child, var_table, indent + 1)
     if isinstance(n, POrderBy):
         return f"{pad}OrderBy\n" + explain(n.child, var_table, indent + 1)

@@ -168,6 +168,12 @@ class MetricsRegistry:
         self.kernels = KernelLedger()
         # summed per-request pool deltas (allocations, reuses, ...)
         self.pool: collections.Counter = collections.Counter()
+        # out-of-core / adaptive execution counters (DESIGN.md §15):
+        # grace-join + partitioned-aggregate spill volume and mid-plan
+        # strategy switches, summed across requests
+        self.spill_bytes = 0
+        self.spill_files = 0
+        self.adaptive_switches = 0
         self.started = time.monotonic()
 
     # -- feeding ------------------------------------------------------------
@@ -186,6 +192,9 @@ class MetricsRegistry:
         pool_delta: Optional[Dict[str, int]] = None,
         error: bool = False,
         ts: Optional[float] = None,
+        spill_bytes: int = 0,
+        spill_files: int = 0,
+        adaptive_switches: int = 0,
     ) -> None:
         self.n_requests += 1
         self.n_rows += int(n_rows)
@@ -197,6 +206,9 @@ class MetricsRegistry:
             self.kernels.merge(ledger)
         if pool_delta:
             self.pool.update(pool_delta)
+        self.spill_bytes += int(spill_bytes)
+        self.spill_files += int(spill_files)
+        self.adaptive_switches += int(adaptive_switches)
 
     # -- reading ------------------------------------------------------------
 
@@ -228,6 +240,11 @@ class MetricsRegistry:
             },
             "kernels": self.kernels.snapshot(),
             "pool": dict(self.pool),
+            "execution": {
+                "spill_bytes": self.spill_bytes,
+                "spill_files": self.spill_files,
+                "adaptive_switches": self.adaptive_switches,
+            },
             "latency_hist": self.latency_hist.snapshot(),
         }
 
@@ -304,6 +321,16 @@ class MetricsRegistry:
             "Batch-pool events (allocations, reuses, releases, bytes)",
             [({"event": k}, v) for k, v in sorted(self.pool.items())],
         )
+        w.counter("barq_spill_bytes",
+                  "Bytes spilled by grace joins and partitioned aggregates",
+                  [(None, self.spill_bytes)])
+        w.counter("barq_spill_files",
+                  "Spill files written by out-of-core operators",
+                  [(None, self.spill_files)])
+        w.counter("barq_adaptive_switches",
+                  "Mid-plan operator strategy switches (merge->hash, "
+                  "resident->grace)",
+                  [(None, self.adaptive_switches)])
         if workload is not None:
             top = workload.top_by_wall(top_n)
             w.counter(

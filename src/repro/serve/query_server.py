@@ -108,13 +108,16 @@ class QueryServer:
         latency = time.perf_counter() - t0
         tr = res.trace
         pool_delta = res.pool_delta()
+        stats = profiler.collect_stats(res.root)
         self.metrics.observe_request(
             latency,
             n_rows=res.n_rows,
             ledger=tr.ledger if tr is not None else None,
             pool_delta=pool_delta,
+            spill_bytes=int(stats.get("spill_bytes", 0)),
+            spill_files=int(stats.get("spill_files", 0)),
+            adaptive_switches=int(stats.get("adaptive_switches", 0)),
         )
-        stats = profiler.collect_stats(res.root)
         max_q = float(stats.get("max_q_error", 0.0))
         obs = self.workload.observe(
             qfp,

@@ -1,0 +1,266 @@
+"""Adaptive execution (paper §3.4 + DESIGN.md §15): AdaptiveBatchSizer
+controller properties, the AdaptiveMergeJoin mid-plan merge->hash
+re-strategy (operator- and engine-level, with the switch visible in
+EXPLAIN ANALYZE), and the planner's order-safety marking that gates it."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import Engine, EngineConfig, QuadStore
+from repro.core import planner as PL
+from repro.core.adaptive import AdaptiveBatchSizer
+from repro.core.operators.adaptive_join import AdaptiveMergeJoin
+from repro.core.operators.merge_join import MergeJoin
+from repro.core.operators.sort import MaterializedSource
+from repro.core.profiler import profile_tree
+
+# ---------------------------------------------------------------------------
+# AdaptiveBatchSizer controller (satellite: direct coverage)
+# ---------------------------------------------------------------------------
+
+
+def test_sizer_shrinks_on_skip_between_nexts():
+    s = AdaptiveBatchSizer(initial=256, min_size=16, max_size=1024)
+    assert s.size == 256
+    s.on_next()
+    s.on_skip()
+    assert s.on_next() == 128  # halved: skip() arrived since the last next()
+    s.on_skip()
+    s.on_skip()  # multiple skips in one gap still halve once
+    assert s.on_next() == 64
+
+
+def test_sizer_shrink_saturates_at_min_size():
+    s = AdaptiveBatchSizer(initial=32, min_size=16, max_size=1024)
+    for _ in range(10):
+        s.on_skip()
+        s.on_next()
+    assert s.size == 16
+
+
+def test_sizer_grow_streak_doubles_and_saturates_at_max():
+    s = AdaptiveBatchSizer(initial=64, min_size=16, max_size=256, grow_streak=2)
+    sizes = [s.on_next() for _ in range(12)]
+    # every grow_streak-th clean next() doubles: 64,128,128,256,...
+    assert sizes[1] == 128
+    assert sizes[3] == 256
+    assert all(x == 256 for x in sizes[4:])  # saturated at max_size
+    assert s.size == 256
+
+
+def test_sizer_reset_restores_initial_epoch():
+    s = AdaptiveBatchSizer(initial=64, min_size=16, max_size=1024, grow_streak=2)
+    s.on_next(), s.on_next(), s.on_next()
+    assert s.size > 64
+    s.on_skip()
+    s.on_reset()
+    assert s.size == 64
+    # the pre-reset skip must not bleed into the new epoch
+    assert s.on_next() == 64
+    assert s.on_next() == 128
+
+
+def test_sizer_disabled_is_inert():
+    s = AdaptiveBatchSizer(initial=64, enabled=False)
+    s.on_skip()
+    assert s.on_next() == 64
+    assert s.on_next() == 64
+
+
+def test_sizer_initial_clamped_into_bounds():
+    assert AdaptiveBatchSizer(initial=1, min_size=16).size == 16
+    assert AdaptiveBatchSizer(initial=1 << 20, max_size=4096).size == 4096
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveMergeJoin operator
+# ---------------------------------------------------------------------------
+
+
+def _src(var_ids, cols, sorted_var=None, batch=4096):
+    return MaterializedSource(
+        var_ids, np.asarray(cols, np.int32), sorted_var, batch_size=batch,
+    )
+
+
+def _drain_rows(op):
+    rows = []
+    for b in op.drain():
+        c = b.compact()
+        rows.extend(tuple(r) for r in c.to_rows_array().tolist())
+        c.release()
+    return sorted(rows)
+
+
+def _mk_inputs(seed=0, n=20_000):
+    rng = np.random.RandomState(seed)
+    l = np.stack([np.sort(rng.randint(0, 2000, n)),
+                  rng.randint(0, 100, n)]).astype(np.int32)
+    r = np.stack([rng.randint(0, 2000, n // 2),
+                  rng.randint(0, 100, n // 2)]).astype(np.int32)
+    return l, r
+
+
+@pytest.mark.parametrize("mode", ("inner", "left_outer", "semi", "anti"))
+def test_adaptive_join_parity_both_branches(mode):
+    l, r = _mk_inputs()
+    rs = r[:, np.argsort(r[0], kind="stable")]
+    base = _drain_rows(
+        MergeJoin(_src((0, 1), l, 0), _src((0, 2), rs, 0), 0, mode=mode)
+    )
+    # accurate estimate -> stays merge
+    stay = AdaptiveMergeJoin(
+        _src((0, 1), l, 0), _src((0, 2), r), 0, mode=mode,
+        est_build=float(r.shape[1]),
+    )
+    assert _drain_rows(stay) == base
+    assert stay.stats.extra["adaptive_switches"] == 0
+    assert "-> merge" in stay.stats.detail
+    # badly under-estimated build -> switches to hash, same multiset
+    switch = AdaptiveMergeJoin(
+        _src((0, 1), l, 0), _src((0, 2), r), 0, mode=mode, est_build=10.0,
+    )
+    assert _drain_rows(switch) == base
+    assert switch.stats.extra["adaptive_switches"] == 1
+    assert switch.stats.extra["adaptive_qerror"] >= 4.0
+    assert "-> hash" in switch.stats.detail
+
+
+def test_adaptive_join_overestimate_keeps_merge():
+    """Over-estimates mean the sort is cheaper than planned — switching
+    would only add hash-build cost."""
+    l, r = _mk_inputs(seed=1, n=4000)
+    j = AdaptiveMergeJoin(
+        _src((0, 1), l, 0), _src((0, 2), r), 0, est_build=1e9,
+    )
+    _drain_rows(j)
+    assert j.stats.extra["adaptive_switches"] == 0
+
+
+def test_adaptive_join_switch_visible_in_profile_tree():
+    l, r = _mk_inputs(seed=2, n=8000)
+    j = AdaptiveMergeJoin(
+        _src((0, 1), l, 0), _src((0, 2), r), 0, est_build=5.0,
+    )
+    _drain_rows(j)
+    rep = profile_tree(j)
+    assert "adaptive_switch" in rep
+    assert "-> hash" in rep
+    assert "HashJoin" in rep  # the chosen inner operator is in the tree
+
+
+# ---------------------------------------------------------------------------
+# planner gating + engine integration
+# ---------------------------------------------------------------------------
+
+
+def _store(n=3000, seed=7):
+    rng = np.random.RandomState(seed)
+    store = QuadStore()
+    for i in range(n):
+        store.add(f":s{i:05d}", ":knows", f":o{rng.randint(0, 400):05d}")
+    for i in range(n * 2 // 3):
+        store.add(f":t{i:05d}", ":likes", f":o{rng.randint(0, 400):05d}")
+        store.add(f":t{i:05d}", ":age", int(rng.randint(0, 100)))
+    return store.build()
+
+
+Q3 = "SELECT ?a ?x ?g { ?a :knows ?x . ?b :likes ?x . ?b :age ?g }"
+
+
+def _find(op, name):
+    if op.stats.name == name:
+        return op
+    for c in op.children():
+        found = _find(c, name)
+        if found is not None:
+            return found
+    return None
+
+
+def _force_misestimate(phys, est=10.0):
+    """Shrink the planner's build-side estimates in place — the forced
+    MISEST of the §15 acceptance test."""
+    if isinstance(phys, PL.PMergeJoin) and isinstance(phys.right, PL.PSort):
+        phys.right.est_rows = est
+    for f in dataclasses.fields(phys):
+        v = getattr(phys, f.name)
+        if isinstance(v, PL.Phys):
+            _force_misestimate(v, est)
+
+
+def test_planner_marks_order_free_merge_joins_adaptive():
+    store = _store()
+    eng = Engine(store, EngineConfig(join_strategy="merge", adaptive_join="on"))
+    node, _ = eng.parse(Q3)
+    ex = PL.explain(eng.plan(node))
+    assert "adaptive" in ex
+    # the knob off -> no marks, identical shape otherwise
+    eng_off = Engine(store, EngineConfig(join_strategy="merge"))
+    ex_off = PL.explain(eng_off.plan(node))
+    assert "adaptive" not in ex_off
+    assert ex.replace(" adaptive", "") == ex_off
+
+
+def test_planner_suppresses_adaptive_under_order_consumers():
+    """A merge join feeding ORDER BY on its sort var — or a streaming
+    group-by — must never re-strategize: order is load-bearing there."""
+    store = _store()
+    eng = Engine(store, EngineConfig(join_strategy="merge", adaptive_join="on"))
+    q = ("SELECT ?x (COUNT(*) AS ?c) { ?a :knows ?x . ?b :likes ?x } "
+         "GROUP BY ?x")
+    node, _ = eng.parse(q)
+    phys = eng.plan(node)
+    ex = PL.explain(phys)
+
+    def joins_feeding_streaming_groups_unmarked(n, order_needed):
+        if isinstance(n, PL.PMergeJoin) and order_needed:
+            assert not n.adaptive_ok, ex
+        for f in dataclasses.fields(n):
+            v = getattr(n, f.name)
+            if isinstance(v, PL.Phys):
+                need = order_needed or (
+                    isinstance(n, PL.PGroup) and n.streaming
+                )
+                joins_feeding_streaming_groups_unmarked(v, need)
+
+    joins_feeding_streaming_groups_unmarked(phys, False)
+
+
+def test_engine_forced_misestimate_switches_and_shows_in_explain_analyze():
+    store = _store()
+    base_eng = Engine(store, EngineConfig(join_strategy="merge"))
+    node, vt = base_eng.parse(Q3)
+    base = sorted(map(tuple,
+                      base_eng.execute_plan(base_eng.plan(node), vt)
+                      .rows.tolist()))
+
+    eng = Engine(store, EngineConfig(join_strategy="merge", adaptive_join="on"))
+    # accurate estimates: lowers to AdaptiveJoin, stays merge
+    phys = eng.plan(node)
+    res = eng.execute_plan(phys, vt)
+    assert sorted(map(tuple, res.rows.tolist())) == base
+    aj = _find(res.root, "AdaptiveJoin")
+    assert aj is not None and aj.stats.extra["adaptive_switches"] == 0
+
+    # forced misestimate: switches mid-plan, parity holds, EXPLAIN ANALYZE
+    # carries the evidence (ISSUE-9 acceptance)
+    phys2 = eng.plan(node)
+    _force_misestimate(phys2)
+    res2 = eng.execute_plan(phys2, vt)
+    assert sorted(map(tuple, res2.rows.tolist())) == base
+    aj2 = _find(res2.root, "AdaptiveJoin")
+    assert aj2.stats.extra["adaptive_switches"] == 1
+    analyze = res2.explain_analyze()
+    assert "adaptive_switch" in analyze
+    assert "-> hash" in analyze
+
+
+def test_adaptive_off_plans_unchanged_and_no_adaptive_ops():
+    store = _store()
+    eng = Engine(store, EngineConfig(join_strategy="merge"))
+    node, vt = eng.parse(Q3)
+    res = eng.execute_plan(eng.plan(node), vt)
+    assert _find(res.root, "AdaptiveJoin") is None

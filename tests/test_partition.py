@@ -1,0 +1,594 @@
+"""Partitioned-operator substrate (DESIGN.md §15): PartitionedRelation
+lifecycle + spill accounting, grace hash join parity (including the
+200k x 200k out-of-core acceptance workload vs the legacy row engine and
+recursive re-partitioning under seeded skew), partitioned GROUP BY /
+DISTINCT parity, budget-aware planning (grace marks in EXPLAIN, byte-
+identical plans with the budget off), the plan-fingerprint knob fold,
+and the spill-file leak fix on mid-query error paths."""
+
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Engine, EngineConfig, QuadStore
+from repro.core import planner as PL
+from repro.core.batch import BatchPool
+from repro.core.legacy.operators import RowHashJoin
+from repro.core.operators.adapters import BatchToRow
+from repro.core.operators.aggregate import (
+    PartitionedDistinct,
+    PartitionedGroupBy,
+    SortDistinct,
+    SortGroupBy,
+)
+from repro.core.operators.hash_join import HashJoin
+from repro.core.operators.sort import MaterializedSource
+from repro.core.partition import (
+    PartitionedRelation,
+    next_pow2,
+    partition_ids,
+    partition_ids_multi,
+    split_block,
+)
+
+MODES = ("inner", "left_outer", "semi", "anti")
+
+
+def _src(var_ids, cols, sorted_var=None, batch=4096, pool=None):
+    return MaterializedSource(
+        var_ids, np.asarray(cols, np.int32), sorted_var, batch_size=batch,
+        pool=pool,
+    )
+
+
+def _drain_rows(op):
+    rows = []
+    for b in op.drain():
+        c = b.compact()
+        rows.extend(tuple(r) for r in c.to_rows_array().tolist())
+        c.release()
+    return sorted(rows)
+
+
+def _spill_leaks(d):
+    return glob.glob(os.path.join(str(d), "*.npy"))
+
+
+# ---------------------------------------------------------------------------
+# partition-id kernels
+# ---------------------------------------------------------------------------
+
+
+def test_next_pow2():
+    assert [next_pow2(x) for x in (0, 1, 2, 3, 5, 8, 1000)] == [
+        1, 1, 2, 4, 8, 8, 1024,
+    ]
+
+
+def test_partition_ids_range_and_determinism():
+    rng = np.random.RandomState(0)
+    hi = rng.randint(0, 1 << 20, 5000).astype(np.int32)
+    lo = rng.randint(0, 1 << 20, 5000).astype(np.int32)
+    for n_parts in (2, 8, 64):
+        p = partition_ids(hi, lo, n_parts)
+        assert p.dtype == np.int32
+        assert p.min() >= 0 and p.max() < n_parts
+        assert np.array_equal(p, partition_ids(hi, lo, n_parts))
+
+
+def test_partition_ids_levels_decorrelated():
+    """Recursive re-partitioning only helps if level k+1 splits what level
+    k hashed together — same keys, different level, different spread."""
+    rng = np.random.RandomState(1)
+    hi = rng.randint(0, 1 << 20, 4000).astype(np.int32)
+    lo = rng.randint(0, 1 << 20, 4000).astype(np.int32)
+    p0 = partition_ids(hi, lo, 16, level=0)
+    # take one level-0 bucket and re-split it at level 1
+    m = p0 == int(p0[0])
+    p1 = partition_ids(hi[m], lo[m], 16, level=1)
+    assert len(np.unique(p1)) > 1
+
+
+def test_partition_ids_multi_equal_tuples_colocate():
+    rng = np.random.RandomState(2)
+    cols = [rng.randint(0, 50, 3000).astype(np.int32) for _ in range(3)]
+    p = partition_ids_multi(cols, 32)
+    assert p.min() >= 0 and p.max() < 32
+    # identical key tuples must land in the same partition
+    keys = np.stack(cols).T
+    for pid in np.unique(p[:100]):
+        rows = {tuple(r) for r in keys[p == pid].tolist()}
+        other = {tuple(r) for r in keys[p != pid].tolist()}
+        assert not rows & other
+
+
+def test_split_block_partition_of_input():
+    rng = np.random.RandomState(3)
+    cols = rng.randint(0, 100, (3, 2000)).astype(np.int32)
+    pids = partition_ids_multi([cols[0]], 8)
+    parts = split_block(cols, pids, 8)
+    assert sum(b.shape[1] for _, b in parts) == 2000
+    rebuilt = sorted(
+        tuple(r) for _, b in parts for r in b.T.tolist()
+    )
+    assert rebuilt == sorted(tuple(r) for r in cols.T.tolist())
+
+
+# ---------------------------------------------------------------------------
+# PartitionedRelation lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_partitioned_relation_round_trip(tmp_path):
+    rng = np.random.RandomState(4)
+    rel = PartitionedRelation(2, 8, spill_dir=str(tmp_path))
+    expect = []
+    for _ in range(5):
+        cols = rng.randint(0, 1000, (2, 700)).astype(np.int32)
+        pids = partition_ids_multi([cols[0]], 8)
+        rel.append(cols, pids)
+        expect.extend(tuple(r) for r in cols.T.tolist())
+    got = []
+    for p in range(8):
+        block = rel.load(p)
+        assert np.array_equal(
+            partition_ids_multi([block[0]], 8),
+            np.full(block.shape[1], p, np.int32),
+        )
+        got.extend(tuple(r) for r in block.T.tolist())
+    assert sorted(got) == sorted(expect)
+    rel.close()
+    assert not _spill_leaks(tmp_path)
+
+
+def test_partitioned_relation_spills_under_budget(tmp_path):
+    rng = np.random.RandomState(5)
+    rel = PartitionedRelation(2, 16, spill_dir=str(tmp_path), budget_bytes=8_000)
+    for _ in range(10):
+        cols = rng.randint(0, 1 << 16, (2, 2000)).astype(np.int32)
+        rel.append(cols, partition_ids_multi([cols[0]], 16))
+    assert rel.spill_files > 0 and rel.spill_bytes > 0
+    assert _spill_leaks(tmp_path)  # files actually on disk
+    total = sum(rel.load(p).shape[1] for p in range(16))
+    assert total == 20_000
+    # take() frees a partition's disk footprint eagerly
+    before = len(_spill_leaks(tmp_path))
+    spilled = [p for p in range(16) if rel._files[p]]
+    rel.take(spilled[0])
+    assert len(_spill_leaks(tmp_path)) < before
+    rel.close()
+    rel.close()  # idempotent
+    assert not _spill_leaks(tmp_path)
+
+
+def test_partitioned_relation_no_budget_stays_resident(tmp_path):
+    rel = PartitionedRelation(1, 4, spill_dir=str(tmp_path))
+    cols = np.arange(4000, dtype=np.int32).reshape(1, -1)
+    rel.append(cols, partition_ids_multi([cols[0]], 4))
+    assert rel.spill_files == 0
+    assert not _spill_leaks(tmp_path)
+    rel.close()
+
+
+# ---------------------------------------------------------------------------
+# grace hash join
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_grace_join_mode_parity(tmp_path, mode):
+    rng = np.random.RandomState(6)
+    n = 20_000
+    l = np.stack([rng.randint(0, 500, n), rng.randint(0, 1000, n)]).astype(np.int32)
+    r = np.stack([rng.randint(0, 700, n // 2), rng.randint(0, 1000, n // 2)]).astype(np.int32)
+    base = _drain_rows(HashJoin(_src((0, 1), l), _src((0, 2), r), (0,), mode))
+    grace = HashJoin(
+        _src((0, 1), l), _src((0, 2), r), (0,), mode,
+        memory_budget=10_000, spill_dir=str(tmp_path), grace=True,
+    )
+    assert _drain_rows(grace) == base
+    assert grace.stats.extra["spill_files"] > 0
+    grace.close()
+    assert not _spill_leaks(tmp_path)
+
+
+def test_grace_join_200k_parity_vs_legacy_row_engine(tmp_path):
+    """ISSUE-9 acceptance: 200k x 200k unsorted join, budget < 25% of the
+    build side's bytes, exact multiset parity vs the legacy row engine,
+    spill counters > 0."""
+    rng = np.random.RandomState(7)
+    n = 200_000
+    l = np.stack([rng.randint(0, n, n), rng.randint(0, 1000, n)]).astype(np.int32)
+    r = np.stack([rng.randint(0, n, n), rng.randint(0, 1000, n)]).astype(np.int32)
+    build_bytes = r.nbytes  # 200k rows x 2 vars x 4B = 1.6MB
+    budget = build_bytes // 5  # < 25% of the build side
+    grace = HashJoin(
+        _src((0, 1), l), _src((0, 2), r), (0,), "inner",
+        memory_budget=budget, spill_dir=str(tmp_path), grace=True,
+    )
+    got = _drain_rows(grace)
+    assert grace.stats.extra["spill_files"] > 0
+    assert grace.stats.extra["spill_bytes"] > 0
+    oracle = RowHashJoin(
+        BatchToRow(_src((0, 1), l)), BatchToRow(_src((0, 2), r)), (0,),
+    )
+    expect = []
+    while True:
+        row = oracle.next_row()
+        if row is None:
+            break
+        expect.append((row[0], row[1], row[2]))
+    assert got == sorted(expect)
+    grace.close()
+    assert not _spill_leaks(tmp_path)
+
+
+def test_grace_join_skew_triggers_recursive_repartition(tmp_path):
+    """80% of the build mass on one key: the top-level partition holding it
+    blows the budget and must re-partition at level 1."""
+    rng = np.random.RandomState(8)
+    n = 40_000
+    lk = np.where(rng.rand(n) < 0.8, 7, rng.randint(0, 2000, n)).astype(np.int32)
+    rk = np.where(rng.rand(n) < 0.8, 7, rng.randint(0, 2000, n)).astype(np.int32)
+    l = np.stack([lk, rng.randint(0, 10, n)]).astype(np.int32)
+    r = np.stack([rk, rng.randint(0, 10, n)]).astype(np.int32)
+    base = _drain_rows(
+        HashJoin(_src((0, 1), l), _src((0, 2), r), (0,), "semi")
+    )
+    grace = HashJoin(
+        _src((0, 1), l), _src((0, 2), r), (0,), "semi",
+        memory_budget=r.nbytes // 10, spill_dir=str(tmp_path), grace=True,
+    )
+    assert _drain_rows(grace) == base
+    assert grace.stats.extra["repartitions"] > 0
+    grace.close()
+    assert not _spill_leaks(tmp_path)
+
+
+def test_runtime_switch_to_grace_on_oversized_build(tmp_path):
+    """No planner directive (grace=None) — the operator discovers at build
+    time that the materialized block exceeds the budget and re-partitions
+    it instead of building resident."""
+    rng = np.random.RandomState(9)
+    n = 30_000
+    l = np.stack([rng.randint(0, n, n), rng.randint(0, 5, n)]).astype(np.int32)
+    r = np.stack([rng.randint(0, n, n), rng.randint(0, 5, n)]).astype(np.int32)
+    base = _drain_rows(HashJoin(_src((0, 1), l), _src((0, 2), r), (0,)))
+    j = HashJoin(
+        _src((0, 1), l), _src((0, 2), r), (0,),
+        memory_budget=r.nbytes // 4, spill_dir=str(tmp_path),
+    )
+    assert _drain_rows(j) == base
+    assert j.stats.extra["adaptive_switches"] == 1
+    j.close()
+    assert not _spill_leaks(tmp_path)
+
+
+def test_grace_join_multi_key_parity(tmp_path):
+    rng = np.random.RandomState(10)
+    n = 15_000
+    l = np.stack([rng.randint(0, 60, n), rng.randint(0, 60, n),
+                  rng.randint(0, 100, n)]).astype(np.int32)
+    r = np.stack([rng.randint(0, 60, n), rng.randint(0, 60, n),
+                  rng.randint(0, 100, n)]).astype(np.int32)
+    base = _drain_rows(
+        HashJoin(_src((0, 1, 2), l), _src((0, 1, 3), r), (0, 1))
+    )
+    grace = HashJoin(
+        _src((0, 1, 2), l), _src((0, 1, 3), r), (0, 1),
+        memory_budget=8_000, spill_dir=str(tmp_path), grace=True,
+    )
+    assert _drain_rows(grace) == base
+    grace.close()
+    assert not _spill_leaks(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# partitioned GROUP BY / DISTINCT
+# ---------------------------------------------------------------------------
+
+
+def _agg_store_cols(rng, n):
+    return np.stack([
+        rng.randint(0, 40, n), rng.randint(0, 25, n), rng.randint(0, 500, n),
+    ]).astype(np.int32)
+
+
+def test_partitioned_group_by_parity(tmp_path):
+    from repro.core.algebra import AggSpec
+    from repro.core.dictionary import Dictionary
+
+    rng = np.random.RandomState(11)
+    cols = _agg_store_cols(rng, 30_000)
+    aggs = (
+        AggSpec("count", None, False, 10),
+        AggSpec("sum", 2, False, 11),
+        AggSpec("sum", 2, True, 12),
+        AggSpec("min", 2, False, 13),
+    )
+    d = Dictionary()
+    for v in range(500):
+        d.encode(int(v))  # agg-var codes resolve to numerics
+    base = _drain_rows(
+        SortGroupBy(_src((0, 1, 2), cols), (0, 1), aggs, d)
+    )
+    part = PartitionedGroupBy(
+        _src((0, 1, 2), cols), (0, 1), aggs, d,
+        memory_budget=10_000, spill_dir=str(tmp_path), n_parts=8,
+    )
+    assert _drain_rows(part) == base
+    assert part.stats.extra["spill_files"] > 0
+    part.close()
+    assert not _spill_leaks(tmp_path)
+
+
+def test_partitioned_distinct_parity(tmp_path):
+    rng = np.random.RandomState(12)
+    cols = _agg_store_cols(rng, 30_000)[:2]
+    base = _drain_rows(SortDistinct(_src((0, 1), cols)))
+    part = PartitionedDistinct(
+        _src((0, 1), cols),
+        memory_budget=8_000, spill_dir=str(tmp_path), n_parts=8,
+    )
+    assert _drain_rows(part) == base
+    assert part.stats.extra["spill_files"] > 0
+    part.close()
+    assert not _spill_leaks(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# planner + engine integration
+# ---------------------------------------------------------------------------
+
+
+def _join_store(n=4000, seed=13):
+    rng = np.random.RandomState(seed)
+    store = QuadStore()
+    for i in range(n):
+        store.add(f":s{i:05d}", ":knows", f":o{rng.randint(0, 50):05d}")
+        store.add(f":s{i:05d}", ":name", f":n{rng.randint(0, 30):05d}")
+        store.add(f":t{i:05d}", ":likes", f":o{rng.randint(0, 50):05d}")
+        store.add(f":t{i:05d}", ":age", int(rng.randint(0, 90)))
+    return store.build()
+
+
+QUERIES = (
+    "SELECT ?s ?o ?n { ?s :knows ?o . ?s :name ?n }",
+    "SELECT ?o (COUNT(*) AS ?c) { ?s :knows ?o . ?s :name ?n } GROUP BY ?o",
+    "SELECT DISTINCT ?o ?n { ?s :knows ?o . ?s :name ?n }",
+    "SELECT ?s ?o { ?s :knows ?o } ORDER BY ?o LIMIT 17",
+)
+
+
+def _run(store, cfg, q):
+    eng = Engine(store, cfg)
+    node, vt = eng.parse(q)
+    phys = eng.plan(node)
+    res = eng.execute_plan(phys, vt)
+    return phys, sorted(map(tuple, res.rows.tolist()))
+
+
+def test_memory_budget_none_plans_byte_identical():
+    """The whole §15 layer must be invisible until the knob is set."""
+    store = _join_store()
+    for q in QUERIES:
+        eng_off = Engine(store, EngineConfig())
+        eng_none = Engine(store, EngineConfig(spill_dir="/tmp", adaptive_join="off"))
+        node, _ = eng_off.parse(q)
+        assert PL.explain(eng_off.plan(node)) == PL.explain(eng_none.plan(node))
+
+
+def test_engine_grace_join_explain_and_parity(tmp_path):
+    store = _join_store()
+    q = QUERIES[0]
+    _, base = _run(store, EngineConfig(), q)
+    phys, rows = _run(
+        store,
+        EngineConfig(spill_dir=str(tmp_path), memory_budget=20_000,
+                     join_strategy="hash"),
+        q,
+    )
+    ex = PL.explain(phys)
+    assert "grace parts=" in ex and "spill≈" in ex
+    assert rows == base
+    assert not _spill_leaks(tmp_path)
+
+
+def test_engine_partitioned_group_and_distinct_parity(tmp_path):
+    store = _join_store()
+    for q, marker in ((QUERIES[1], "Group[partitioned"),
+                      (QUERIES[2], "Distinct[partitioned")):
+        _, base = _run(store, EngineConfig(), q)
+        phys, rows = _run(
+            store, EngineConfig(spill_dir=str(tmp_path), memory_budget=20_000), q,
+        )
+        assert marker in PL.explain(phys)
+        assert rows == base
+        assert not _spill_leaks(tmp_path)
+
+
+def test_budget_costing_penalizes_oversized_hash_builds():
+    """Cost-based strategy choice must see the spill penalty: with a tiny
+    budget the planner still plans, and grace marks land only on joins
+    whose build estimate exceeds the budget."""
+    store = _join_store()
+    eng = Engine(store, EngineConfig(memory_budget=1 << 30))  # huge budget
+    node, _ = eng.parse(QUERIES[0])
+    assert "grace" not in PL.explain(eng.plan(node))
+
+
+def test_plan_fingerprint_covers_budget_and_adaptive_knobs():
+    """Satellite 2: a plan cache keyed without these knobs would serve a
+    resident-shaped plan after the budget changed."""
+    store = _join_store(n=50)
+    fps = [
+        Engine(store, cfg).plan_fingerprint()
+        for cfg in (
+            EngineConfig(),
+            EngineConfig(memory_budget=1_000_000),
+            EngineConfig(memory_budget=2_000_000),
+            EngineConfig(adaptive_join="on"),
+            EngineConfig(memory_budget=1_000_000, adaptive_join="on"),
+        )
+    ]
+    assert len(set(fps)) == len(fps)
+
+
+def test_query_server_plan_cache_no_collision_across_budget(tmp_path):
+    """Same query text, different memory budget -> different cache entries
+    (the stale-plan collision the fingerprint fold prevents)."""
+    from repro.serve.query_server import QueryServer
+
+    store = _join_store()
+    q = QUERIES[0]
+    srv1 = QueryServer(store, EngineConfig())
+    srv1.execute("q", q)
+    srv2 = QueryServer(
+        store, EngineConfig(spill_dir=str(tmp_path), memory_budget=20_000,
+                            join_strategy="hash"),
+    )
+    srv2.execute("q", q)
+    (p1, _, _), = srv1._plan_cache.values()
+    (p2, _, _), = srv2._plan_cache.values()
+    assert set(srv1._plan_cache) != set(srv2._plan_cache)
+    assert PL.explain(p1) != PL.explain(p2)
+
+
+def test_serve_metrics_capture_spill_counters(tmp_path):
+    from repro.serve.metrics import validate_openmetrics
+    from repro.serve.query_server import QueryServer
+
+    store = _join_store()
+    srv = QueryServer(
+        store, EngineConfig(spill_dir=str(tmp_path), memory_budget=20_000,
+                            join_strategy="hash"),
+    )
+    srv.execute("q", QUERIES[0])
+    snap = srv.metrics.snapshot()
+    assert snap["execution"]["spill_files"] > 0
+    assert snap["execution"]["spill_bytes"] > 0
+    om = srv.metrics.to_openmetrics()
+    validate_openmetrics(om)
+    assert "barq_spill_bytes_total" in om
+    assert "barq_adaptive_switches_total" in om
+    assert not _spill_leaks(tmp_path)
+
+
+# ---------------------------------------------------------------------------
+# spill-file lifecycle on error paths (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+class _Bomb(RuntimeError):
+    pass
+
+
+def _failing_project(monkeypatch, after_batches):
+    """Make ProjectOp blow up after N batches — a downstream consumer dying
+    mid-query, while upstream operators have live spill state."""
+    from repro.core.operators import simple
+
+    orig = simple.ProjectOp._next
+    state = {"n": 0}
+
+    def boom(self):
+        if state["n"] >= after_batches:
+            raise _Bomb("downstream failure")
+        state["n"] += 1
+        return orig(self)
+
+    monkeypatch.setattr(simple.ProjectOp, "_next", boom)
+
+
+def _count_window_spills(monkeypatch):
+    from repro.core.operators.merge_join import _Window
+
+    counter = {"n": 0}
+    orig = _Window._spill
+
+    def counting(self):
+        counter["n"] += 1
+        return orig(self)
+
+    monkeypatch.setattr(_Window, "_spill", counting)
+    return counter
+
+
+def _count_rel_spills(monkeypatch):
+    counter = {"n": 0}
+    orig = PartitionedRelation._spill_partition
+
+    def counting(self, *a, **kw):
+        counter["n"] += 1
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(PartitionedRelation, "_spill_partition", counting)
+    return counter
+
+
+def test_merge_join_spill_not_leaked_on_error(tmp_path, monkeypatch):
+    from repro.core.operators import merge_join
+
+    monkeypatch.setattr(merge_join, "_SPILL_THRESHOLD_ROWS", 64)
+    spills = _count_window_spills(monkeypatch)
+    _failing_project(monkeypatch, 1)
+    store = _join_store()
+    eng = Engine(
+        store,
+        EngineConfig(spill_dir=str(tmp_path), join_strategy="merge"),
+    )
+    q = "SELECT ?a ?x ?g { ?a :knows ?x . ?b :likes ?x . ?b :age ?g }"
+    node, vt = eng.parse(q)
+    phys = eng.plan(node)
+    assert "MergeJoin" in PL.explain(phys)
+    with pytest.raises(_Bomb):
+        eng.execute_plan(phys, vt)
+    assert spills["n"] > 0  # the failure really interrupted spilled state
+    assert not _spill_leaks(tmp_path)
+
+
+def test_grace_join_spill_not_leaked_on_error(tmp_path, monkeypatch):
+    spills = _count_rel_spills(monkeypatch)
+    _failing_project(monkeypatch, 1)
+    store = _join_store()
+    eng = Engine(
+        store,
+        EngineConfig(spill_dir=str(tmp_path), memory_budget=20_000,
+                     join_strategy="hash"),
+    )
+    node, vt = eng.parse(QUERIES[0])
+    phys = eng.plan(node)
+    assert "grace" in PL.explain(phys)
+    with pytest.raises(_Bomb):
+        eng.execute_plan(phys, vt)
+    assert spills["n"] > 0
+    assert not _spill_leaks(tmp_path)
+
+
+def test_partitioned_group_by_spill_not_leaked_on_error(tmp_path, monkeypatch):
+    """Die *inside* the partition-at-a-time aggregation loop: unconsumed
+    partitions still hold spill files when the exception unwinds."""
+    spills = _count_rel_spills(monkeypatch)
+    orig = SortGroupBy._aggregate_block
+    calls = {"n": 0}
+
+    def bomb(self, cols, need, avars):
+        calls["n"] += 1
+        if calls["n"] >= 2:
+            raise _Bomb("mid-aggregation failure")
+        return orig(self, cols, need, avars)
+
+    monkeypatch.setattr(SortGroupBy, "_aggregate_block", bomb)
+    store = _join_store()
+    eng = Engine(
+        store, EngineConfig(spill_dir=str(tmp_path), memory_budget=8_000),
+    )
+    node, vt = eng.parse(QUERIES[1])
+    phys = eng.plan(node)
+    assert "Group[partitioned" in PL.explain(phys)
+    with pytest.raises(_Bomb):
+        eng.execute_plan(phys, vt)
+    assert spills["n"] > 0
+    assert not _spill_leaks(tmp_path)

@@ -350,15 +350,18 @@ def test_metrics_registry_empty_snapshot_schema():
     snap = MetricsRegistry().snapshot()
     # pinned key schema: exporters and the report tool key into these
     assert set(snap) == {"uptime_s", "requests", "plan_cache", "kernels",
-                         "pool", "latency_hist"}
+                         "pool", "latency_hist", "execution"}
     assert set(snap["requests"]) == {"count", "rows", "errors", "qps",
                                      "mean_ms", "p50_ms", "p99_ms"}
     assert set(snap["plan_cache"]) == {"hits", "misses", "hit_rate"}
     assert set(snap["latency_hist"]) == {"buckets", "sum", "count"}
+    assert set(snap["execution"]) == {"spill_bytes", "spill_files",
+                                      "adaptive_switches"}
     # zero-traffic server: all-zero, never NaN/ZeroDivisionError
     assert snap["requests"]["qps"] == 0.0
     assert snap["requests"]["p99_ms"] == 0.0
     assert snap["plan_cache"]["hit_rate"] == 0.0
+    assert snap["execution"]["spill_bytes"] == 0
     json.dumps(snap)
 
 
