@@ -1,12 +1,19 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test smoke bench regression stress
+.PHONY: check test smoke bench regression stress lint
 
 # tier-1 gate: full test suite + the operator microbenchmark suite as an
 # allocation/perf smoke test (see DESIGN.md §6) + the cross-PR benchmark
 # regression check over the committed BENCH_PR*.json files (DESIGN.md §12)
-check: test smoke regression
+# + barqlint over the merged tree (DESIGN.md §16)
+check: lint test smoke regression
+
+# barqlint (DESIGN.md §16): AST static analysis of pool ownership, kernel
+# registry, OpStats and dtype discipline. Exit 1 on any finding; whole
+# run stays under 10 seconds (asserted by tests/test_analysis.py).
+lint:
+	$(PYTHON) -m repro.analysis.lint src benchmarks examples tests
 
 test:
 	$(PYTHON) -m pytest -q

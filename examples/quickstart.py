@@ -284,3 +284,37 @@ assert grace_res.n_rows == resident.execute(GRACE_Q).n_rows
 assert "grace" in grace_engine.explain(GRACE_Q)
 print(f"same {grace_res.n_rows} rows as the resident build, "
       f"spill dir empty again: {not __import__('glob').glob(spill_dir + '/*.npy')}")
+
+# 12. correctness tooling (DESIGN.md §16): three machine-checked layers.
+# barqlint statically checks pool/kernel/stats/dtype discipline over the
+# tree (`make lint`); EngineConfig.verify_plans re-derives the planner's
+# structural invariants on every plan (sortedness under merge joins,
+# SIP soundness, grace/adaptive gating) and raises naming the node;
+# EngineConfig.sanitize swaps the arena for a SanitizingBatchPool that
+# poisons released buffers and turns ownership-protocol violations into
+# immediate SanitizeErrors attributed to the allocating operator. CI
+# runs the whole suite with both knobs on (BARQ_SANITIZE=1
+# BARQ_VERIFY_PLANS=1) — here we just show the pieces working.
+from repro.analysis.lint import RULES, lint_paths
+from repro.analysis.sanitize import SanitizeError
+
+hardened = Engine(store, EngineConfig(
+    engine="barq", sanitize=True, verify_plans=True))
+hr = hardened.execute(QUERY)
+c = hardened.pool.counters()
+assert c["live"] == 0 and c["allocs"] == c["releases"] + c["pooled"]
+assert hardened.pool.leaks() == []
+print(f"\nhardened run: {hr.n_rows} rows, pool conservation {c}")
+
+from repro.core.batch import ColumnBatch
+
+victim = ColumnBatch.from_columns((0,), [np.arange(4, dtype=np.int32)],
+                                  pool=hardened.pool)
+victim.release()
+try:
+    victim.column(0)
+except SanitizeError as e:
+    print(f"use-after-release caught: {str(e)[:72]}...")
+
+print(f"barqlint: {len(RULES)} rules, "
+      f"{len(lint_paths([__import__('pathlib').Path('src')]))} findings on src/")

@@ -1,0 +1,55 @@
+"""Correctness tooling for the batch engine (DESIGN.md §16).
+
+Three layers, each machine-checking a contract that previously lived only
+in review:
+
+  * ``repro.analysis.lint`` — **barqlint**, an AST-based static analyzer
+    over the source tree: pool ownership discipline, kernel-registry
+    discipline, OpStats conventions, dtype discipline. Run as
+    ``python -m repro.analysis.lint src/``.
+  * ``repro.analysis.plan_verify`` — **PlanVerifier**, a post-planning
+    structural checker the Engine runs under ``EngineConfig.verify_plans``:
+    sortedness claims, SIP soundness, grace/adaptive gating, fingerprint
+    and schema coverage.
+  * ``repro.analysis.sanitize`` — **pool sanitizer**, a runtime shadow
+    ownership tracker enabled by ``EngineConfig.sanitize``: poisoned
+    releases, double-release / use-after-release errors attributed to the
+    allocating operator, and leak reports at drain.
+"""
+
+# Lazy re-exports: ``python -m repro.analysis.lint`` executes the package
+# __init__ first, and an eager ``from .lint import ...`` here would leave a
+# half-initialized module in sys.modules for runpy to warn about.
+_EXPORTS = {
+    "Diagnostic": "lint",
+    "RULES": "lint",
+    "lint_file": "lint",
+    "lint_paths": "lint",
+    "PlanInvariantError": "plan_verify",
+    "verify_plan": "plan_verify",
+    "PoolSanitizer": "sanitize",
+    "SanitizeError": "sanitize",
+    "SanitizingBatchPool": "sanitize",
+}
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f"repro.analysis.{mod}"), name)
+
+
+__all__ = [
+    "Diagnostic",
+    "RULES",
+    "lint_file",
+    "lint_paths",
+    "PlanInvariantError",
+    "verify_plan",
+    "PoolSanitizer",
+    "SanitizeError",
+    "SanitizingBatchPool",
+]

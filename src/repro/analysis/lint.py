@@ -1,0 +1,683 @@
+"""barqlint — static invariant analyzer for the batch engine.
+
+The batch pipeline is correct only while every operator honors contracts
+the type system can't see: the BatchPool release()/MOVE ownership protocol
+(DESIGN.md §2.3), the kernel trio + ledger convention (§13), the OpStats
+``extra`` naming scheme, and dtype discipline on kernel hot paths. barqlint
+walks the AST (stdlib ``ast``, no dependencies) and turns violations into
+file:line diagnostics. Run it as::
+
+    python -m repro.analysis.lint src/
+
+Exit status is the number of files with findings capped at 1, so CI can
+gate on it. Individual findings are suppressed with a trailing comment on
+the offending line::
+
+    buf = ColumnBatch.alloc(vars, cap, pool)  # barqlint: disable=POOL001
+
+and whole files opt out of a rule with ``# barqlint: disable-file=RULE``
+on any line. The rule catalog lives in DESIGN.md §16; each rule's
+contract is proven live by a seeded-violation fixture under
+``tests/fixtures/lint_bad/`` (excluded from the default walk).
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+# directories never linted by the default walk: the seeded-violation
+# corpus would otherwise fail CI by design
+DEFAULT_EXCLUDES: Tuple[str, ...] = ("lint_bad", "__pycache__", ".git")
+
+_SNAKE = re.compile(r"^[a-z][a-z0-9_]*$")
+_SUPPRESS = re.compile(
+    r"#\s*barqlint:\s*disable(?P<file>-file)?\s*=\s*(?P<rules>[A-Z0-9_,\s]+)"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+class FileContext:
+    """One parsed source file plus everything rules need to scope
+    themselves: path predicates and the suppression table."""
+
+    def __init__(self, path: Path, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        parts = path.as_posix()
+        self.in_kernels = "/kernels/" in parts or parts.endswith("kernels/ops.py")
+        self.is_kernel_ops = parts.endswith("kernels/ops.py")
+        self.is_vecops = path.name == "vecops.py"
+        self.line_suppress: Dict[int, Set[str]] = {}
+        self.file_suppress: Set[str] = set()
+        for i, line in enumerate(source.splitlines(), start=1):
+            m = _SUPPRESS.search(line)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group("rules").split(",") if r.strip()}
+            if m.group("file"):
+                self.file_suppress |= rules
+            else:
+                self.line_suppress.setdefault(i, set()).update(rules)
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        if rule in self.file_suppress:
+            return True
+        return rule in self.line_suppress.get(line, set())
+
+    def diag(self, rule: str, node_or_line, message: str) -> Diagnostic:
+        line = (
+            node_or_line
+            if isinstance(node_or_line, int)
+            else getattr(node_or_line, "lineno", 1)
+        )
+        return Diagnostic(rule, self.path.as_posix(), line, message)
+
+
+# ---------------------------------------------------------------------------
+# rule registry
+# ---------------------------------------------------------------------------
+
+RuleFn = Callable[[FileContext], Iterable[Diagnostic]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    summary: str
+    check: RuleFn
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, summary: str) -> Callable[[RuleFn], RuleFn]:
+    def deco(fn: RuleFn) -> RuleFn:
+        RULES[rule_id] = Rule(rule_id, summary, fn)
+        return fn
+
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+# constructors whose result owns pooled buffers (DESIGN.md §2.3): the
+# assigned name must be consumed — released, returned, stored, or moved
+_ACQUIRERS = ("from_columns", "alloc", "with_mask", "compact")
+
+
+def _is_acquire_call(node: ast.AST, include_next_batch: bool = False) -> bool:
+    if not isinstance(node, ast.Call) or not isinstance(node.func, ast.Attribute):
+        return False
+    name = node.func.attr
+    if name in _ACQUIRERS:
+        return True
+    return include_next_batch and name == "next_batch"
+
+
+def _functions(tree: ast.AST) -> Iterator[ast.FunctionDef]:
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _name_loads(fn: ast.AST, name: str) -> List[ast.Name]:
+    return [
+        n
+        for n in ast.walk(fn)
+        if isinstance(n, ast.Name) and n.id == name and isinstance(n.ctx, ast.Load)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# pool discipline
+# ---------------------------------------------------------------------------
+
+
+@rule("POOL001", "pooled batch acquired but never consumed")
+def _pool001(ctx: FileContext) -> Iterator[Diagnostic]:
+    """A name bound to a buffer-acquiring constructor (``from_columns``,
+    ``alloc``, ``with_mask``, ``compact``) that is never referenced again
+    leaks its buffers: nothing can release or MOVE them. A bare acquiring
+    call whose result is discarded is the same bug without the name."""
+    for fn in _functions(ctx.tree):
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Expr) and _is_acquire_call(stmt.value):
+                yield ctx.diag(
+                    "POOL001",
+                    stmt,
+                    f"result of .{stmt.value.func.attr}() is discarded; the "
+                    "acquired buffers can never be released",
+                )
+                continue
+            if not isinstance(stmt, ast.Assign) or len(stmt.targets) != 1:
+                continue
+            target = stmt.targets[0]
+            if not isinstance(target, ast.Name) or not _is_acquire_call(stmt.value):
+                continue
+            end = getattr(stmt, "end_lineno", stmt.lineno)
+            later = [
+                n
+                for n in _name_loads(fn, target.id)
+                if n.lineno > end
+                or (n.lineno == stmt.lineno and n.col_offset > target.col_offset)
+            ]
+            # loads inside the acquiring expression itself don't count
+            inner = {id(n) for n in ast.walk(stmt.value)}
+            later = [n for n in later if id(n) not in inner]
+            if not later:
+                yield ctx.diag(
+                    "POOL001",
+                    stmt,
+                    f"'{target.id}' is bound to .{stmt.value.func.attr}() but "
+                    "never consumed (release/return/store) afterwards",
+                )
+
+
+@rule("POOL002", "operator buffers batches across calls without _close")
+def _pool002(ctx: FileContext) -> Iterator[Diagnostic]:
+    """An operator class whose ``_next`` machinery parks acquired batches
+    on ``self`` holds pooled buffers between calls; without a ``_close``
+    (or ``close``) hook, ``close_tree`` cannot reclaim them when the query
+    ends early (LIMIT, error) — a structural leak."""
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        methods = {
+            m.name: m
+            for m in node.body
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        if "_next" not in methods:
+            continue
+        if "_close" in methods or "close" in methods:
+            continue
+        offender: Optional[ast.AST] = None
+        for m in methods.values():
+            acquired: Set[str] = set()
+            for stmt in ast.walk(m):
+                if (
+                    isinstance(stmt, ast.Assign)
+                    and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and _is_acquire_call(stmt.value, include_next_batch=True)
+                ):
+                    acquired.add(stmt.targets[0].id)
+                if not isinstance(stmt, ast.Assign):
+                    continue
+                stores_self = any(
+                    isinstance(t, ast.Attribute)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id == "self"
+                    for t in stmt.targets
+                )
+                if not stores_self:
+                    continue
+                holds_batch = any(
+                    _is_acquire_call(v, include_next_batch=True)
+                    or (
+                        isinstance(v, ast.Name)
+                        and isinstance(v.ctx, ast.Load)
+                        and v.id in acquired
+                    )
+                    for v in ast.walk(stmt.value)
+                )
+                if holds_batch:
+                    offender = stmt
+                    break
+            if offender is not None:
+                break
+        if offender is not None:
+            yield ctx.diag(
+                "POOL002",
+                node,
+                f"class '{node.name}' parks acquired batches on self "
+                f"(line {offender.lineno}) but defines no _close/close hook "
+                "for close_tree to reclaim them",
+            )
+
+
+def _guarded_nodes(fn: ast.AST) -> Set[int]:
+    """ids of statements nested under an If or Try inside ``fn`` — the
+    shapes that make a second close() call a no-op."""
+    guarded: Set[int] = set()
+
+    def mark(node: ast.AST) -> None:
+        for child in ast.walk(node):
+            guarded.add(id(child))
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.If):
+            for stmt in node.body + node.orelse:
+                mark(stmt)
+        elif isinstance(node, ast.Try):
+            for stmt in node.body + node.finalbody:
+                mark(stmt)
+            for h in node.handlers:
+                for stmt in h.body:
+                    mark(stmt)
+    return guarded
+
+
+@rule("POOL003", "close() is not idempotent: unguarded resource mutation")
+def _pool003(ctx: FileContext) -> Iterator[Diagnostic]:
+    """``close_tree`` may visit an operator more than once (shared
+    subtrees, retry paths), so ``close``/``_close`` must be idempotent.
+    ``self.X.release()`` / ``self.X.unlink()`` straight at body level —
+    with no guard and no ``self.X = None`` clear — fails or double-frees
+    on the second call. Calls to ``.close()`` are exempt: close is
+    idempotent by this very contract."""
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for m in node.body:
+            if not isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if m.name not in ("close", "_close"):
+                continue
+            guarded = _guarded_nodes(m)
+            cleared: Set[str] = {
+                t.attr
+                for stmt in ast.walk(m)
+                if isinstance(stmt, ast.Assign)
+                for t in stmt.targets
+                if isinstance(t, ast.Attribute)
+                and isinstance(t.value, ast.Name)
+                and t.value.id == "self"
+            }
+            for stmt in ast.walk(m):
+                if id(stmt) in guarded or not isinstance(stmt, ast.Expr):
+                    continue
+                call = stmt.value
+                if not isinstance(call, ast.Call):
+                    continue
+                f = call.func
+                if not isinstance(f, ast.Attribute) or f.attr not in (
+                    "release",
+                    "unlink",
+                ):
+                    continue
+                obj = f.value
+                if not (
+                    isinstance(obj, ast.Attribute)
+                    and isinstance(obj.value, ast.Name)
+                    and obj.value.id == "self"
+                ):
+                    continue
+                if obj.attr in cleared:
+                    continue  # self.X.release(); self.X = None — idempotent
+                yield ctx.diag(
+                    "POOL003",
+                    stmt,
+                    f"'self.{obj.attr}.{f.attr}()' in {node.name}.{m.name} is "
+                    "neither guarded nor followed by clearing the attribute; "
+                    "a second close() double-frees",
+                )
+
+
+# ---------------------------------------------------------------------------
+# kernel-registry discipline
+# ---------------------------------------------------------------------------
+
+
+def _public_kernels(ctx: FileContext) -> Iterator[ast.FunctionDef]:
+    """Public kernel wrappers in kernels/ops.py: top-level defs with a
+    ``backend`` parameter. Helpers (``dispatch_count``, ...) have no
+    backend knob and are exempt."""
+    for node in ctx.tree.body:
+        if not isinstance(node, ast.FunctionDef) or node.name.startswith("_"):
+            continue
+        argnames = [a.arg for a in node.args.args + node.args.kwonlyargs]
+        if "backend" in argnames:
+            yield node
+
+
+@rule("KERN001", "public kernel wrapper missing @_ledgered")
+def _kern001(ctx: FileContext) -> Iterator[Diagnostic]:
+    """Every public kernel in kernels/ops.py must be @_ledgered so each
+    dispatch lands in DISPATCH_COUNTS / the scoped query ledger — tests
+    and EXPLAIN ANALYZE key on those counts (DESIGN.md §13)."""
+    if not ctx.is_kernel_ops:
+        return
+    for fn in _public_kernels(ctx):
+        decorated = any(
+            isinstance(d, ast.Name) and d.id == "_ledgered" for d in fn.decorator_list
+        )
+        if not decorated:
+            yield ctx.diag(
+                "KERN001",
+                fn,
+                f"kernel wrapper '{fn.name}' is not @_ledgered: its "
+                "dispatches never reach DISPATCH_COUNTS",
+            )
+
+
+@rule("KERN002", "kernel wrapper missing a backend of the numpy/jax/pallas trio")
+def _kern002(ctx: FileContext) -> Iterator[Diagnostic]:
+    """Each public kernel dispatches the full trio: the numpy oracle
+    (vecops), the jnp reference, and the Pallas kernel. A wrapper that
+    drops one silently diverges from the validation matrix in
+    tests/test_kernels.py."""
+    if not ctx.is_kernel_ops:
+        return
+    for fn in _public_kernels(ctx):
+        strings = {
+            n.value
+            for n in ast.walk(fn)
+            if isinstance(n, ast.Constant) and isinstance(n.value, str)
+        }
+        uses_vecops = any(
+            isinstance(n, ast.Attribute)
+            and isinstance(n.value, ast.Name)
+            and n.value.id == "vecops"
+            for n in ast.walk(fn)
+        )
+        missing = [
+            be
+            for be, ok in (
+                ("numpy", "numpy" in strings or uses_vecops),
+                ("jax", "jax" in strings),
+                ("pallas", "pallas" in strings),
+            )
+            if not ok
+        ]
+        if missing:
+            yield ctx.diag(
+                "KERN002",
+                fn,
+                f"kernel wrapper '{fn.name}' does not dispatch the "
+                f"{'/'.join(missing)} backend(s) of the trio",
+            )
+
+
+# cross-file source cache for KERN003 (module path -> source text)
+_OPS_SOURCE_CACHE: Dict[Path, str] = {}
+
+
+@rule("KERN003", "Pallas kernel not wired into the ops.py dispatcher")
+def _kern003(ctx: FileContext) -> Iterator[Diagnostic]:
+    """Every ``*_pallas`` kernel defined under kernels/ must be referenced
+    by kernels/ops.py — an unwired kernel is dead code that silently drops
+    out of the backend-parity matrix."""
+    if not ctx.in_kernels or ctx.is_kernel_ops:
+        return
+    defs = [
+        n
+        for n in ctx.tree.body
+        if isinstance(n, ast.FunctionDef) and n.name.endswith("_pallas")
+    ]
+    if not defs:
+        return
+    ops_path = ctx.path.parent / "ops.py"
+    if ops_path not in _OPS_SOURCE_CACHE:
+        try:
+            _OPS_SOURCE_CACHE[ops_path] = ops_path.read_text()
+        except OSError:
+            _OPS_SOURCE_CACHE[ops_path] = ""
+    ops_src = _OPS_SOURCE_CACHE[ops_path]
+    if not ops_src:
+        return  # standalone kernel module (fixtures): nothing to wire into
+    for fn in defs:
+        if fn.name not in ops_src:
+            yield ctx.diag(
+                "KERN003",
+                fn,
+                f"'{fn.name}' is defined but never referenced by "
+                "kernels/ops.py — unreachable from the dispatcher",
+            )
+
+
+# ---------------------------------------------------------------------------
+# OpStats conventions
+# ---------------------------------------------------------------------------
+
+
+def _extra_stores(tree: ast.AST) -> Iterator[Tuple[ast.AST, str, ast.AST]]:
+    """(node, key, value) for every string-literal store into an OpStats
+    ``extra`` dict: subscript assignment or .update({...}) literal."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if (
+                    isinstance(t, ast.Subscript)
+                    and isinstance(t.value, ast.Attribute)
+                    and t.value.attr == "extra"
+                    and isinstance(t.slice, ast.Constant)
+                    and isinstance(t.slice.value, str)
+                ):
+                    yield node, t.slice.value, node.value
+        elif (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "update"
+            and isinstance(node.func.value, ast.Attribute)
+            and node.func.value.attr == "extra"
+            and node.args
+            and isinstance(node.args[0], ast.Dict)
+        ):
+            for k, v in zip(node.args[0].keys, node.args[0].values):
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    yield node, k.value, v
+
+
+@rule("STAT001", "OpStats extra key is not snake_case")
+def _stat001(ctx: FileContext) -> Iterator[Diagnostic]:
+    """``stats.extra`` keys feed EXPLAIN ANALYZE and the serving metrics
+    exporter verbatim; a camelCase or dashed key breaks every downstream
+    grep and dashboard convention."""
+    for node, key, _value in _extra_stores(ctx.tree):
+        if not _SNAKE.match(key):
+            yield ctx.diag(
+                "STAT001",
+                node,
+                f"extra key '{key}' is not snake_case",
+            )
+
+
+@rule("STAT002", "OpStats _ms/_bytes counter assigned a non-numeric value")
+def _stat002(ctx: FileContext) -> Iterator[Diagnostic]:
+    """Keys ending in ``_ms``/``_bytes`` are numeric counters by contract:
+    the profiler sums and formats them. A string value poisons the
+    aggregation one query later."""
+    for node, key, value in _extra_stores(ctx.tree):
+        if not key.endswith(("_ms", "_bytes")):
+            continue
+        is_stringy = (
+            (isinstance(value, ast.Constant) and isinstance(value.value, str))
+            or isinstance(value, ast.JoinedStr)
+            or (
+                isinstance(value, ast.Call)
+                and isinstance(value.func, ast.Name)
+                and value.func.id in ("str", "repr", "format")
+            )
+        )
+        if is_stringy:
+            yield ctx.diag(
+                "STAT002",
+                node,
+                f"counter '{key}' must stay numeric; assigning a string "
+                "breaks profiler aggregation",
+            )
+
+
+# ---------------------------------------------------------------------------
+# dtype discipline (kernels/ + vecops.py)
+# ---------------------------------------------------------------------------
+
+# constructor -> index of its positional dtype slot
+_DTYPE_CTORS = {"zeros": 1, "ones": 1, "empty": 1, "full": 2, "array": 1}
+
+
+@rule("DTYPE001", "un-dtyped numpy constructor on a kernel hot path")
+def _dtype001(ctx: FileContext) -> Iterator[Diagnostic]:
+    """In kernels/ and vecops.py a constructor without an explicit dtype
+    silently produces float64 (or a platform-default int), upcasting the
+    int32 data plane and doubling memory traffic on the hot path."""
+    if not (ctx.in_kernels or ctx.is_vecops):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call) or not isinstance(node.func, ast.Attribute):
+            continue
+        ctor = node.func.attr
+        if ctor not in _DTYPE_CTORS:
+            continue
+        mod = node.func.value
+        if not (isinstance(mod, ast.Name) and mod.id in ("np", "jnp", "numpy")):
+            continue
+        if any(kw.arg == "dtype" for kw in node.keywords):
+            continue
+        if len(node.args) > _DTYPE_CTORS[ctor]:
+            continue  # positional dtype slot filled
+        yield ctx.diag(
+            "DTYPE001",
+            node,
+            f"{mod.id}.{ctor}(...) without an explicit dtype defaults to "
+            "float64 on the kernel hot path",
+        )
+
+
+@rule("DTYPE002", "builtin float/int used as a dtype")
+def _dtype002(ctx: FileContext) -> Iterator[Diagnostic]:
+    """``dtype=float`` / ``astype(int)`` mean float64/platform-int — write
+    the numpy scalar type (np.float32, np.int32, ...) so the width is a
+    reviewed decision, not an accident."""
+    if not (ctx.in_kernels or ctx.is_vecops):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if (
+                kw.arg == "dtype"
+                and isinstance(kw.value, ast.Name)
+                and kw.value.id in ("float", "int")
+            ):
+                yield ctx.diag(
+                    "DTYPE002",
+                    node,
+                    f"dtype={kw.value.id} is the 64-bit builtin; name the "
+                    "numpy width explicitly",
+                )
+        if (
+            isinstance(node.func, ast.Attribute)
+            and node.func.attr == "astype"
+            and node.args
+            and isinstance(node.args[0], ast.Name)
+            and node.args[0].id in ("float", "int")
+        ):
+            yield ctx.diag(
+                "DTYPE002",
+                node,
+                f"astype({node.args[0].id}) upcasts to the 64-bit builtin; "
+                "name the numpy width explicitly",
+            )
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def iter_py_files(paths: Iterable[Path]) -> Iterator[Path]:
+    for p in paths:
+        p = Path(p)
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if any(part in DEFAULT_EXCLUDES for part in f.parts):
+                    continue
+                yield f
+
+
+def lint_file(
+    path: Path, select: Optional[Iterable[str]] = None
+) -> List[Diagnostic]:
+    """All diagnostics for one file (fixture tests call this directly —
+    it does not apply the default-walk excludes)."""
+    path = Path(path)
+    try:
+        source = path.read_text()
+    except (OSError, UnicodeDecodeError) as e:
+        return [Diagnostic("PARSE", path.as_posix(), 1, f"unreadable: {e}")]
+    try:
+        ctx = FileContext(path, source)
+    except SyntaxError as e:
+        return [
+            Diagnostic("PARSE", path.as_posix(), e.lineno or 1, f"syntax error: {e.msg}")
+        ]
+    wanted = set(select) if select else set(RULES)
+    out: List[Diagnostic] = []
+    for rule_id in sorted(wanted):
+        r = RULES.get(rule_id)
+        if r is None:
+            continue
+        for d in r.check(ctx):
+            if not ctx.suppressed(d.rule, d.line):
+                out.append(d)
+    out.sort(key=lambda d: (d.path, d.line, d.rule))
+    return out
+
+
+def lint_paths(
+    paths: Iterable[Path], select: Optional[Iterable[str]] = None
+) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    for f in iter_py_files(paths):
+        out.extend(lint_file(f, select=select))
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="barqlint: static invariant checks for the batch engine",
+    )
+    ap.add_argument("paths", nargs="*", help="files or directories to lint")
+    ap.add_argument(
+        "--select",
+        help="comma-separated rule ids to run (default: all)",
+        default=None,
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog and exit"
+    )
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        for rid in sorted(RULES):
+            print(f"{rid}  {RULES[rid].summary}")
+        return 0
+    if not args.paths:
+        ap.error("the following arguments are required: paths")
+    select = args.select.split(",") if args.select else None
+    diags = lint_paths([Path(p) for p in args.paths], select=select)
+    for d in diags:
+        print(d.render())
+    n_files = len(list(iter_py_files([Path(p) for p in args.paths])))
+    print(
+        f"barqlint: {len(diags)} finding(s) in {n_files} file(s), "
+        f"{len(RULES)} rules"
+    )
+    return 1 if diags else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

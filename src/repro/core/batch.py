@@ -26,6 +26,13 @@ import numpy as np
 # unbound inside an aligned batch. Valid dictionary IDs are >= 0.
 NULL_ID = np.int32(-1)
 
+# Pool-sanitizer hook point (DESIGN.md §16). None until the first
+# SanitizingBatchPool is constructed (repro.analysis.sanitize installs its
+# tracker here); every lifecycle hook below is a single ``is None`` test
+# when sanitizing is off, and batches of plain pools stay untracked even
+# when it is on.
+_SANITIZER = None
+
 # Power-of-two capacity buckets (paper: adaptive batch size <= 512; we keep
 # the same spirit with a bounded set of compiled shapes, DESIGN.md §2).
 MIN_BATCH = 32
@@ -64,6 +71,9 @@ class BatchPool:
         self.allocations = 0
         self.reuses = 0
         self.releases = 0
+        # fresh buffers permanently retired: returned over a full stack, or
+        # swept by drain(). Feeds the counters() conservation law.
+        self.dropped = 0
         self.bytes_allocated = 0
         self.bytes_copied = 0
 
@@ -85,9 +95,12 @@ class BatchPool:
         stack = self._free.setdefault(key, [])
         if len(stack) < self.max_per_bucket:
             stack.append((cols, mask))
+        else:
+            self.dropped += 1
 
     def drain(self) -> None:
         """Drop every recycled buffer (end-of-query teardown)."""
+        self.dropped += sum(len(s) for s in self._free.values())
         self._free.clear()
 
     def stats(self) -> Dict[str, int]:
@@ -97,6 +110,21 @@ class BatchPool:
             "releases": self.releases,
             "bytes_allocated": self.bytes_allocated,
             "bytes_copied": self.bytes_copied,
+        }
+
+    def counters(self) -> Dict[str, int]:
+        """Buffer conservation snapshot (DESIGN.md §16): every fresh buffer
+        is live (owned by a batch), pooled (in a free stack), or retired
+        — so after a query fully drains its operators,
+        ``allocs == releases + pooled`` and ``live == 0``."""
+        pooled = sum(len(s) for s in self._free.values())
+        return {
+            "allocs": self.allocations,
+            "releases": self.dropped,
+            "pooled": pooled,
+            "live": self.allocations - self.dropped - pooled,
+            "acquires": self.allocations + self.reuses,
+            "recycles": self.releases,
         }
 
 
@@ -153,7 +181,10 @@ class ColumnBatch:
             data[i, :n] = np.asarray(c, dtype=np.int32)
         if pool is not None and n < cap:
             data[:, n:] = NULL_ID  # deterministic padding on recycled memory
-        return ColumnBatch(var_ids, data, mask, n, sorted_by, pool)
+        b = ColumnBatch(var_ids, data, mask, n, sorted_by, pool)
+        if pool is not None and _SANITIZER is not None:
+            _SANITIZER.on_create(b)
+        return b
 
     @staticmethod
     def alloc(
@@ -173,7 +204,10 @@ class ColumnBatch:
         else:
             data = np.full((len(var_ids), capacity), NULL_ID, dtype=np.int32)
             mask = np.zeros(capacity, dtype=bool)
-        return ColumnBatch(var_ids, data, mask, 0, sorted_by, pool)
+        b = ColumnBatch(var_ids, data, mask, 0, sorted_by, pool)
+        if pool is not None and _SANITIZER is not None:
+            _SANITIZER.on_create(b)
+        return b
 
     @staticmethod
     def empty(var_ids: Sequence[int], capacity: int = MIN_BATCH) -> "ColumnBatch":
@@ -188,7 +222,22 @@ class ColumnBatch:
         unpooled batches. The caller must not touch columns/mask after."""
         pool, self.pool = self.pool, None
         if pool is not None:
-            pool.release(self.columns, self.mask)
+            if _SANITIZER is not None:
+                _SANITIZER.on_release(self)
+            if getattr(pool, "_sanitized", False):
+                # only [:, :n_rows] ever held exposed data; poisoning just
+                # that region keeps the release cost proportional to use
+                pool.release(self.columns, self.mask, used=self.n_rows)
+            else:
+                pool.release(self.columns, self.mask)
+
+    def _guard(self) -> None:
+        """Use-after-release tripwire: raises SanitizeError when the
+        sanitizer is installed and this batch's buffers were released or
+        MOVEd. A single global ``is None`` test otherwise; the tombstone
+        probe is inlined so tracked-but-live batches stay cheap."""
+        if _SANITIZER is not None and self.__dict__.get("_san_state") is not None:
+            _SANITIZER.on_access(self)
 
     # -- accessors ---------------------------------------------------------
 
@@ -198,6 +247,7 @@ class ColumnBatch:
 
     @property
     def n_active(self) -> int:
+        self._guard()
         return int(self.mask[: self.n_rows].sum()) if self.n_rows else 0
 
     def col_index(self, var: int) -> int:
@@ -205,10 +255,12 @@ class ColumnBatch:
 
     def column(self, var: int) -> np.ndarray:
         """Raw (uncompacted) column including inactive rows."""
+        self._guard()
         return self.columns[self.col_index(var), : self.n_rows]
 
     def selection_vector(self) -> np.ndarray:
         """The paper's SV: sorted dense indices of active rows."""
+        self._guard()
         return np.nonzero(self.mask[: self.n_rows])[0].astype(np.int32)
 
     def active_column(self, var: int) -> np.ndarray:
@@ -220,6 +272,7 @@ class ColumnBatch:
         """Drop inactive rows (materialization boundary). Buffer ownership
         moves to the compacted batch; when rows are actually dropped the
         source buffers are recycled (fancy indexing copied the data out)."""
+        self._guard()
         if self.n_active == self.n_rows:
             return self
         sel = self.selection_vector()
@@ -239,20 +292,25 @@ class ColumnBatch:
         return ColumnBatch(keep, self.columns[idx], m, self.n_rows, sb)
 
     def with_mask(self, mask: np.ndarray) -> "ColumnBatch":
+        self._guard()
         if self.pool is not None:
             # pooled batches are single-owner: narrow the mask in place and
             # MOVE buffer ownership to the derived batch (zero-copy)
             np.logical_and(self.mask, mask, out=self.mask)
             pool, self.pool = self.pool, None
-            return ColumnBatch(
+            out = ColumnBatch(
                 self.var_ids, self.columns, self.mask, self.n_rows, self.sorted_by, pool
             )
+            if _SANITIZER is not None:
+                _SANITIZER.on_move(self, out)
+            return out
         m = self.mask & mask
         return ColumnBatch(self.var_ids, self.columns, m, self.n_rows, self.sorted_by)
 
     def rows(self) -> Iterable[Dict[int, int]]:
         """Row-major view (the batch→row adapter uses this; copy-free per
         the paper §4.2 — values are read straight out of the columns)."""
+        self._guard()
         for r in range(self.n_rows):
             if self.mask[r]:
                 yield {
@@ -263,6 +321,7 @@ class ColumnBatch:
 
     def to_rows_array(self) -> np.ndarray:
         """Active rows as (n_active, n_vars) int32 — for tests/oracles."""
+        self._guard()
         sel = self.selection_vector()
         return self.columns[:, sel].T.copy()
 

@@ -17,6 +17,7 @@ execute → decode (the pipeline of Fig. 2).
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -58,6 +59,16 @@ from repro.core.stats import GraphStats
 from repro.core.storage import QuadStore
 
 AnyOp = Union[BatchOperator, LOP.RowOperator]
+
+
+def _make_pool(cfg: EngineConfig) -> BatchPool:
+    """The engine's buffer arena; under ``cfg.sanitize`` a shadow-tracked
+    one that poisons releases and attributes leaks (DESIGN.md §16)."""
+    if cfg.sanitize:
+        from repro.analysis.sanitize import SanitizingBatchPool
+
+        return SanitizingBatchPool(cfg.pool_max_per_bucket)
+    return BatchPool(cfg.pool_max_per_bucket)
 
 
 def _planner_program(p):
@@ -113,6 +124,18 @@ class EngineConfig:
     # merge joins' sort-vs-hash choice to runtime (post-drain misestimate
     # check); "off" keeps the planner's static pick
     adaptive_join: str = "off"
+    # correctness tooling (DESIGN.md §16). verify_plans runs the
+    # PlanVerifier's structural invariant checks on every planned query;
+    # sanitize wraps the buffer arena in shadow ownership tracking
+    # (poisoned releases, use-after-release / double-release / leak
+    # detection). Both default from the environment so CI can run the
+    # whole suite hardened without touching call sites.
+    verify_plans: bool = dataclasses.field(
+        default_factory=lambda: os.environ.get("BARQ_VERIFY_PLANS", "") == "1"
+    )
+    sanitize: bool = dataclasses.field(
+        default_factory=lambda: os.environ.get("BARQ_SANITIZE", "") == "1"
+    )
 
 
 class Translator:
@@ -124,9 +147,7 @@ class Translator:
         # standalone Translators keep making their own
         self.pool: Optional[BatchPool] = None
         if cfg.pool_buffers and cfg.engine != "legacy":
-            self.pool = pool if pool is not None else BatchPool(
-                cfg.pool_max_per_bucket
-            )
+            self.pool = pool if pool is not None else _make_pool(cfg)
         # SIP runtime handles, keyed by annotation sid: consuming leaves
         # and exporting joins resolve to the same SipFilter object. Fresh
         # per Translator, so a plan reused through the server's plan cache
@@ -663,7 +684,7 @@ class Engine:
         # Engine's queries so repeated traffic skips cold-start allocations.
         # Per-query attribution comes from pool_base snapshots, not resets.
         self.pool: Optional[BatchPool] = (
-            BatchPool(self.cfg.pool_max_per_bucket)
+            _make_pool(self.cfg)
             if self.cfg.pool_buffers and self.cfg.engine != "legacy"
             else None
         )
@@ -689,7 +710,14 @@ class Engine:
         return parse_query(text)
 
     def plan(self, node: A.PlanNode) -> PL.Phys:
-        return self.planner.plan(node)
+        phys = self.planner.plan(node)
+        if self.cfg.verify_plans:
+            # structural invariant checks (DESIGN.md §16): raises
+            # PlanInvariantError naming the node on a malformed plan
+            from repro.analysis.plan_verify import verify_plan
+
+            verify_plan(phys)
+        return phys
 
     def execute_plan(
         self, phys: PL.Phys, var_table: Optional[A.VarTable] = None,

@@ -71,6 +71,13 @@ class BatchToRow(RowOperator):
         self._batch = None
         self._i = 0
 
+    def _close(self) -> None:
+        # a query that stops early (LIMIT, error) tears down mid-batch:
+        # hand the buffered batch back to the arena
+        if self._batch is not None:
+            self._batch.release()
+            self._batch = None
+
 
 class RowToBatch(BatchOperator):
     def __init__(

@@ -12,6 +12,7 @@ from __future__ import annotations
 import time
 from typing import List, Optional, Tuple
 
+from repro.core import batch as _batch
 from repro.core.batch import ColumnBatch
 
 
@@ -67,9 +68,19 @@ class BatchOperator:
 
     def next_batch(self) -> Optional[ColumnBatch]:
         self.stats.next_calls += 1
+        san = _batch._SANITIZER
+        if san is not None:
+            # pool-sanitizer attribution scope (DESIGN.md §16): batches
+            # acquired while this operator runs carry its name, so
+            # leak / use-after-release reports name the allocating operator
+            san.push_op(self.stats.name)
         t0 = time.perf_counter()
-        b = self._next()
-        self.stats.wall_time += time.perf_counter() - t0
+        try:
+            b = self._next()
+        finally:
+            self.stats.wall_time += time.perf_counter() - t0
+            if san is not None:
+                san.pop_op()
         if b is not None:
             self.stats.batches += 1
             self.stats.results += b.n_active
@@ -142,22 +153,43 @@ class BatchOperator:
                 out.append(b)
 
 
+class CloseError(RuntimeError):
+    """One or more ``_close`` hooks raised during tree teardown. The walk
+    still visited every operator first; ``errors`` carries each failure as
+    (operator name, exception)."""
+
+    def __init__(self, errors) -> None:
+        self.errors = list(errors)
+        detail = "; ".join(
+            f"{name}: {type(e).__name__}: {e}" for name, e in self.errors
+        )
+        super().__init__(
+            f"{len(self.errors)} operator close() failure(s): {detail}"
+        )
+
+
 def close_tree(op) -> None:
     """Walk an operator tree (batch or row; duck-typed on ``children``) and
-    invoke every ``_close`` hook. Exceptions from one hook don't stop the
-    walk — a failed unlink must not leak the rest of the tree's spills."""
+    invoke every ``_close`` hook. An exception from one hook doesn't stop
+    the walk — a failed unlink must not leak the rest of the tree's spill
+    files — but it is not swallowed either: after every operator has been
+    visited, the collected failures re-raise as one ``CloseError``."""
     stack = [op]
+    errors = []
     while stack:
         o = stack.pop()
         cl = getattr(o, "_close", None)
         if cl is not None:
             try:
                 cl()
-            except Exception:
-                pass
+            except Exception as e:  # keep closing siblings first
+                errors.append((getattr(o, "stats", o).name
+                               if hasattr(o, "stats") else type(o).__name__, e))
         ch = getattr(o, "children", None)
         if ch is not None:
             try:
                 stack.extend(ch())
-            except Exception:
-                pass
+            except Exception as e:
+                errors.append((type(o).__name__, e))
+    if errors:
+        raise CloseError(errors)

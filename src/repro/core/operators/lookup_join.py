@@ -221,3 +221,10 @@ class LookupJoin(BatchOperator):
             self._pending[0].release()
         self._pending = None
         self._built = False
+
+    def _close(self) -> None:
+        # early teardown mid-expansion: the pending probe batch still owns
+        # pooled buffers
+        if self._pending is not None:
+            self._pending[0].release()
+            self._pending = None

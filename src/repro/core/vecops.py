@@ -403,20 +403,20 @@ def segment_reduce(
         run_keys, lengths, seg_ids = seg
     n_runs = len(run_keys)
     if n_runs == 0:
-        return run_keys, np.zeros(0)
+        return run_keys, np.zeros(0, dtype=np.float64)
     if func == "count":
         return run_keys, lengths.astype(np.float64)
     if seg_ids is None:
         seg_ids = np.repeat(np.arange(n_runs), lengths)
     assert values is not None
     if func == "sum":
-        out = np.zeros(n_runs)
+        out = np.zeros(n_runs, dtype=np.float64)
         np.add.at(out, seg_ids, values)
     elif func == "min":
-        out = np.full(n_runs, np.inf)
+        out = np.full(n_runs, np.inf, dtype=np.float64)
         np.minimum.at(out, seg_ids, values)
     elif func == "max":
-        out = np.full(n_runs, -np.inf)
+        out = np.full(n_runs, -np.inf, dtype=np.float64)
         np.maximum.at(out, seg_ids, values)
     else:
         raise ValueError(func)

@@ -271,7 +271,7 @@ def segment_reduce(keys, values, func: str, backend: Optional[str] = None,
     keys = np.asarray(keys)
     n = len(keys)
     if n == 0:
-        return keys.astype(np.int32), np.zeros(0)
+        return keys.astype(np.int32), np.zeros(0, dtype=np.float64)
     vals = (
         np.ones(n, dtype=np.float32)
         if func == "count" or values is None

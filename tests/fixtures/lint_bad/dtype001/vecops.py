@@ -1,0 +1,7 @@
+"""Seeded DTYPE001: un-dtyped numpy constructor on a kernel hot path."""
+
+import numpy as np
+
+
+def scratch(n):
+    return np.zeros(n)  # silently float64

@@ -1,0 +1,7 @@
+"""Seeded DTYPE002: builtin float used as a dtype."""
+
+import numpy as np
+
+
+def widen(xs):
+    return xs.astype(float)

@@ -1,0 +1,23 @@
+"""Seeded KERN001: public kernel wrapper without @_ledgered."""
+
+
+def segment_sum(values, seg_ids, backend="numpy"):
+    if backend == "numpy":
+        return _np_impl(values, seg_ids)
+    if backend == "jax":
+        return _jax_impl(values, seg_ids)
+    if backend == "pallas":
+        return _pallas_impl(values, seg_ids)
+    raise ValueError(backend)
+
+
+def _np_impl(values, seg_ids):
+    return values
+
+
+def _jax_impl(values, seg_ids):
+    return values
+
+
+def _pallas_impl(values, seg_ids):
+    return values

@@ -1,0 +1,22 @@
+"""Seeded KERN002: kernel wrapper that silently drops the pallas backend."""
+
+
+def _ledgered(fn):
+    return fn
+
+
+@_ledgered
+def run_filter(values, backend="numpy"):
+    if backend == "numpy":
+        return _np_impl(values)
+    if backend == "jax":
+        return _jax_impl(values)
+    raise ValueError(backend)  # the pallas leg of the trio is missing
+
+
+def _np_impl(values):
+    return values
+
+
+def _jax_impl(values):
+    return values

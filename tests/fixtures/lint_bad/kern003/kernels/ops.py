@@ -1,0 +1,3 @@
+"""Dispatcher stub for the KERN003 fixture: wires in nothing."""
+
+REGISTRY = {}

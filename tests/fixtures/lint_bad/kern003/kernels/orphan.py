@@ -1,0 +1,5 @@
+"""Seeded KERN003: a *_pallas kernel the sibling ops.py never references."""
+
+
+def orphan_copy_pallas(x_ref, o_ref):
+    o_ref[...] = x_ref[...]

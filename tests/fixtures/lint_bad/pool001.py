@@ -1,0 +1,6 @@
+"""Seeded POOL001: acquired batch bound to a name that is never consumed."""
+
+
+def leaky(pool, var_ids, cap, ColumnBatch):
+    b = ColumnBatch.alloc(var_ids, cap, pool)
+    return cap  # 'b' never released / returned / stored -> buffers leak

@@ -1,0 +1,12 @@
+"""Seeded POOL002: operator parks acquired batches on self, no _close."""
+
+
+class BufferingOp:
+    def __init__(self, child):
+        self.child = child
+        self._stash = None
+
+    def _next(self):
+        b = self.child.next_batch()
+        self._stash = b  # pooled buffers held across calls
+        return None

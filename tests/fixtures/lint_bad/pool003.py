@@ -1,0 +1,9 @@
+"""Seeded POOL003: non-idempotent close — unguarded unlink, no clear."""
+
+
+class SpillingOp:
+    def __init__(self, spill_path):
+        self.spill = spill_path
+
+    def _close(self):
+        self.spill.unlink()  # second close_tree visit raises FileNotFoundError

@@ -1,0 +1,6 @@
+"""Seeded STAT001: camelCase OpStats extra key."""
+
+
+class FrontierOp:
+    def record(self, rounds):
+        self.stats.extra["FrontierRounds"] = rounds

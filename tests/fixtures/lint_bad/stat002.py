@@ -1,0 +1,6 @@
+"""Seeded STAT002: a _ms counter assigned a formatted string."""
+
+
+class TimedOp:
+    def record(self, elapsed):
+        self.stats.extra["decode_ms"] = f"{elapsed * 1e3:.1f}"

@@ -1,0 +1,7 @@
+"""A genuine POOL001 violation silenced by a suppression comment — the
+pinning test asserts barqlint reports nothing here."""
+
+
+def leaky_but_known(pool, var_ids, cap, ColumnBatch):
+    b = ColumnBatch.alloc(var_ids, cap, pool)  # barqlint: disable=POOL001
+    return cap

@@ -1,0 +1,534 @@
+"""Correctness tooling (DESIGN.md §16): barqlint rule pinning, PlanVerifier
+structural checks, the pool sanitizer's ownership tracking, and the
+close_tree aggregation contract.
+
+The lint_bad fixtures each seed exactly one violation; pinning them here is
+what keeps every rule honest — a rule that stops firing on its fixture is a
+rule that silently stopped protecting the tree."""
+
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.analysis.lint import (
+    DEFAULT_EXCLUDES,
+    RULES,
+    iter_py_files,
+    lint_file,
+    lint_paths,
+)
+from repro.analysis.plan_verify import PlanInvariantError, verify_plan
+from repro.analysis.sanitize import (
+    POISON,
+    PoolSanitizer,
+    SanitizeError,
+    SanitizingBatchPool,
+)
+from repro.core import Engine, EngineConfig, QuadStore
+from repro.core import planner as PL
+from repro.core.batch import BatchPool, ColumnBatch
+from repro.core.operators.base import CloseError, OpStats, close_tree
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "fixtures" / "lint_bad"
+
+# ---------------------------------------------------------------------------
+# barqlint: rule pinning on the seeded-violation corpus
+# ---------------------------------------------------------------------------
+
+PINNED = {
+    "POOL001": FIXTURES / "pool001.py",
+    "POOL002": FIXTURES / "pool002.py",
+    "POOL003": FIXTURES / "pool003.py",
+    "KERN001": FIXTURES / "kern001" / "kernels" / "ops.py",
+    "KERN002": FIXTURES / "kern002" / "kernels" / "ops.py",
+    "KERN003": FIXTURES / "kern003" / "kernels" / "orphan.py",
+    "STAT001": FIXTURES / "stat001.py",
+    "STAT002": FIXTURES / "stat002.py",
+    "DTYPE001": FIXTURES / "dtype001" / "vecops.py",
+    "DTYPE002": FIXTURES / "dtype002" / "vecops.py",
+}
+
+
+def test_every_rule_has_a_fixture():
+    assert set(PINNED) == set(RULES)
+
+
+@pytest.mark.parametrize("rule_id", sorted(PINNED))
+def test_rule_fires_on_exactly_its_fixture(rule_id):
+    diags = lint_file(PINNED[rule_id])
+    assert diags, f"{rule_id} did not fire on its fixture"
+    assert {d.rule for d in diags} == {rule_id}, [d.render() for d in diags]
+
+
+def test_suppression_comment_silences_finding():
+    assert lint_file(FIXTURES / "suppressed.py") == []
+
+
+def test_diagnostic_render_format():
+    d = lint_file(PINNED["POOL001"])[0]
+    text = d.render()
+    assert text.startswith(d.path)
+    assert f":{d.line}: POOL001 " in text
+
+
+def test_default_walk_excludes_fixture_corpus():
+    walked = set(iter_py_files([REPO / "tests"]))
+    assert not any("lint_bad" in f.parts for f in walked)
+    # but explicit files are always linted, exclusion or not
+    assert lint_file(PINNED["POOL001"])
+
+
+def test_merged_tree_lints_clean_and_fast():
+    t0 = time.perf_counter()
+    diags = lint_paths([REPO / "src"])
+    elapsed = time.perf_counter() - t0
+    assert diags == [], [d.render() for d in diags]
+    assert elapsed < 10.0, f"lint took {elapsed:.1f}s (budget 10s)"
+
+
+def test_select_narrows_rules():
+    diags = lint_file(PINNED["POOL001"], select=["STAT001"])
+    assert diags == []
+
+
+def test_cli_exit_status(capsys):
+    from repro.analysis.lint import main
+
+    assert main([str(REPO / "src")]) == 0
+    assert main([str(PINNED["POOL001"])]) == 1
+    out = capsys.readouterr().out
+    assert "POOL001" in out
+
+
+def test_default_excludes_constant():
+    assert "lint_bad" in DEFAULT_EXCLUDES
+
+
+# ---------------------------------------------------------------------------
+# PlanVerifier
+# ---------------------------------------------------------------------------
+
+
+def _plan(store, query, **cfg):
+    e = Engine(store, EngineConfig(engine="barq", **cfg))
+    node, _ = e.parse(query)
+    return e.planner.plan(node)
+
+
+def _find(plan, cls):
+    out = []
+
+    def walk(n):
+        if isinstance(n, cls):
+            out.append(n)
+        for fld in ("child", "left", "right", "probe", "build"):
+            c = getattr(n, fld, None)
+            if isinstance(c, PL.PhysNode):
+                walk(c)
+
+    walk(plan)
+    return out
+
+
+VERIFY_QUERIES = (
+    "SELECT ?a ?b ?c { ?a :knows ?b . ?b :knows ?c . FILTER(?a != ?c) }",
+    "SELECT ?a ?b ?t { ?a :knows ?b . OPTIONAL { ?b :interest ?t } }",
+    "SELECT ?a (COUNT(?b) AS ?n) { ?a :knows ?b } GROUP BY ?a",
+    "SELECT DISTINCT ?x { { ?x :knows ?y } UNION { ?x :interest ?t } }",
+    "SELECT ?a ?b { ?a :knows ?b } ORDER BY ?b LIMIT 5",
+)
+
+
+@pytest.mark.parametrize("strategy", [None, "hash", "merge"])
+def test_planner_output_verifies_clean(tiny_store, strategy):
+    for q in VERIFY_QUERIES:
+        plan = _plan(tiny_store, q, join_strategy=strategy)
+        assert verify_plan(plan, collect=True) == [], q
+
+
+def test_verify_flags_missing_fingerprint(tiny_store):
+    plan = _plan(tiny_store, "SELECT ?a ?b { ?a :knows ?b }")
+    plan.fp = ""
+    with pytest.raises(PlanInvariantError, match="V-FP"):
+        verify_plan(plan)
+
+
+def test_verify_flags_bad_estimate(tiny_store):
+    plan = _plan(tiny_store, "SELECT ?a ?b { ?a :knows ?b }")
+    plan.est_rows = -5.0
+    diags = verify_plan(plan, collect=True)
+    assert any(d.check == "V-FP" and "est_rows" in d.message for d in diags)
+
+
+# a chain long enough that the planner reliably picks nested merge joins
+# (2-hop chains on tiny stores cost out to lookup joins instead)
+MERGE_CHAIN = "SELECT ?a ?d { ?a :knows ?b . ?b :knows ?c . ?c :knows ?d }"
+
+
+def _merge_plan(store):
+    plan = _plan(store, MERGE_CHAIN, join_strategy="merge")
+    joins = _find(plan, PL.PMergeJoin)
+    assert joins, "planner no longer picks merge joins for the chain query"
+    return plan, joins
+
+
+def test_verify_flags_unbound_join_var(tiny_store):
+    plan, joins = _merge_plan(tiny_store)
+    joins[0].var = 9999  # not produced by either side
+    diags = verify_plan(plan, collect=True)
+    assert any(d.check == "V-SCHEMA" for d in diags), diags
+
+
+def test_verify_flags_unsorted_merge_input(tiny_store):
+    plan, joins = _merge_plan(tiny_store)
+    # break the sortedness claim on whichever shape the planner chose
+    mj = joins[0]
+    for side in ("left", "right"):
+        sub = getattr(mj, side)
+        if isinstance(sub, PL.PSort):
+            setattr(mj, side, sub.child)
+        elif isinstance(sub, PL.PScan):
+            sub.sort_var = None
+    diags = verify_plan(plan, collect=True)
+    assert any(d.check == "V-SORT" for d in diags), diags
+
+
+def test_verify_flags_bogus_grace_mark(tiny_store):
+    plan = _plan(
+        tiny_store,
+        "SELECT ?a ?c { ?a :knows ?b . ?b :knows ?c }",
+        join_strategy="hash",
+    )
+    (hj,) = _find(plan, PL.PHashJoin)[:1]
+    hj.grace = True
+    hj.grace_parts = 1  # grace with a degenerate fan-out
+    diags = verify_plan(plan, collect=True)
+    assert any(d.check == "V-GRACE" for d in diags)
+
+
+def test_verify_flags_streaming_distinct_over_unsorted(tiny_store):
+    plan = _plan(tiny_store, "SELECT DISTINCT ?a { ?a :knows ?b }")
+    dist = _find(plan, PL.PDistinct)
+    if not dist:
+        pytest.skip("planner produced no PDistinct for this shape")
+    d0 = dist[0]
+    child_vars = PL.phys_vars(d0.child)
+    d0.streaming_var = child_vars[-1]
+    if PL.phys_sorted_by(d0.child) == d0.streaming_var:
+        d0.child = PL.PSort(child=d0.child, var=child_vars[0])
+        d0.child.fp, d0.child.est_rows = "synthetic", 1.0
+        d0.streaming_var = child_vars[-1] if child_vars[-1] != child_vars[0] else child_vars[0] + 10**6
+    diags = verify_plan(plan, collect=True)
+    assert any(d.check in ("V-SORT", "V-SCHEMA") for d in diags), diags
+
+
+def test_verify_flags_adaptive_under_order_consumer(tiny_store):
+    plan, joins = _merge_plan(tiny_store)
+    inner = [j for j in joins if j is not joins[0]]
+    if not inner:
+        pytest.skip("planner did not nest merge joins for this shape")
+    # the planner separates nested merge joins with a PSort, which resets
+    # the order requirement — strip it so the inner join's output order
+    # feeds the outer join directly, then claim re-strategy eligibility
+    outer = joins[0]
+    for side in ("left", "right"):
+        sub = getattr(outer, side)
+        if isinstance(sub, PL.PSort) and sub.child is inner[0]:
+            setattr(outer, side, inner[0])
+    inner[0].adaptive_ok = True
+    diags = verify_plan(plan, collect=True)
+    assert any(d.check == "V-ADAPTIVE" for d in diags), diags
+
+
+def test_verify_flags_orphan_sip_consumer(tiny_store):
+    plan = _plan(tiny_store, "SELECT ?a ?b { ?a :knows ?b }")
+    scans = _find(plan, PL.PScan)
+    scans[0].sip = (PL.PSipFilter(var=scans[0].pattern.vars()[0],
+                                  sid=999, source="hash_build"),)
+    with pytest.raises(PlanInvariantError, match="V-SIP"):
+        verify_plan(plan)
+
+
+def test_verify_error_names_offending_node(tiny_store):
+    plan = _plan(tiny_store, "SELECT ?a ?b { ?a :knows ?b }")
+    plan.fp = ""
+    with pytest.raises(PlanInvariantError) as ei:
+        verify_plan(plan)
+    assert type(plan).__name__ in str(ei.value)
+
+
+def test_engine_runs_verifier_when_configured(tiny_store):
+    e = Engine(tiny_store, EngineConfig(engine="barq", verify_plans=True))
+    for q in VERIFY_QUERIES:
+        e.execute(q)  # must not raise
+
+
+def test_env_var_enables_verifier(monkeypatch):
+    monkeypatch.setenv("BARQ_VERIFY_PLANS", "1")
+    assert EngineConfig().verify_plans
+    monkeypatch.setenv("BARQ_VERIFY_PLANS", "")
+    assert not EngineConfig().verify_plans
+
+
+# ---------------------------------------------------------------------------
+# pool sanitizer
+# ---------------------------------------------------------------------------
+
+
+def _san_pool():
+    # a private tracker per test: installation is global, so fresh state
+    # here keeps tests order-independent
+    return SanitizingBatchPool(sanitizer=PoolSanitizer())
+
+
+def test_sanitizer_poisons_released_region():
+    pool = _san_pool()
+    b = ColumnBatch.from_columns((0,), [np.arange(8, dtype=np.int32)], pool=pool)
+    cols = b.columns
+    b.release()
+    assert (cols[0, :8] == POISON).all()
+
+
+def test_sanitizer_use_after_release_names_operator_and_site():
+    pool = _san_pool()
+    pool.sanitizer.push_op("HashJoinBuild")
+    b = ColumnBatch.from_columns((0, 1), [np.arange(4)] * 2, pool=pool)
+    pool.sanitizer.pop_op()
+    b.release()
+    with pytest.raises(SanitizeError) as ei:
+        b.column(0)
+    msg = str(ei.value)
+    assert "use-after-released" in msg
+    assert "HashJoinBuild" in msg
+    assert "test_analysis.py:" in msg  # creation site
+    assert pool.sanitizer.use_after_release_errors == 1
+
+
+def test_sanitizer_use_after_move():
+    pool = _san_pool()
+    b = ColumnBatch.from_columns((0,), [np.arange(6, dtype=np.int32)], pool=pool)
+    m = np.zeros(b.capacity, dtype=bool)
+    m[:3] = True
+    b2 = b.with_mask(m)  # MOVE: b2 now owns the buffers
+    with pytest.raises(SanitizeError, match="use-after-moved"):
+        b.n_active
+    assert b2.n_active == 3  # the new owner is untouched
+    b2.release()
+
+
+def test_sanitizer_double_release_at_pool_level():
+    pool = _san_pool()
+    cols, mask = pool.acquire(2, 32)
+    pool.release(cols, mask)
+    with pytest.raises(SanitizeError, match="double-release"):
+        pool.release(cols, mask)
+    assert pool.sanitizer.double_release_errors == 1
+
+
+def test_batch_release_stays_idempotent_under_sanitizer():
+    pool = _san_pool()
+    b = ColumnBatch.from_columns((0,), [np.arange(4)], pool=pool)
+    b.release()
+    b.release()  # batch-level release is contractually idempotent: no-op
+
+
+def test_sanitizer_reports_leak_at_drain():
+    pool = _san_pool()
+    b = ColumnBatch.from_columns((0,), [np.arange(4)], pool=pool)
+    with pytest.raises(SanitizeError, match="leaked"):
+        pool.drain()
+    assert len(pool.leaks()) == 1
+    b.release()
+    assert pool.leaks() == []
+    pool.drain()  # clean now
+
+
+def test_sanitizer_ignores_plain_pool_batches():
+    _san_pool()  # installs the global hook
+    plain = BatchPool()
+    b = ColumnBatch.from_columns((0,), [np.arange(4)], pool=plain)
+    b.release()
+    b.column(0)  # released, but untracked: plain pools keep seed semantics
+
+
+def test_counters_conservation_law():
+    pool = BatchPool(max_per_bucket=1)
+    batches = [ColumnBatch.alloc((0,), 32, pool) for _ in range(3)]
+    c = pool.counters()
+    assert c["live"] == 3 and c["allocs"] == 3
+    for b in batches:
+        b.release()
+    c = pool.counters()
+    # one pooled (bucket cap 1), two retired; nothing live
+    assert c["live"] == 0
+    assert c["allocs"] == c["releases"] + c["pooled"]
+    pool.drain()
+    c = pool.counters()
+    assert c["pooled"] == 0 and c["allocs"] == c["releases"]
+
+
+# ---------------------------------------------------------------------------
+# close_tree: aggregated teardown errors (the raising-close satellite)
+# ---------------------------------------------------------------------------
+
+
+class _FakeOp:
+    def __init__(self, name, children=(), raise_on_close=False):
+        self.stats = OpStats(name)
+        self._children = list(children)
+        self.closed = False
+        self._raise = raise_on_close
+
+    def children(self):
+        return self._children
+
+    def _close(self):
+        self.closed = True
+        if self._raise:
+            raise RuntimeError(f"boom:{self.stats.name}")
+
+
+def test_close_tree_survives_raising_close():
+    a = _FakeOp("a", raise_on_close=True)
+    b = _FakeOp("b")
+    c = _FakeOp("c", raise_on_close=True)
+    root = _FakeOp("root", children=[a, b, c])
+    with pytest.raises(CloseError) as ei:
+        close_tree(root)
+    # every operator was still closed — no spill leaks behind the error
+    assert all(op.closed for op in (root, a, b, c))
+    err = ei.value
+    assert len(err.errors) == 2
+    assert {name for name, _ in err.errors} == {"a", "c"}
+    assert "boom:a" in str(err) or "boom:c" in str(err)
+
+
+def test_close_tree_quiet_on_clean_tree():
+    leaf = _FakeOp("leaf")
+    root = _FakeOp("root", children=[leaf])
+    close_tree(root)
+    assert root.closed and leaf.closed
+
+
+# ---------------------------------------------------------------------------
+# engine-level: hardened execution equivalence + overhead budget
+# ---------------------------------------------------------------------------
+
+
+def _rows(store, query, **cfg):
+    e = Engine(store, EngineConfig(engine="barq", **cfg))
+    r = e.execute(query)
+    return e, sorted(tuple(int(c) for c in row) for row in r.rows)
+
+
+def test_sanitize_off_matches_seed_semantics(tiny_store):
+    """sanitize=False must run the plain BatchPool and produce the same
+    ids as hardened execution — the no-observable-change contract."""
+    for q in VERIFY_QUERIES:
+        e_plain, plain = _rows(tiny_store, q, sanitize=False)
+        e_hard, hard = _rows(tiny_store, q, sanitize=True, verify_plans=True)
+        assert type(e_plain.pool) is BatchPool
+        assert type(e_hard.pool) is SanitizingBatchPool
+        assert plain == hard, q
+
+
+def test_hardened_execution_leaves_no_leaks(tiny_store):
+    e = Engine(tiny_store, EngineConfig(engine="barq", sanitize=True,
+                                        verify_plans=True))
+    for q in VERIFY_QUERIES:
+        e.execute(q)
+    assert e.pool.leaks() == []
+    c = e.pool.counters()
+    assert c["live"] == 0, c
+    assert c["allocs"] == c["releases"] + c["pooled"], c
+
+
+_graphs = st.builds(
+    lambda e1, e2, ages: (
+        sorted(set(e1)), sorted(set(e2)), {i: a for i, a in enumerate(ages)}
+    ),
+    st.lists(st.tuples(st.integers(0, 7), st.integers(0, 7)), max_size=60),
+    st.lists(st.tuples(st.integers(0, 7), st.integers(0, 3)), max_size=25),
+    st.lists(st.integers(10, 70), min_size=8, max_size=8),
+)
+
+
+def _property_store(g):
+    knows, interests, ages = g
+    store = QuadStore()
+    for s, o in knows:
+        store.add(f":p{s}", ":knows", f":p{o}")
+    for s, t in interests:
+        store.add(f":p{s}", ":interest", f":tag{t}")
+    for s, a in ages.items():
+        store.add(f":p{s}", ":age", int(a))
+    return store.build()
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(_graphs)
+def test_pool_balance_property(g):
+    """Buffer conservation over random graphs: after any query finishes,
+    every fresh allocation is either pooled or retired — nothing live,
+    nothing leaked — for every engine, sanitized or not."""
+    store = _property_store(g)
+    for engine in ("barq", "legacy", "mixed"):
+        for sanitize in (False, True):
+            e = Engine(store, EngineConfig(engine=engine, initial_batch=32,
+                                           max_batch=64, sanitize=sanitize))
+            for q in VERIFY_QUERIES:
+                e.execute(q)
+            if e.pool is None:
+                assert engine == "legacy"  # row engine: nothing pooled
+                continue
+            c = e.pool.counters()
+            assert c["live"] == 0, (engine, sanitize, c)
+            assert c["allocs"] == c["releases"] + c["pooled"], (engine, sanitize, c)
+            if sanitize:
+                assert e.pool.leaks() == [], (engine, sanitize)
+
+
+def _hash_join_store(n=200000):
+    rng = np.random.RandomState(7)
+    store = QuadStore()
+    ppl = [f":p{i}" for i in range(n)]
+    dst = rng.randint(n, size=n)
+    for i in range(n):
+        store.add(ppl[i], ":knows", ppl[int(dst[i])])
+    for i in range(0, n, 2):
+        store.add(ppl[i], ":age", int(20 + (i % 40)))
+    return store.build()
+
+
+def test_sanitizer_overhead_budget():
+    """Acceptance bar: < 15% on a 200k-row hash join. Interleaved min-of-N
+    — the only statistic robust to CI scheduler noise."""
+    store = _hash_join_store()
+    q = "SELECT ?a ?b ?t { ?a :knows ?b . ?b :age ?t }"
+    engines = {
+        s: Engine(store, EngineConfig(engine="barq", join_strategy="hash",
+                                      sanitize=s))
+        for s in (False, True)
+    }
+    rows = {}
+    for s, e in engines.items():
+        rows[s] = e.execute(q).n_rows
+        e.execute(q)  # warm the arena
+    assert rows[False] == rows[True] > 0
+    best = {False: float("inf"), True: float("inf")}
+    for _ in range(7):
+        for s, e in engines.items():
+            t0 = time.perf_counter()
+            e.execute(q)
+            best[s] = min(best[s], time.perf_counter() - t0)
+    overhead = best[True] / best[False] - 1.0
+    assert overhead < 0.15, (
+        f"sanitizer overhead {overhead:.1%} (plain {best[False]*1e3:.0f}ms, "
+        f"sanitized {best[True]*1e3:.0f}ms)"
+    )
